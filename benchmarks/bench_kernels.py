@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness + call cost;
+real-TPU wall times are the deployment measurement, see DESIGN.md §8)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    arr = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+
+    # flash attention
+    q, k, v = arr(1, 256, 4, 64), arr(1, 256, 2, 64), arr(1, 256, 2, 64)
+    t_kern = _time(lambda q, k, v: ops.flash_attention(q, k, v, True, 0, 0, None, 128, 128, True), q, k, v)
+    t_ref = _time(lambda q, k, v: ref.flash_attention_ref(q, k, v), q, k, v)
+    err = float(jnp.abs(
+        ops.flash_attention(q, k, v, True, 0, 0, None, 128, 128, True)
+        - ref.flash_attention_ref(q, k, v)).max())
+    print(f"flash_attention  256×256 GQA4/2 d64: interp {t_kern:9.0f}µs  ref {t_ref:7.0f}µs  err {err:.1e}")
+    rows.append(f"kernels/flash_attention,{t_kern:.0f},err={err:.1e}")
+
+    # decode attention
+    q1, kc, vc = arr(2, 8, 64), arr(2, 1024, 2, 64), arr(2, 1024, 2, 64)
+    valid = jnp.ones((2, 1024), bool)
+    t_kern = _time(lambda *a: ops.decode_attention(*a, block_k=256, interpret=True), q1, kc, vc, valid)
+    err = float(jnp.abs(ops.decode_attention(q1, kc, vc, valid, block_k=256, interpret=True)
+                        - ref.decode_attention_ref(q1, kc, vc, valid)).max())
+    print(f"decode_attention 1×1024-cache d64:  interp {t_kern:9.0f}µs  err {err:.1e}")
+    rows.append(f"kernels/decode_attention,{t_kern:.0f},err={err:.1e}")
+
+    # ssm scan
+    x, la = arr(1, 512, 4, 128), -jnp.abs(arr(1, 512, 4)) * 0.1
+    b, c = arr(1, 512, 4, 64) * 0.2, arr(1, 512, 4, 64) * 0.2
+    t_kern = _time(lambda *a: ops.ssm_scan(*a, chunk=128, interpret=True)[0], x, la, b, c)
+    y, h = ops.ssm_scan(x, la, b, c, chunk=128, interpret=True)
+    ye, he = ref.ssm_scan_ref(x, la, b, c)
+    err = float(jnp.abs(y - ye).max())
+    print(f"ssm_scan         512×H4 P128 N64:   interp {t_kern:9.0f}µs  err {err:.1e}")
+    rows.append(f"kernels/ssm_scan,{t_kern:.0f},err={err:.1e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper claim 4 (§IV.d.i): name-node RAM model (~200 B/object, 600 B/avg
+file, 100 M files → 60 GB) + client-request saturation (70% time share) +
+the sharded-namespace beyond-paper fix."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.namespace import BYTES_PER_OBJECT, Namespace, ShardedNamespace
+
+
+def main() -> list[str]:
+    rows = []
+    print("name-node RAM requirement (paper model, 2 blocks/avg file):")
+    for files in (1e6, 10e6, 100e6, 1e9):
+        need = Namespace.ram_needed(int(files), blocks_per_file=2.0)
+        print(f"  {files/1e6:7.0f}M files → {need/2**30:8.1f} GiB ({need/1e9:.0f} GB)")
+    rows.append(f"namespace/ram-100M-files,0,GB={Namespace.ram_needed(100_000_000, 2.0)/1e9:.0f}")
+
+    # create-throughput measurement (metadata ops on the single server)
+    ns = Namespace(ram_bytes=64 << 30)
+    n = 20_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        ns.create_file(f"f{i}", nbytes=200 << 20, block_size=128 << 20)
+    dt = time.perf_counter() - t0
+    rate = n / dt
+    per_file = ns.memory_bytes() / ns.objects * (ns.objects / n)
+    print(f"\ncreate rate: {rate:,.0f} files/s; bytes/file={ns.memory_bytes()/n:.0f} "
+          f"(paper: 600)")
+    rows.append(f"namespace/create,{1e6/rate:.1f},files_per_s={rate:.0f};bytes_per_file={ns.memory_bytes()/n:.0f}")
+
+    print("\nclient-request ceiling (ops_per_s=120k):")
+    for load in (0.0, 0.1, 0.3):
+        print(f"  internal load {load:.0%} → {ns.max_client_rps(load):,.0f} rps")
+    rows.append(f"namespace/client-ceiling,0,rps={ns.max_client_rps(0.0):.0f}")
+
+    print("\nsharded namespace scaling (beyond-paper):")
+    base = Namespace().max_client_rps()
+    for shards in (1, 4, 16, 64):
+        sh = ShardedNamespace(shards)
+        for i in range(2000):
+            sh.create_file(f"s{shards}/f{i}", 64 << 20, 128 << 20)
+        print(f"  {shards:3d} shards → {sh.max_client_rps():12,.0f} rps "
+              f"(imbalance {sh.imbalance():.2f}) → {sh.max_client_rps()/base:.0f}× single")
+        rows.append(f"namespace/sharded-{shards},0,rps={sh.max_client_rps():.0f};imb={sh.imbalance():.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper claim 2 (§IV.b.ii): placing data ∝ computing capacity minimizes
+cross-node movement and step time vs the uniform (homogeneity-assuming)
+placement. Static assignment analysis + full event-sim + het-DP schedule."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.placement import (
+    Grain,
+    het_accumulation_schedule,
+    locality_aware_assignment,
+    plan_placement,
+)
+from repro.core.simulator import SimCluster, SimWorker
+from repro.core.topology import Topology
+
+
+def main() -> list[str]:
+    rows = []
+    topo = Topology(num_pods=2, nodes_per_pod=8, in_pod_bw=50e9, cross_pod_bw=2e9)
+    workers = [SimWorker(loc, 1.0 if loc.pod == 0 else 1.0 / 3.0) for loc in topo.workers()]
+    caps = [w.rate for w in workers]
+    grains = [Grain(g, nbytes=2 << 30, work=20.0) for g in range(240)]
+
+    print(f"{'placement':14s} {'moved_GB':>9s} {'cross_GB':>9s} {'est_makespan':>12s} "
+          f"{'sim_makespan':>12s}")
+    for name, prop in (("uniform", False), ("proportional", True)):
+        t0 = time.perf_counter()
+        plan = plan_placement(grains, [w.loc for w in workers], caps, topo, 3, proportional=prop)
+        asg = locality_aware_assignment(grains, plan, [w.loc for w in workers], caps, topo)
+        sim = SimCluster(workers, topo).run_job(grains, plan, policy="off")
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name:14s} {asg.moved_bytes/1e9:9.1f} {asg.cross_pod_bytes/1e9:9.1f} "
+              f"{asg.makespan_s:12.1f} {sim.makespan:12.1f}")
+        rows.append(
+            f"placement/{name},{us:.0f},moved={asg.moved_bytes/1e9:.1f}GB"
+            f";sim_makespan={sim.makespan:.1f}s"
+        )
+
+    # het-DP accumulation schedule: the SPMD form of the same rule
+    print("\nhet-DP schedule (32 microbatches, pod speeds 4:2:1:1):")
+    caps4 = [4.0, 2.0, 1.0, 1.0]
+    het = het_accumulation_schedule(caps4, 32)
+    homo = het_accumulation_schedule([1.0] * 4, 32)
+    t_het = max(k / c for k, c in zip(het.microbatches, caps4))
+    t_homo = max(k / c for k, c in zip(homo.microbatches, caps4))
+    print(f"  proportional k_i={het.microbatches} → step {t_het:.2f} (virtual)")
+    print(f"  uniform      k_i={homo.microbatches} → step {t_homo:.2f} (virtual)")
+    print(f"  speedup {t_homo/t_het:.2f}×")
+    rows.append(f"placement/het-dp-schedule,0,speedup={t_homo/t_het:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Roofline report generator: reads results/dryrun/*.json → §Roofline table.
+
+Per (arch × shape) on the single-pod mesh: the three terms (compute /
+memory / collective, seconds), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+ratio, and the roofline fraction. ``--compare A B`` diffs two result dirs
+(before/after a §Perf hillclimb change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+COLS = (
+    "t_compute",
+    "t_memory",
+    "t_collective",
+    "dominant",
+    "useful_flop_ratio",
+    "roofline_fraction",
+)
+
+
+def load(dirpath: Path, mesh_tag: str = "singlepod") -> dict[tuple[str, str], dict]:
+    out = {}
+    for p in sorted(dirpath.glob(f"*__{mesh_tag}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            _backfill_analytic(rec)
+            out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def _backfill_analytic(rec: dict) -> None:
+    """Compute the analytic memory bracket for records saved before it
+    existed (pure function of cfg/shape/mesh — no recompile needed)."""
+    if "t_memory_analytic" in rec:
+        return
+    from repro.configs import SHAPES, get_config
+    from repro.roofline.extract import (
+        TPU_PEAK_FLOPS_BF16,
+        analytic_hbm_bytes,
+    )
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    tp = rec["mesh_shape"][-1]
+    ana = analytic_hbm_bytes(cfg, shape, rec["n_devices"], tp)
+    rec["t_memory_analytic"] = ana["t_memory_analytic"]
+    t_bound = max(rec["t_compute"], ana["t_memory_analytic"], rec["t_collective"])
+    if t_bound > 0:
+        rec["roofline_fraction_optimistic"] = (
+            rec["model_flops_per_dev"] / t_bound / TPU_PEAK_FLOPS_BF16
+        )
+
+
+def advise(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    d = rec["dominant"]
+    colls = rec.get("collectives", {})
+    if d == "collective":
+        top = max((k for k in colls if not k.startswith("n_")), key=lambda k: colls[k], default="?")
+        return f"dominant {top}: reshard to cut it (fewer FSDP gathers / bigger TP blocks)"
+    if d == "memory":
+        if rec["shape"].startswith("decode") or rec["shape"].startswith("long"):
+            return "decode streams the KV cache: shrink cache bytes (window/quantize) or batch more per pass"
+        return "reduce activation traffic: fused/flash attention, less remat recompute, bf16 residuals"
+    return "compute-bound: raise MFU via bigger matmul tiles / fewer masked-out FLOPs"
+
+
+def fmt_row(rec: dict) -> str:
+    return (
+        f"| {rec['arch']:24s} | {rec['shape']:11s} | {rec['t_compute']:10.3f} | "
+        f"{rec['t_memory']:9.3f} | {rec.get('t_memory_analytic', -1):9.3f} | "
+        f"{rec['t_collective']:11.4f} | {rec['dominant']:10s} | "
+        f"{rec['useful_flop_ratio']:5.2f} | {rec.get('roofline_fraction', -1):8.4f} | "
+        f"{rec.get('roofline_fraction_optimistic', -1):8.4f} |"
+    )
+
+
+HEADER = (
+    "| arch                     | shape       | t_compute(s) | t_mem(s) | t_mem_an | t_coll(s)   | dominant   | MF/HF | frac_pes | frac_opt |\n"
+    "|--------------------------|-------------|--------------|----------|----------|-------------|------------|-------|----------|----------|"
+)
+
+
+def report(dirpath: Path, mesh_tag: str) -> list[str]:
+    recs = load(dirpath, mesh_tag)
+    rows = []
+    print(HEADER)
+    for (arch, shape), rec in sorted(recs.items()):
+        print(fmt_row(rec))
+        rows.append(
+            f"roofline/{arch}/{shape},0,"
+            f"dom={rec['dominant']};frac={rec.get('roofline_fraction', -1):.4f}"
+            f";frac_opt={rec.get('roofline_fraction_optimistic', -1):.4f}"
+        )
+    print()
+    for (arch, shape), rec in sorted(recs.items()):
+        print(f"  {arch}×{shape}: {advise(rec)}")
+    return rows
+
+
+def compare(a: Path, b: Path, mesh_tag: str) -> None:
+    ra, rb = load(a, mesh_tag), load(b, mesh_tag)
+    print(f"{'cell':40s} {'term':12s} {'before':>12s} {'after':>12s} {'Δ':>8s}")
+    for key in sorted(set(ra) & set(rb)):
+        for term in ("t_compute", "t_memory", "t_collective"):
+            va, vb = ra[key][term], rb[key][term]
+            if va == 0:
+                continue
+            print(f"{key[0]+'×'+key[1]:40s} {term:12s} {va:12.4f} {vb:12.4f} "
+                  f"{(vb-va)/va:+8.1%}")
+
+
+def main(argv=None) -> list[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(RESULTS))
+    ap.add_argument("--mesh", default="singlepod")
+    ap.add_argument("--compare", nargs=2, metavar=("BEFORE", "AFTER"))
+    args = ap.parse_args(argv)
+    if args.compare:
+        compare(Path(args.compare[0]), Path(args.compare[1]), args.mesh)
+        return []
+    return report(Path(args.dir), args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one section per paper claim (DESIGN.md §6 index).
+
+Prints a ``name,us_per_call,derived`` CSV block at the end, per the repo
+convention. The dry-run/roofline section reads whatever cells exist under
+results/dryrun (produced by `python -m repro.launch.dryrun --all`).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_heartbeat,
+        bench_kernels,
+        bench_namespace,
+        bench_placement,
+        bench_replication,
+        bench_speculation,
+        bench_tuning,
+        roofline,
+    )
+
+    sections = [
+        ("claim1: speculative execution under heterogeneity", bench_speculation.main),
+        ("claim2: capacity-proportional placement", bench_placement.main),
+        ("claim3: replication vs striping", bench_replication.main),
+        ("claim4: namespace limits", bench_namespace.main),
+        ("claim5: task-size tuning", bench_tuning.main),
+        ("claim6: heartbeat throughput", bench_heartbeat.main),
+        ("kernels (interpret mode)", bench_kernels.main),
+        ("roofline (from dry-run artifacts)", roofline.main),
+    ]
+    csv_rows: list[str] = ["name,us_per_call,derived"]
+    failures = 0
+    for title, fn in sections:
+        print("\n" + "=" * 72)
+        print(f"== {title}")
+        print("=" * 72)
+        try:
+            rows = fn() or []
+            csv_rows.extend(rows)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+
+    print("\n" + "=" * 72)
+    print("== CSV summary")
+    print("=" * 72)
+    for r in csv_rows:
+        print(r)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

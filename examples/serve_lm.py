@@ -1,0 +1,23 @@
+"""Serving example: continuous-batched requests against a small model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    stats = serve.main([
+        "--arch", "qwen3-1.7b-smoke",
+        "--requests", "12",
+        "--batch", "4",
+        "--prompt-len", "32",
+        "--gen", "12",
+    ])
+    assert stats["completed"] == 12
+    print(f"[serve_lm] {stats['tokens_per_s']:.1f} tok/s, "
+          f"ttft {stats['mean_ttft_s']*1e3:.0f} ms ✓")
+
+
+if __name__ == "__main__":
+    main()

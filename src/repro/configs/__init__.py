@@ -1,0 +1,108 @@
+"""Architecture registry + workload input specs (ShapeDtypeStruct stand-ins)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+
+_ARCH_MODULES = {
+    "musicgen-medium": "musicgen_medium",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "llama3-405b": "llama3_405b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llava-next-34b": "llava_next_34b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every applicable (arch, shape) assignment cell (33 total)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape_applicable(cfg, shape):
+                cells.append((arch, shape.name))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Input specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def prefix_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Stub modality-frontend length (frames/patches) within seq_len."""
+    if not cfg.frontend or shape.kind == "decode":
+        return 0
+    from repro.models.model import DEFAULT_PREFIX_LEN
+
+    return min(DEFAULT_PREFIX_LEN, shape.seq_len // 2)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the step function's data inputs.
+
+    train   → tokens, labels, loss mask (+ frontend features)
+    prefill → tokens (+ frontend features)
+    decode  → tokens (B, 1); the KV/state cache is a separate argument built
+              by `launch.dryrun.cache_specs_for` / `models.init_cache`.
+    """
+    from repro.models.model import FRONTEND_FEATURE_DIM
+
+    b, s = shape.global_batch, shape.seq_len
+    f = prefix_len(cfg, shape)
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - f), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - f), i32)
+    elif shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    else:
+        raise ValueError(shape.kind)
+    if f:
+        feat = FRONTEND_FEATURE_DIM[cfg.frontend]
+        specs["prefix_features"] = jax.ShapeDtypeStruct((b, f, feat), jnp.bfloat16)
+    return specs
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, rules) -> dict:
+    """Logical shardings matching input_specs (batch over DP axes)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        ax: tuple = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.spec(ax, v.shape)
+    return out

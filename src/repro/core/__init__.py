@@ -1,0 +1,31 @@
+"""The paper's contribution, as composable modules (DESIGN.md §1 table):
+
+capacity    — §IV.a hardware/capacity model + measured-throughput estimator
+topology    — §III cluster topology, transfer cost (racks → pods)
+placement   — §IV.b.ii capacity-proportional placement + het-DP schedule
+speculation — §III.b naive-vs-LATE speculative execution (in simulator)
+simulator   — event-driven het-cluster simulator (policy validation layer)
+heartbeat   — §IV.c.ii heartbeats, piggybacked commands, liveness
+replication — §IV.c.i replica maintenance + erasure-striping trade-off
+namespace   — §IV.d.i name-node byte-accounting + sharded scaling fix
+tuning      — §IV.b.i task-count / block-size rules of thumb
+coordinator — jobtracker analogue: het-DP training step end to end
+"""
+
+from repro.core.capacity import CapacityEstimator, NodeProfile, PodProfile  # noqa: F401
+from repro.core.coordinator import HetCoordinator, PodRuntime  # noqa: F401
+from repro.core.heartbeat import Command, Heartbeat, HeartbeatMonitor  # noqa: F401
+from repro.core.namespace import Namespace, ShardedNamespace  # noqa: F401
+from repro.core.placement import (  # noqa: F401
+    Grain,
+    HetSchedule,
+    het_accumulation_schedule,
+    locality_aware_assignment,
+    plan_placement,
+    proportional_counts,
+    uniform_counts,
+)
+from repro.core.replication import ReplicaManager, StripingScheme  # noqa: F401
+from repro.core.simulator import SimCluster, SimWorker, POLICIES  # noqa: F401
+from repro.core.topology import Location, Topology  # noqa: F401
+from repro.core.tuning import TuningInput, tune  # noqa: F401

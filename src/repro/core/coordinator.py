@@ -1,0 +1,161 @@
+"""Heterogeneity-aware training coordinator (jobtracker analogue).
+
+Drives the het-DP global step end to end (DESIGN.md §4):
+
+  1. read measured pod capacities (heartbeat telemetry → CapacityEstimator);
+  2. compute the capacity-proportional accumulation schedule
+     (placement.het_accumulation_schedule);
+  3. each pod runs its k_i pjit'd grad microbatches (pod-local compiled step,
+     bf16 ICI all-reduce inside the pod is XLA's job);
+  4. cross-pod combine: sample-weighted mean, optionally int8+error-feedback
+     compressed (optim/compression.py) — the scarce-DCN analogue of the
+     paper's cross-rack 8 Gb pipe;
+  5. apply the optimizer update;
+  6. heartbeats tick; a dead pod triggers elastic re-mesh upstream
+     (launch/elastic.py) — this module just surfaces the event.
+
+On this single-CPU container, pods are *logical*: their grad steps execute
+sequentially, while wall-clock heterogeneity is tracked in virtual time from
+the pods' speed factors — the scheduling layer (what the paper is about) is
+identical either way.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.capacity import CapacityEstimator
+from repro.core.heartbeat import Heartbeat, HeartbeatMonitor
+from repro.core.placement import HetSchedule, het_accumulation_schedule
+from repro.optim.compression import CompressedAllReduce
+
+
+@dataclass
+class PodRuntime:
+    name: str
+    speed: float  # virtual relative speed (1.0 = nominal)
+    alive: bool = True
+    compressor: Optional[CompressedAllReduce] = None
+
+
+@dataclass
+class StepReport:
+    schedule: HetSchedule
+    virtual_step_s: float  # makespan across pods (slowest pod)
+    homo_virtual_s: float  # what a uniform schedule would have cost
+    tokens: int
+    metrics: dict[str, float] = field(default_factory=dict)
+
+
+def _weighted_combine(grad_list, weights):
+    out = None
+    for g, w in zip(grad_list, weights):
+        scaled = jax.tree.map(lambda x, w=w: x.astype(jnp.float32) * w, g)
+        out = scaled if out is None else jax.tree.map(jnp.add, out, scaled)
+    return out
+
+
+class HetCoordinator:
+    def __init__(
+        self,
+        grad_fn: Callable,  # (params, batch) -> (grads, metrics)
+        update_fn: Callable,  # (params, opt_state, grads) -> (params, opt_state, metrics)
+        pods: list[PodRuntime],
+        total_microbatches: int,
+        grain_tokens: int,
+        compress: bool = False,
+        het_schedule: bool = True,
+        monitor: Optional[HeartbeatMonitor] = None,
+    ):
+        self.grad_fn = grad_fn
+        self.update_fn = update_fn
+        self.pods = {p.name: p for p in pods}
+        self.total_microbatches = total_microbatches
+        self.grain_tokens = grain_tokens
+        self.compress = compress
+        self.het_schedule = het_schedule
+        self.capacity = CapacityEstimator()
+        self.monitor = monitor or HeartbeatMonitor(capacity=self.capacity)
+        self._vtime = 0.0
+        for p in pods:
+            self.capacity.register(p.name, p.speed)
+            self.monitor.register(p.name, 0.0, p.speed)
+            if compress:
+                p.compressor = CompressedAllReduce()
+
+    # ------------------------------------------------------------------
+    def alive_pods(self) -> list[PodRuntime]:
+        return [p for p in self.pods.values() if p.alive and self.monitor.is_alive(p.name)]
+
+    def schedule(self) -> HetSchedule:
+        pods = self.alive_pods()
+        caps = self.capacity.capacities([p.name for p in pods])
+        if not self.het_schedule:
+            caps = [1.0] * len(pods)  # stock-Hadoop homogeneity assumption
+        return het_accumulation_schedule(caps, self.total_microbatches)
+
+    # ------------------------------------------------------------------
+    def step(self, params, opt_state, batch_iter) -> tuple[Any, Any, StepReport]:
+        """One global step: pod-local accumulation + weighted combine."""
+        pods = self.alive_pods()
+        sched = self.schedule()
+        pod_grads, pod_metrics = [], []
+        pod_times = []
+
+        for pod, k in zip(pods, sched.microbatches):
+            acc = None
+            t0 = time.perf_counter()
+            for _ in range(k):
+                grads, metrics = self.grad_fn(params, next(batch_iter))
+                acc = grads if acc is None else jax.tree.map(jnp.add, acc, grads)
+            acc = jax.tree.map(lambda g: g / k, acc)
+            wall = time.perf_counter() - t0
+            # virtual pod wall time: k grains at the pod's (true) speed
+            vt = k / max(pod.speed, 1e-9)
+            pod_times.append(vt)
+            self.monitor.beat(
+                Heartbeat(pod.name, self._vtime + vt, grains_done=k, elapsed_s=vt)
+            )
+            if self.compress:
+                acc = pod.compressor.encode(acc)
+            pod_grads.append(acc)
+            pod_metrics.append(metrics)
+
+        if self.compress:
+            combined = CompressedAllReduce.combine(pod_grads, list(sched.weights))
+        else:
+            combined = _weighted_combine(pod_grads, sched.weights)
+
+        params, opt_state, opt_metrics = self.update_fn(params, opt_state, combined)
+
+        # bookkeeping: virtual makespan het vs homo
+        step_s = max(pod_times) if pod_times else 0.0
+        self._vtime += step_s
+        homo = het_accumulation_schedule([1.0] * len(pods), self.total_microbatches)
+        homo_s = max(
+            k / max(p.speed, 1e-9) for p, k in zip(pods, homo.microbatches)
+        ) if pods else 0.0
+        self.monitor.sweep(self._vtime)
+
+        metrics = {k: float(v) for k, v in {**pod_metrics[-1], **opt_metrics}.items()}
+        report = StepReport(
+            schedule=sched,
+            virtual_step_s=step_s,
+            homo_virtual_s=homo_s,
+            tokens=sched.total * self.grain_tokens,
+            metrics=metrics,
+        )
+        return params, opt_state, report
+
+    # ------------------------------------------------------------------
+    def fail_pod(self, name: str) -> None:
+        self.pods[name].alive = False
+
+    def set_speed(self, name: str, speed: float) -> None:
+        """Simulate thermal throttling / contention mid-run."""
+        self.pods[name].speed = speed

@@ -1,0 +1,421 @@
+"""Discrete-event heterogeneous-cluster simulator.
+
+The container has one CPU, so cluster-level *policy* claims (speculation,
+placement, replication, failure recovery) are validated on an event-driven
+simulator whose cost model comes from core/topology.py — the same layer the
+paper's guidelines operate at. Compute-level claims use the dry-run/roofline
+machinery instead (roofline/).
+
+Model:
+  * workers with heterogeneous rates (+ optional slowdown/failure at time t)
+  * two-phase tasks: input fetch (when non-local / shuffle-like) then compute.
+    Cross-pod fetches share one processor-sharing pipe per direction — adding
+    a transfer slows every in-flight transfer (the paper's "excessive network
+    congestion"), which is precisely how wrong speculative backups make a job
+    *slower than speculation-off* (paper §III.b / LATE [12]).
+  * Hadoop-style phase progress (fetch ≈ first third, compute the rest) —
+    the coarse progress signal is what misleads the naive heuristic.
+  * speculative execution policies: off | naive (stock Hadoop) | late
+  * heartbeat-based liveness: dead after ``dead_after_s`` → re-queue tasks.
+
+Outputs per job: makespan, wasted (killed-backup) work, bytes moved,
+per-worker utilization — the quantities the paper's §IV discusses.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.placement import Grain, PlacementPlan
+from repro.core.topology import Location, Topology
+
+FETCH_PHASE_FRACTION = 1.0 / 3.0  # Hadoop copy-phase share of task progress
+
+
+@dataclass
+class SimWorker:
+    loc: Location
+    rate: float  # unit-work items per second
+    fail_at: Optional[float] = None  # hard failure time (None = healthy)
+    slow_at: Optional[float] = None  # becomes a straggler at this time
+    slow_factor: float = 0.1
+
+    def rate_at(self, t: float) -> float:
+        if self.slow_at is not None and t >= self.slow_at:
+            return self.rate * self.slow_factor
+        return self.rate
+
+    def alive(self, t: float) -> bool:
+        return self.fail_at is None or t < self.fail_at
+
+
+@dataclass
+class Attempt:
+    task: int
+    worker: Location
+    start: float
+    fetch_bytes: float  # cross-pipe bytes still to fetch (0 = local)
+    compute_s: float  # compute duration once fetch completes
+    work: float = 0.0  # unit work (re-rated when compute actually starts)
+    speculative: bool = False
+    # runtime state
+    fetched: float = 0.0
+    compute_start: Optional[float] = None
+    done: bool = False
+    killed: bool = False
+    finish_t: Optional[float] = None
+
+    def progress(self, t: float) -> float:
+        if self.done:
+            return 1.0
+        if self.fetch_bytes > 0 and self.compute_start is None:
+            return FETCH_PHASE_FRACTION * min(1.0, self.fetched / self.fetch_bytes)
+        base = FETCH_PHASE_FRACTION if self.fetch_bytes > 0 else 0.0
+        if self.compute_start is None:
+            return 0.0
+        frac = min(1.0, (t - self.compute_start) / max(self.compute_s, 1e-9))
+        return base + (1.0 - base) * frac
+
+    def rate(self, t: float) -> float:
+        return self.progress(t) / max(t - self.start, 1e-9)
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    wasted_work: float
+    moved_bytes: float
+    cross_pod_bytes: float
+    n_speculative: int
+    n_spec_won: int
+    completed: int
+    reassigned_after_failure: int
+    util: dict[str, float]
+
+
+class SpeculationPolicy:
+    name = "off"
+
+    def pick(self, t, running: list[Attempt], free_worker: SimWorker, sim) -> Optional[int]:
+        return None
+
+
+class NaiveSpeculation(SpeculationPolicy):
+    """Stock-Hadoop heuristic (paper §III.b / [12]): back up any task whose
+    progress is >20 points under the mean over ALL attempts — completed tasks
+    (progress 1.0) drag the mean up, so in a heterogeneous cluster everything
+    on a slow node triggers; node speed is never consulted."""
+
+    name = "naive"
+    threshold = 0.2
+
+    def pick(self, t, running, free_worker, sim):
+        if not running:
+            return None
+        allp = [a.progress(t) for a in sim._attempts if not a.killed]
+        mean_p = sum(allp) / max(len(allp), 1)
+        for a in running:
+            if a.progress(t) < mean_p - self.threshold and not sim.has_backup(a.task):
+                return a.task
+        return None
+
+
+class LateSpeculation(SpeculationPolicy):
+    """LATE [Zaharia et al., OSDI'08]: longest estimated time-to-end first,
+    backups only on fast nodes, count cap, slowest-quartile rate filter."""
+
+    name = "late"
+    spec_cap_fraction = 0.1
+    slow_task_quantile = 0.25
+
+    def pick(self, t, running, free_worker, sim):
+        if not running:
+            return None
+        if sim.active_backups() >= max(1, int(self.spec_cap_fraction * len(sim.workers))):
+            return None
+        rates = sorted(w.rate_at(t) for w in sim.workers.values() if w.alive(t))
+        if free_worker.rate_at(t) < rates[len(rates) // 2]:
+            return None
+        cands = [
+            a for a in running
+            if not sim.has_backup(a.task)
+            and (a.fetch_bytes == 0 or a.compute_start is not None)
+        ]
+        if not cands:
+            return None
+        cands.sort(key=lambda a: a.rate(t))
+        cands = cands[: max(1, int(len(cands) * self.slow_task_quantile))]
+        best = max(cands, key=lambda a: (1 - a.progress(t)) / max(a.rate(t), 1e-9))
+        return best.task
+
+
+POLICIES: dict[str, Callable[[], SpeculationPolicy]] = {
+    "off": SpeculationPolicy,
+    "naive": NaiveSpeculation,
+    "late": LateSpeculation,
+}
+
+
+class _SharedPipe:
+    """Processor-sharing link: n active transfers each get bw/n."""
+
+    def __init__(self, bw: float):
+        self.bw = bw
+        self.active: dict[int, Attempt] = {}
+        self.last_t = 0.0
+
+    def advance(self, t: float) -> list[Attempt]:
+        """Drain bytes up to time t; return transfers that completed."""
+        if t > self.last_t and self.active:
+            share = self.bw / len(self.active)
+            dt = t - self.last_t
+            for a in self.active.values():
+                a.fetched = min(a.fetch_bytes, a.fetched + share * dt)
+        self.last_t = max(self.last_t, t)
+        done = [a for a in self.active.values() if a.fetched >= a.fetch_bytes - 1e-3]
+        for a in done:
+            del self.active[id(a)]
+        return done
+
+    def add(self, a: Attempt, t: float):
+        self.advance(t)
+        self.active[id(a)] = a
+
+    def remove(self, a: Attempt, t: float):
+        self.advance(t)
+        self.active.pop(id(a), None)
+
+    def next_finish(self) -> Optional[float]:
+        if not self.active:
+            return None
+        share = self.bw / len(self.active)
+        rem = min(a.fetch_bytes - a.fetched for a in self.active.values())
+        # strictly-advancing epsilon prevents zero-progress event loops
+        return self.last_t + max(rem, 0.0) / share + 1e-9
+
+
+class SimCluster:
+    def __init__(
+        self,
+        workers: list[SimWorker],
+        topology: Topology,
+        heartbeat_s: float = 3.0,
+        dead_after_s: float = 600.0,
+        seed: int = 0,
+    ):
+        self.workers: dict[Location, SimWorker] = {w.loc: w for w in workers}
+        self.topo = topology
+        self.heartbeat_s = heartbeat_s
+        self.dead_after_s = dead_after_s
+        self._attempts: list[Attempt] = []
+
+    # ------------------------------------------------------------------
+    def has_backup(self, task: int) -> bool:
+        return any(
+            a.task == task and a.speculative and not a.done and not a.killed
+            for a in self._attempts
+        )
+
+    def active_backups(self) -> int:
+        return sum(1 for a in self._attempts if a.speculative and not a.done and not a.killed)
+
+    # ------------------------------------------------------------------
+    def run_job(
+        self,
+        grains: list[Grain],
+        plan: PlacementPlan,
+        policy: str = "late",
+        congestion: bool = True,
+    ) -> SimResult:
+        pol = POLICIES[policy]()
+        self._attempts = []
+        gmap = {g.gid: g for g in grains}
+        pending = [g.gid for g in grains]
+        done: set[int] = set()
+        attempts_of: dict[int, list[Attempt]] = {}
+        pipe = _SharedPipe(self.topo.cross_pod_bw)
+        moved = cross = wasted = 0.0
+        n_spec = n_spec_won = reassigned = 0
+        busy: dict[Location, Optional[Attempt]] = {w: None for w in self.workers}
+        busy_time: dict[Location, float] = {w: 0.0 for w in self.workers}
+        dead: set[Location] = set()
+        heap: list[tuple[float, int, str, object]] = []
+        seq = [0]
+
+        def push(t: float, kind: str, payload) -> None:
+            seq[0] += 1
+            heapq.heappush(heap, (t, seq[0], kind, payload))
+
+        next_check = [float("inf")]
+
+        def reschedule_pipe() -> None:
+            nf = pipe.next_finish()
+            if nf is None:
+                next_check[0] = float("inf")
+                return
+            # only push when the pipe's next finish moved earlier or the old
+            # check already fired — bounds heap growth
+            if nf < next_check[0] - 1e-12 or next_check[0] <= pipe.last_t:
+                next_check[0] = nf
+                push(nf, "pipe_check", None)
+
+        def fetch_plan(w: SimWorker, gid: int) -> tuple[float, float, int]:
+            """(pipe_bytes, fixed_fetch_s, distance) for gid on w."""
+            g = gmap[gid]
+            reps = plan.replicas[gid]
+            src = min(reps, key=lambda r: self.topo.distance(r, w.loc))
+            dist = self.topo.distance(src, w.loc)
+            if g.remote_input:
+                dist = 2
+            if dist == 0:
+                return 0.0, 0.0, 0
+            if dist == 1:
+                return 0.0, g.nbytes / self.topo.in_pod_bw, 1
+            return (g.nbytes, 0.0, 2) if congestion else (0.0, g.nbytes / self.topo.cross_pod_bw, 2)
+
+        def launch(wloc: Location, gid: int, t: float, speculative: bool) -> None:
+            nonlocal moved, cross, n_spec
+            w = self.workers[wloc]
+            pipe_bytes, fixed_s, dist = fetch_plan(w, gid)
+            compute_s = gmap[gid].work / max(w.rate_at(t), 1e-9)
+            a = Attempt(gid, wloc, t, pipe_bytes, compute_s,
+                        work=gmap[gid].work, speculative=speculative)
+            self._attempts.append(a)
+            attempts_of.setdefault(gid, []).append(a)
+            busy[wloc] = a
+            if speculative:
+                n_spec += 1
+            if dist > 0:
+                moved += gmap[gid].nbytes
+            if dist == 2:
+                cross += gmap[gid].nbytes
+            if pipe_bytes > 0:
+                pipe.add(a, t)
+                reschedule_pipe()
+            else:
+                a.compute_start = t + fixed_s
+                a.finish_t = a.compute_start + compute_s
+                push(a.finish_t, "finish", a)
+
+        def kill(a: Attempt, t: float) -> None:
+            nonlocal wasted
+            if a.done or a.killed:
+                return
+            a.killed = True
+            wasted += a.progress(t)
+            if a.fetch_bytes > 0 and a.compute_start is None:
+                pipe.remove(a, t)
+                reschedule_pipe()
+            if busy.get(a.worker) is a:
+                busy[a.worker] = None
+
+        def schedule_wave(t: float) -> None:
+            free = [
+                w
+                for w in self.workers
+                if busy[w] is None and self.workers[w].alive(t) and w not in dead
+            ]
+            for wloc in sorted(free, key=lambda l: -self.workers[l].rate_at(t)):
+                if pending:
+                    gid = self._pick_local_first(pending, plan, wloc)
+                    pending.remove(gid)
+                    launch(wloc, gid, t, False)
+                else:
+                    live = [
+                        a
+                        for a in self._attempts
+                        if not a.done and not a.killed and a.task not in done
+                    ]
+                    if not live:
+                        continue
+                    pick = pol.pick(t, live, self.workers[wloc], self)
+                    if pick is not None:
+                        launch(wloc, pick, t, True)
+
+        # failure timers
+        for w in self.workers.values():
+            if w.fail_at is not None:
+                push(w.fail_at + self.dead_after_s, "pronounce_dead", w.loc)
+                push(w.fail_at, "worker_fail", w.loc)
+
+        schedule_wave(0.0)
+        makespan = 0.0
+        while heap and len(done) < len(grains):
+            t, _, kind, payload = heapq.heappop(heap)
+            finished_fetches = pipe.advance(t)
+            for a in finished_fetches:
+                if not a.killed and not a.done:
+                    a.compute_start = t
+                    a.compute_s = a.work / max(self.workers[a.worker].rate_at(t), 1e-9)
+                    a.finish_t = t + a.compute_s
+                    push(a.finish_t, "finish", a)
+            reschedule_pipe()  # unconditional: joins can stale prior checks
+
+            if kind == "pipe_check":
+                pass  # advance above did the work
+            elif kind == "worker_fail":
+                for a in list(self._attempts):
+                    if a.worker == payload and not a.done and not a.killed:
+                        kill(a, t)  # work lost immediately; requeue on pronounce
+            elif kind == "pronounce_dead":
+                dead.add(payload)
+                for a in self._attempts:
+                    if a.worker == payload and a.task not in done:
+                        alive_attempts = [
+                            x
+                            for x in attempts_of.get(a.task, [])
+                            if not x.killed and not x.done
+                        ]
+                        if not alive_attempts and a.task not in pending:
+                            pending.append(a.task)
+                            reassigned += 1
+            elif kind == "finish":
+                a = payload
+                if a.killed or a.done:
+                    continue
+                w = self.workers[a.worker]
+                if not w.alive(t):
+                    continue
+                a.done = True
+                makespan = max(makespan, t)
+                busy_time[a.worker] += t - a.start
+                busy[a.worker] = None
+                if a.task in done:
+                    continue
+                done.add(a.task)
+                if a.speculative:
+                    n_spec_won += 1
+                for other in attempts_of.get(a.task, []):
+                    if other is not a:
+                        kill(other, t)
+            schedule_wave(t)
+
+        util = {
+            str(w): (busy_time[w] / makespan if makespan > 0 else 0.0)
+            for w in self.workers
+        }
+        return SimResult(
+            makespan=makespan,
+            wasted_work=wasted,
+            moved_bytes=moved,
+            cross_pod_bytes=cross,
+            n_speculative=n_spec,
+            n_spec_won=n_spec_won,
+            completed=len(done),
+            reassigned_after_failure=reassigned,
+            util=util,
+        )
+
+    def _pick_local_first(self, pending: list[int], plan: PlacementPlan, wloc: Location) -> int:
+        """HDFS data-awareness: node-local > pod-local > any (paper §III.a)."""
+        best, best_d = pending[0], 3
+        for gid in pending:
+            d = min(self.topo.distance(r, wloc) for r in plan.replicas[gid])
+            if d < best_d:
+                best, best_d = gid, d
+                if d == 0:
+                    break
+        return best

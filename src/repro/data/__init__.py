@@ -1,0 +1,2 @@
+from repro.data.dataset import BlockDataset, SyntheticCorpus, batch_iterator  # noqa: F401
+from repro.data.sampler import GrainSampler  # noqa: F401

@@ -1,0 +1,156 @@
+"""Flash attention forward kernel (Pallas, TPU BlockSpec/VMEM tiling).
+
+TPU-native design (DESIGN.md §2): q/k/v are tiled into (block_q × head_dim)
+and (block_k × head_dim) VMEM blocks with 128-aligned matmul dims for the
+MXU; the online-softmax running state (m, l, acc) lives in VMEM scratch that
+persists across the sequential kv grid dimension. Fully-masked kv blocks are
+skipped with ``pl.when`` (causal / sliding-window), so causal attention does
+~half the matmul work of the naive kernel.
+
+Layout convention inside the kernel: heads are folded into the leading grid
+dimension; GQA is expressed purely in the k/v BlockSpec index map
+(``bh // q_per_kv``), so the kernel body itself is MHA.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, bq, D)
+    k_ref,  # (1, bk, D)
+    v_ref,  # (1, bk, D)
+    o_ref,  # (1, bq, D)
+    m_scr,  # (bq,) f32
+    l_scr,  # (bq,) f32
+    acc_scr,  # (bq, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    seq_k: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    # Skip kv blocks entirely in the causal future / outside the window.
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if window:
+        run = run & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k  # padding
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (BH, Sq, D)  — heads folded into batch
+    k: jax.Array,  # (BKH, Sk, D)
+    v: jax.Array,
+    *,
+    q_per_kv: int,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    scale: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq = -(-sq // bq)
+    nk = -(-sk // bk)
+    qp, kp = nq * bq - sq, nk * bk - sk
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        seq_k=sk,
+        block_q=bq,
+        block_k=bk,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=q_per_kv: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=q_per_kv: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

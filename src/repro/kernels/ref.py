@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Deliberately naive: O(S²) attention with materialized scores, O(S)
+sequential SSD recurrence. Tests sweep shapes/dtypes and assert the kernels
+(interpret mode on CPU) match these to numerical tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KH, D)
+    v: jax.Array,  # (B, Sk, KH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / d**0.5
+    qg = q.reshape(b, sq, kh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D) one token
+    k: jax.Array,  # (B, S, KH, D) cache
+    v: jax.Array,  # (B, S, KH, D)
+    valid: jax.Array,  # (B, S) bool
+    *,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / d**0.5
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    loga: jax.Array,  # (B, S, H)
+    b: jax.Array,  # (B, S, H, N)
+    c: jax.Array,  # (B, S, H, N)
+    h0: jax.Array | None = None,  # (B, H, N, P)
+):
+    """Sequential linear recurrence: h_t = a_t h_{t-1} + b_t ⊗ x_t; y = c·h."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), f32)
+
+    def step(h, inp):
+        xt, lat, bt, ct = inp
+        a = jnp.exp(lat.astype(f32))[..., None, None]
+        h = a * h + jnp.einsum("bhn,bhp->bhnp", bt.astype(f32), xt.astype(f32))
+        y = jnp.einsum("bhn,bhnp->bhp", ct.astype(f32), h)
+        return h, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        loga.transpose(1, 0, 2),
+        b.transpose(1, 0, 2, 3),
+        c.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(step, h0.astype(f32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final

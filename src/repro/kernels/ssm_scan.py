@@ -1,0 +1,124 @@
+"""Chunked SSD (Mamba-2 / mLSTM) scan kernel (Pallas, TPU).
+
+TPU adaptation (DESIGN.md §2): instead of Mamba-1's per-element selective
+scan (VPU-bound, no MXU use), the recurrence
+
+    h_t = a_t · h_{t-1} + b_t ⊗ x_t ;   y_t = c_t · h_t
+
+is evaluated chunk-parallel: the L×L intra-chunk quadratic term and the
+rank-N inter-chunk state updates are dense matmuls on 128-aligned tiles. The
+chunk state h (N × P, fp32) persists in VMEM scratch across the sequential
+chunk grid dimension — the carry never touches HBM.
+
+Per (batch·head) grid row, per chunk k:
+    cum   = cumsum(log a)                       (L,)
+    W     = (C Bᵀ) ∘ exp(cum_t − cum_s) ∘ tril  (L, L)   MXU
+    y     = W X + (C exp(cum)) h_prev           (L, P)   MXU ×2
+    h     = exp(cum_L) h_prev + (B exp(cum_L − cum))ᵀ X  (N, P)   MXU
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, L, P)
+    la_ref,  # (1, L)
+    b_ref,  # (1, L, N)
+    c_ref,  # (1, L, N)
+    y_ref,  # (1, L, P)
+    hout_ref,  # (1, N, P) — final state, written on last chunk
+    h_scr,  # (N, P) f32 scratch carry
+    *,
+    num_chunks: int,
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    la = la_ref[0].astype(jnp.float32)  # (L,)
+    b = b_ref[0].astype(jnp.float32)  # (L, N)
+    c = c_ref[0].astype(jnp.float32)  # (L, N)
+    L = x.shape[0]
+
+    cum = jnp.cumsum(la)  # inclusive (L,)
+    total = cum[-1]
+
+    # intra-chunk: W_{t,s} = (c_t·b_s)·exp(cum_t − cum_s) for s ≤ t
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    w = jnp.where(ti >= si, cb * decay, 0.0)
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    cexp = c * jnp.exp(cum)[:, None]  # (L, N)
+    y += jax.lax.dot_general(
+        cexp, h_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: h = exp(total)·h + Σ_s exp(total − cum_s) b_s x_sᵀ
+    bscale = b * jnp.exp(total - cum)[:, None]  # (L, N)
+    s_k = jax.lax.dot_general(
+        bscale, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    h_scr[...] = jnp.exp(total) * h_scr[...] + s_k
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ki == num_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def ssm_scan_fwd(
+    x: jax.Array,  # (BH, S, P)
+    loga: jax.Array,  # (BH, S)
+    b: jax.Array,  # (BH, S, N)
+    c: jax.Array,  # (BH, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    k = s // L
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=k)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(bh, k),
+        in_specs=[
+            pl.BlockSpec((1, L, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, L), lambda i, j: (i, j)),
+            pl.BlockSpec((1, L, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, L, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, loga, b, c)
+    return y, h

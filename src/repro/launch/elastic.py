@@ -1,0 +1,96 @@
+"""Elastic scaling: pod death → shrink, recover, resume (DESIGN.md §4.6).
+
+Wires the paper's failure chain end to end:
+  heartbeat timeout (§IV.c.ii) → pronounce dead → re-replicate that pod's
+  grains from surviving replicas (§IV.c.i) → drop the pod from the capacity
+  schedule (§IV.b.ii re-proportioning) → restore training state from the
+  last redundant checkpoint → resume.
+
+On hardware the "rebuild the mesh" step re-runs jax.distributed init with
+the survivor set and re-jits the step (the compiled artifact is a pure
+function of (cfg, mesh)); in this container the coordinator's logical pods
+shrink instead — the control flow is identical and is exercised by
+tests/test_elastic.py and examples/heterogeneous_cluster.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.checkpoint import CheckpointManager
+from repro.core.coordinator import HetCoordinator
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.core.placement import PlacementPlan
+from repro.core.replication import ReplicaManager
+from repro.core.topology import Location
+
+
+@dataclass
+class ElasticEvent:
+    time: float
+    kind: str  # pod_dead | re_replicated | restored | resumed
+    detail: dict = field(default_factory=dict)
+
+
+class ElasticController:
+    def __init__(
+        self,
+        coordinator: HetCoordinator,
+        replicas: Optional[ReplicaManager] = None,
+        checkpoints: Optional[CheckpointManager] = None,
+        pod_locations: Optional[dict[str, Location]] = None,
+    ):
+        self.coord = coordinator
+        self.replicas = replicas
+        self.ckpt = checkpoints
+        self.pod_locations = pod_locations or {}
+        self.events: list[ElasticEvent] = []
+        self.coord.monitor.on_dead = self._on_dead
+        self._template = None
+        self._restore_requested = False
+
+    def set_restore_template(self, template) -> None:
+        self._template = template
+
+    # ------------------------------------------------------------------
+    def _on_dead(self, worker: str, t: float) -> None:
+        self.events.append(ElasticEvent(t, "pod_dead", {"pod": worker}))
+        self.coord.fail_pod(worker)
+        if self.replicas is not None:
+            loc = self.pod_locations.get(worker)
+            if loc is not None:
+                self.replicas.fail_worker(loc)
+                cost = self.replicas.recover()
+                self.events.append(
+                    ElasticEvent(
+                        t,
+                        "re_replicated",
+                        {
+                            "grains": len(cost.events),
+                            "bytes": cost.bytes_written,
+                            "transfer_s": cost.transfer_s,
+                        },
+                    )
+                )
+        self._restore_requested = True
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self, params, opt_state):
+        """After a death, roll back to the last checkpoint (if any)."""
+        if not self._restore_requested or self.ckpt is None or self._template is None:
+            return params, opt_state, False
+        steps = self.ckpt.steps()
+        if not steps:
+            self._restore_requested = False
+            return params, opt_state, False
+        state, info = self.ckpt.restore(steps[-1], self._template)
+        self.events.append(
+            ElasticEvent(0.0, "restored", {"step": steps[-1], **info})
+        )
+        self._restore_requested = False
+        return state["params"], state["opt_state"], True
+
+    @property
+    def alive_pod_names(self) -> list[str]:
+        return [p.name for p in self.coord.alive_pods()]

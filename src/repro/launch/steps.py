@@ -1,0 +1,190 @@
+"""Jittable step functions shared by train.py / serve.py / dryrun.py.
+
+Each builder returns ``(step_fn, in_shardings, out_shardings, arg_shapes)``
+so the dry-run can ``jax.jit(...).lower(*shapes).compile()`` without ever
+allocating real arrays, and the real drivers can jit the same function with
+the same shardings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs, prefix_len
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingRules, rules_from_mesh
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, rules: Optional[ShardingRules]):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        logits, aux = M.forward(
+            cfg, run, params, batch["tokens"], rules, batch.get("prefix_features")
+        )
+        total, metrics = M.lm_loss(
+            cfg, run, logits[:, :-1], batch["labels"][:, 1:], batch["mask"][:, 1:], aux
+        )
+        return total, metrics
+
+    k = max(1, run.grad_accum_steps)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            # sequential microbatches inside the step: activation memory ÷ k
+            chunked = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def acc_step(carry, mb):
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                carry = jax.tree.map(jnp.add, carry, g)
+                return carry, m
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            # honor probe unrolling so HloCostAnalysis counts every microbatch
+            gsum, ms = jax.lax.scan(acc_step, zero, chunked, unroll=run.scan_unroll)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        params, opt_state, opt_metrics = adamw.adamw_update(run, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig, run: RunConfig, rules: Optional[ShardingRules]):
+    """(params, batch) → (grads, metrics) — used by the het-DP coordinator,
+    which accumulates a pod-local number of microbatches before the weighted
+    cross-pod combine (core/coordinator.py)."""
+
+    def loss_fn(params, batch):
+        logits, aux = M.forward(
+            cfg, run, params, batch["tokens"], rules, batch.get("prefix_features")
+        )
+        total, metrics = M.lm_loss(
+            cfg, run, logits[:, :-1], batch["labels"][:, 1:], batch["mask"][:, 1:], aux
+        )
+        return total, metrics
+
+    def grad_step(params, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    return grad_step
+
+
+# ---------------------------------------------------------------------------
+# Serve (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, rules, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(
+            cfg, run, params, batch["tokens"], max_len, rules,
+            batch.get("prefix_features"),
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig, rules):
+    """One-token decode with KV/state cache — the assignment's serve_step."""
+
+    def serve_step(params, cache, batch):
+        logits, cache = M.decode_step(cfg, run, params, cache, batch["tokens"], rules)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings / shapes for a workload cell
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(cfg, shape, mesh, rules) -> dict:
+    from repro.configs import input_shardings
+
+    return {
+        k: NamedSharding(mesh, spec)
+        for k, spec in input_shardings(cfg, shape, rules).items()
+    }
+
+
+def named_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cell_artifacts(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig, mesh: Mesh):
+    """Everything needed to lower one (arch × shape × mesh) cell.
+
+    Returns dict with: fn, args (ShapeDtypeStructs), in_shardings,
+    out_shardings(None→default), donate.
+    """
+    rules = rules_from_mesh(mesh, fsdp=run.fsdp, sequence_parallel=run.sequence_parallel)
+    pspecs = M.model_specs(cfg, rules)
+    pshapes = M.model_shapes(cfg)
+    psh = named_tree(mesh, pspecs)
+    batch_specs = input_specs(cfg, shape)
+    bsh = batch_shardings(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        import jax.numpy as _jnp
+
+        fn = make_train_step(cfg, run, rules)
+        osh = named_tree(mesh, adamw.opt_state_specs(pspecs))
+        oshapes = adamw.opt_state_shapes(pshapes, _jnp.dtype(run.optimizer_dtype))
+        return dict(
+            fn=fn,
+            args=(pshapes, oshapes, batch_specs),
+            in_shardings=(psh, osh, bsh),
+            donate_argnums=(0, 1),
+        )
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, run, rules, max_len=shape.seq_len)
+        return dict(
+            fn=fn,
+            args=(pshapes, batch_specs),
+            in_shardings=(psh, bsh),
+            donate_argnums=(),
+        )
+    # decode
+    fn = make_serve_step(cfg, run, rules)
+    cshapes = cache_shapes(cfg, shape)
+    cspecs = M.cache_specs(cfg, rules, shape.global_batch, shape.seq_len)
+    csh = named_tree(mesh, cspecs)
+    return dict(
+        fn=fn,
+        args=(pshapes, cshapes, batch_specs),
+        in_shardings=(psh, csh, bsh),
+        donate_argnums=(1,),
+    )
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct tree for the decode cache (allocation-free)."""
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    return cache

@@ -1,0 +1,182 @@
+"""End-to-end training driver (the framework's `main`).
+
+Runs the full heterogeneity-aware stack on whatever devices exist: grain
+placement, capacity-proportional accumulation across logical pods, weighted
+(optionally int8-compressed) cross-pod combine, heartbeats, redundant
+checkpoints, failure injection + elastic recovery.
+
+Examples
+--------
+# ~100M-param model for a few hundred steps on CPU (examples/train_lm.py):
+PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b-smoke \
+    --steps 200 --batch 8 --seq 128 --d-model 256 --layers 4
+
+# heterogeneous 4-pod run with a mid-run failure:
+PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b-smoke \
+    --steps 60 --pods 1.0,1.0,0.5,0.25 --kill-pod 2 --kill-at 30 --compress
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core.coordinator import HetCoordinator, PodRuntime
+from repro.data.dataset import batch_iterator
+from repro.launch.elastic import ElasticController
+from repro.launch.steps import make_grad_step
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="microbatch (per grain)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=8, help="grains per global step")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--d-model", type=int, default=0, help="override width (smoke)")
+    ap.add_argument("--layers", type=int, default=0, help="override depth (smoke)")
+    ap.add_argument("--pods", default="1.0", help="comma speeds, e.g. 1.0,0.5")
+    ap.add_argument("--no-het-schedule", action="store_true")
+    ap.add_argument("--compress", action="store_true", help="int8+EF cross-pod combine")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-redundancy", default="replicate", choices=["replicate", "stripe"])
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--kill-pod", type=int, default=-1)
+    ap.add_argument("--kill-at", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    return ap
+
+
+def build_model(args):
+    cfg = get_config(args.arch)
+    over = {}
+    if args.d_model:
+        over.update(d_model=args.d_model, head_dim=max(args.d_model // max(cfg.num_heads, 1), 8))
+    if args.layers:
+        over.update(num_layers=args.layers)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    cfg.validate()
+    run = RunConfig(
+        learning_rate=args.lr,
+        total_steps=args.steps,
+        warmup_steps=max(args.steps // 20, 5),
+        remat="none",
+        attention_impl="chunked",
+        attention_chunk=max(64, min(1024, args.seq)),
+        ssd_chunk=min(256, args.seq),
+        het_schedule=not args.no_het_schedule,
+        grad_compression="int8_ef" if args.compress else "none",
+    )
+    return cfg, run
+
+
+def main(argv=None) -> dict:
+    args = build_argparser().parse_args(argv)
+    cfg, run = build_model(args)
+    key = jax.random.PRNGKey(args.seed)
+
+    params = M.init_model(key, cfg)
+    opt_state = adamw.init_opt_state(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M layers={cfg.num_layers} d={cfg.d_model}")
+
+    grad_fn = jax.jit(make_grad_step(cfg, run, rules=None))
+
+    def update_fn(p, o, g):
+        return jax.jit(lambda p, o, g: adamw.adamw_update(run, p, g, o))(p, o, g)
+
+    speeds = [float(s) for s in args.pods.split(",")]
+    pods = [PodRuntime(f"pod{i}", s) for i, s in enumerate(speeds)]
+    coord = HetCoordinator(
+        grad_fn=grad_fn,
+        update_fn=lambda p, o, g: update_fn(p, o, g),
+        pods=pods,
+        total_microbatches=args.microbatches,
+        grain_tokens=args.batch * args.seq,
+        compress=args.compress,
+        het_schedule=run.het_schedule,
+    )
+
+    ckpt = None
+    elastic = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(
+            args.ckpt_dir, num_nodes=max(4, len(pods)),
+            redundancy=args.ckpt_redundancy, async_save=True,
+        )
+        elastic = ElasticController(coord, checkpoints=ckpt)
+        elastic.set_restore_template({"params": params, "opt_state": opt_state, "step": jnp.zeros((), jnp.int32)})
+        if args.restore and ckpt.steps():
+            state, info = ckpt.restore(ckpt.steps()[-1], {"params": params, "opt_state": opt_state, "step": jnp.zeros((), jnp.int32)})
+            params, opt_state = state["params"], state["opt_state"]
+            print(f"restored from step {info['step']}")
+    else:
+        elastic = ElasticController(coord)
+
+    batches = batch_iterator(cfg, args.seq, args.batch, seed=args.seed,
+                             frontend_prefix=8 if cfg.frontend else 0)
+    history = []
+    t0 = time.time()
+    start_step = int(opt_state["step"])
+    for step in range(start_step, args.steps):
+        if args.kill_at == step and args.kill_pod >= 0:
+            # the pod's heartbeats stop; after the timeout it is pronounced dead
+            coord.monitor.pronounce(f"pod{args.kill_pod}", coord._vtime)
+            params, opt_state, restored = elastic.maybe_restore(params, opt_state)
+            if restored:
+                step = int(opt_state["step"])
+                print(f"[elastic] pod{args.kill_pod} dead → restored step {step}, "
+                      f"{len(coord.alive_pods())} pods remain")
+        params, opt_state, rep = coord.step(params, opt_state, batches)
+        history.append({"step": step, **rep.metrics,
+                        "virtual_s": rep.virtual_step_s, "homo_s": rep.homo_virtual_s,
+                        "schedule": list(rep.schedule.microbatches)})
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = rep.metrics
+            print(f"step {step:5d} loss={m.get('loss', float('nan')):.4f} "
+                  f"grad_norm={m.get('grad_norm', 0):.2f} sched={rep.schedule.microbatches} "
+                  f"het={rep.virtual_step_s:.2f}s homo={rep.homo_virtual_s:.2f}s")
+        if ckpt is not None and step > 0 and step % args.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt_state": opt_state, "step": opt_state["step"]})
+    if ckpt is not None:
+        ckpt.wait()
+        ckpt.save(args.steps, {"params": params, "opt_state": opt_state, "step": opt_state["step"]})
+        ckpt.wait()
+
+    wall = time.time() - t0
+    out = {
+        "arch": cfg.name,
+        "params_m": n_params / 1e6,
+        "steps": len(history),
+        "first_loss": history[0]["loss"] if history else None,
+        "last_loss": history[-1]["loss"] if history else None,
+        "wall_s": wall,
+        "history": history,
+        "elastic_events": [vars(e) for e in (elastic.events if elastic else [])],
+    }
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(out, indent=2, default=str))
+    print(f"done: loss {out['first_loss']:.4f} → {out['last_loss']:.4f} in {wall:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    main()

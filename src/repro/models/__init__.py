@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    init_model,
+    model_specs,
+    forward,
+    prefill,
+    decode_step,
+    init_cache,
+    cache_specs,
+)

@@ -1,0 +1,191 @@
+"""Shared building blocks: declarative params, norms, RoPE, SwiGLU MLP.
+
+Parameters are declared once as :class:`ParamDef` trees; ``build_params`` and
+``build_specs`` derive the init pytree and the PartitionSpec pytree from the
+same source of truth, so sharding can never drift from shapes. Blocks that sit
+inside the layer-stack ``lax.scan`` get a leading ``num_periods`` dimension
+added uniformly by ``stack_defs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import ShardingRules
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Declarative parameter definitions
+# ---------------------------------------------------------------------------
+
+InitFn = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical sharding axis per dim
+    init: InitFn
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def nrm(scale: float = 1.0, fan_in_axis: int = 0) -> InitFn:
+    """Normal init with 1/sqrt(fan_in) scaling (fan-in read from shape)."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[fan_in_axis]
+        return (scale / np.sqrt(max(1, fan_in))) * jax.random.normal(key, shape, dtype)
+
+    return init
+
+
+def trunc_nrm(std: float) -> InitFn:
+    def init(key, shape, dtype):
+        return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def const_init(value: float) -> InitFn:
+    def init(key, shape, dtype):
+        return jnp.full(shape, value, dtype)
+
+    return init
+
+
+def uniform_init(lo: float, hi: float) -> InitFn:
+    def init(key, shape, dtype):
+        return jax.random.uniform(key, shape, dtype, lo, hi)
+
+    return init
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs, num: int):
+    """Add a leading (replicated) layer-stack dimension to every ParamDef."""
+
+    def stack(d: ParamDef) -> ParamDef:
+        return ParamDef((num,) + d.shape, (None,) + d.axes, d.init, d.dtype)
+
+    return jax.tree.map(stack, defs, is_leaf=is_def)
+
+
+def build_params(defs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.init(k, d.shape, d.dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def build_specs(defs, rules: Optional[ShardingRules]):
+    def spec(d: ParamDef):
+        if rules is None:
+            return P()
+        return rules.spec(d.axes, d.shape)
+
+    return jax.tree.map(spec, defs, is_leaf=is_def)
+
+
+def build_shapes(defs):
+    """ShapeDtypeStructs for allocation-free dry-run param stand-ins."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm_def(dim: int) -> ParamDef:
+    # zero-centred scale (`1 + g`), standard for stable bf16 training.
+    return ParamDef((dim,), (None,), zeros_init)
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]  # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- SwiGLU MLP ---------------------------------------------------------------
+
+
+def mlp_defs(d_model: int, d_ff: int) -> dict:
+    return {
+        "gate": ParamDef((d_model, d_ff), ("fsdp", "tp"), nrm()),
+        "up": ParamDef((d_model, d_ff), ("fsdp", "tp"), nrm()),
+        "down": ParamDef((d_ff, d_model), ("tp", "fsdp"), nrm()),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    g = x @ params["gate"].astype(compute_dtype)
+    u = x @ params["up"].astype(compute_dtype)
+    return (jax.nn.silu(g) * u) @ params["down"].astype(compute_dtype)
+
+
+# --- misc ---------------------------------------------------------------------
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def causal_mask(sq: int, skv: int, q_offset: int = 0, window: int = 0) -> jax.Array:
+    """(sq, skv) boolean mask. True = attend. Supports sliding window."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m

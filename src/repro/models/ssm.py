@@ -1,0 +1,462 @@
+"""State-space / recurrent blocks: Mamba-2 (SSD), mLSTM, sLSTM.
+
+TPU adaptation note (DESIGN.md §2): Mamba-1's per-channel selective scan is
+VPU-bound and MXU-hostile; we implement the SSD (Mamba-2) chunked form in
+which both the intra-chunk quadratic term and the inter-chunk state updates
+are batched matmuls — exactly the rethinking-for-systolic-arrays the
+assignment asks for. The same ``chunked_ssd`` primitive implements mLSTM
+(matrix-memory xLSTM) by folding the exponential input gate into ``b`` and
+augmenting the value vector with a ones column so the normalizer ``n`` rides
+along in the state. sLSTM is inherently sequential (scalar memory with
+exponential gating + stabilizer) and runs as a ``lax.scan`` over time.
+
+The Pallas kernel twin of ``chunked_ssd`` lives in kernels/ssm_scan.py and is
+validated against this file's math in interpret mode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    ParamDef,
+    const_init,
+    nrm,
+    norm_def,
+    ones_init,
+    rms_norm,
+    uniform_init,
+    zeros_init,
+)
+from repro.parallel.sharding import ShardingRules, shard_constraint
+
+DEFAULT_CHUNK = 256
+MAMBA_HEAD_DIM = 128
+
+
+# ---------------------------------------------------------------------------
+# The shared chunked scalar-decay linear-recurrence primitive (SSD)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ssd(
+    x: jax.Array,  # (B, S, H, P) values
+    loga: jax.Array,  # (B, S, H) log decay per step (≤ 0)
+    b: jax.Array,  # (B, S, H, N) input maps (include dt / input gates)
+    c: jax.Array,  # (B, S, H, N) output maps
+    chunk: int = DEFAULT_CHUNK,
+    h0: Optional[jax.Array] = None,  # (B, H, N, P)
+    unroll: bool = False,
+):
+    """Computes h_t = a_t·h_{t-1} + b_t ⊗ x_t ;  y_t = c_t · h_t.
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P)). All matmul-structured.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:  # pad with identity steps: a=1 (loga=0), b=x=0 → state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    K = S_p // L
+
+    f32 = jnp.float32
+    xk = x.reshape(B, K, L, H, P).astype(f32)
+    bk = b.reshape(B, K, L, H, N).astype(f32)
+    ck = c.reshape(B, K, L, H, N).astype(f32)
+    la = loga.reshape(B, K, L, H).astype(f32)
+
+    cum = jnp.cumsum(la, axis=2)  # inclusive  (B,K,L,H)
+    total = cum[:, :, -1]  # (B,K,H)
+
+    # --- intra-chunk quadratic term (masked, decay-weighted) ---------------
+    cb = jnp.einsum("bklhn,bkshn->bklsh", ck, bk)  # (B,K,L,L,H)
+    # clamp the exponent at 0: for the valid region t ≥ s the difference is
+    # ≤ 0 (cum is non-increasing), while the masked future side would blow up
+    # to +inf and poison the backward pass through `where` (inf·0 → NaN)
+    dexp = jnp.minimum(cum[:, :, :, None, :] - cum[:, :, None, :, :], 0.0)
+    decay = jnp.exp(dexp)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(mask[None, None, :, :, None], cb * decay, 0.0)
+    y_intra = jnp.einsum("bklsh,bkshp->bklhp", w, xk)
+
+    # --- per-chunk end states ----------------------------------------------
+    sdecay = jnp.exp(total[:, :, None, :] - cum)  # (B,K,L,H)
+    S_k = jnp.einsum("bklh,bklhn,bklhp->bkhnp", sdecay, bk, xk)
+
+    # --- inter-chunk sequential state pass (scan over K chunks) ------------
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), f32)
+
+    def step(h, inp):
+        cum_k, total_k, s_k, c_k = inp
+        y_in = jnp.einsum("blhn,bhnp->blhp", c_k, h) * jnp.exp(cum_k)[..., None]
+        h_new = jnp.exp(total_k)[..., None, None] * h + s_k
+        return h_new, y_in
+
+    xs = (
+        cum.transpose(1, 0, 2, 3),
+        total.transpose(1, 0, 2),
+        S_k.transpose(1, 0, 2, 3, 4),
+        ck.transpose(1, 0, 2, 3, 4),
+    )
+    h_final, y_inter = jax.lax.scan(step, h0.astype(f32), xs, unroll=unroll)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(B, K, L, H, P)
+
+    y = (y_intra + y_inter).reshape(B, S_p, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(h, x_t, loga_t, b_t, c_t):
+    """Single decode step. h: (B,H,N,P); x_t: (B,H,P); loga/b/c per-token."""
+    a = jnp.exp(loga_t.astype(jnp.float32))  # (B,H)
+    h = a[..., None, None] * h + jnp.einsum("bhn,bhp->bhnp", b_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.float32), h)
+    return y.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_heads(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_inner // MAMBA_HEAD_DIM)
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    h = mamba_heads(cfg)
+    w = cfg.conv_width
+    return {
+        "wz": ParamDef((d, di), ("fsdp", "tp"), nrm()),
+        "wx": ParamDef((d, di), ("fsdp", "tp"), nrm()),
+        "wb": ParamDef((d, n), ("fsdp", None), nrm()),
+        "wc": ParamDef((d, n), ("fsdp", None), nrm()),
+        "wdt": ParamDef((d, h), ("fsdp", "tp"), nrm()),
+        "dt_bias": ParamDef((h,), ("tp",), uniform_init(-4.0, -1.0)),
+        "a_log": ParamDef((h,), ("tp",), uniform_init(0.0, 1.3)),  # A ∈ [1, e^1.3]
+        "d_skip": ParamDef((h,), ("tp",), ones_init),
+        "conv_x": ParamDef((w, di), (None, "tp"), nrm(fan_in_axis=0)),
+        "conv_b": ParamDef((w, n), (None, None), nrm(fan_in_axis=0)),
+        "conv_c": ParamDef((w, n), (None, None), nrm(fan_in_axis=0)),
+        "gate_norm": norm_def(di),
+        "wo": ParamDef((di, d), ("tp", "fsdp"), nrm()),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C); kernel: (W,C); state: (B,W-1,C)."""
+    w = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * kernel[i][None, None, :] for i in range(w))
+    new_state = xp[:, x.shape[1] :]  # last W-1 inputs
+    return out, new_state
+
+
+def _mamba_gates(cfg, params, xin, dt_raw):
+    """Shared between full & step: per-head decay and dt."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative
+    loga = dt * a  # (..., H) log decay ≤ 0
+    return dt, loga
+
+
+def mamba_apply_full(cfg: ModelConfig, params, x, rules, chunk=DEFAULT_CHUNK, return_state=False, unroll=False):
+    """x: (B, S, D)."""
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    H, P, N = mamba_heads(cfg), MAMBA_HEAD_DIM, cfg.d_state
+
+    z = x @ params["wz"].astype(dt_)
+    xin = x @ params["wx"].astype(dt_)
+    bmat = x @ params["wb"].astype(dt_)
+    cmat = x @ params["wc"].astype(dt_)
+    dt_raw = x @ params["wdt"].astype(dt_)
+
+    xin, _ = _causal_conv(xin, params["conv_x"].astype(dt_))
+    bmat, _ = _causal_conv(bmat, params["conv_b"].astype(dt_))
+    cmat, _ = _causal_conv(cmat, params["conv_c"].astype(dt_))
+    xin, bmat, cmat = jax.nn.silu(xin), jax.nn.silu(bmat), jax.nn.silu(cmat)
+
+    dt, loga = _mamba_gates(cfg, params, xin, dt_raw)  # (B,S,H)
+    xh = xin.reshape(B, S, H, P)
+    xh = shard_constraint(xh, rules, ("batch", None, "tp", None))
+    bh = jnp.broadcast_to(bmat[:, :, None, :], (B, S, H, N)) * dt[..., None]
+    ch = jnp.broadcast_to(cmat[:, :, None, :], (B, S, H, N))
+
+    y, h_final = chunked_ssd(xh, loga, bh.astype(dt_), ch.astype(dt_), chunk=chunk, unroll=unroll)
+    y = y + params["d_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(B, S, H * P)
+    y = rms_norm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["wo"].astype(dt_)
+    if return_state:
+        return out, h_final
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, P, N = mamba_heads(cfg), MAMBA_HEAD_DIM, cfg.d_state
+    w = cfg.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, N), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, N), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_cache_axes() -> dict:
+    return {
+        "conv_x": ("batch", None, "tp"),
+        "conv_b": ("batch", None, None),
+        "conv_c": ("batch", None, None),
+        "ssm": ("batch", "tp", None, None),
+    }
+
+
+def mamba_apply_step(cfg: ModelConfig, params, cache, x, rules):
+    """x: (B, 1, D) → (y (B,1,D), new cache)."""
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    H, P, N = mamba_heads(cfg), MAMBA_HEAD_DIM, cfg.d_state
+
+    z = x @ params["wz"].astype(dt_)
+    xin = x @ params["wx"].astype(dt_)
+    bmat = x @ params["wb"].astype(dt_)
+    cmat = x @ params["wc"].astype(dt_)
+    dt_raw = x @ params["wdt"].astype(dt_)
+
+    xin, cs_x = _causal_conv(xin, params["conv_x"].astype(dt_), cache["conv_x"])
+    bmat, cs_b = _causal_conv(bmat, params["conv_b"].astype(dt_), cache["conv_b"])
+    cmat, cs_c = _causal_conv(cmat, params["conv_c"].astype(dt_), cache["conv_c"])
+    xin, bmat, cmat = jax.nn.silu(xin), jax.nn.silu(bmat), jax.nn.silu(cmat)
+
+    dt, loga = _mamba_gates(cfg, params, xin, dt_raw)  # (B,1,H)
+    xh = xin.reshape(B, H, P)
+    bh = jnp.broadcast_to(bmat[:, 0, None, :], (B, H, N)) * dt[:, 0, :, None]
+    ch = jnp.broadcast_to(cmat[:, 0, None, :], (B, H, N))
+
+    y, h_new = ssd_step(cache["ssm"], xh, loga[:, 0], bh, ch)
+    y = y + params["d_skip"].astype(dt_)[None, :, None] * xh
+    y = y.reshape(B, 1, H * P)
+    y = rms_norm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["wo"].astype(dt_)
+    new_cache = {"conv_x": cs_x, "conv_b": cs_b, "conv_c": cs_c, "ssm": h_new}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM matrix memory) — reuses chunked_ssd
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = cfg.head_dim_
+    di = H * hd
+    return {
+        "mixer_norm": norm_def(d),
+        "wq": ParamDef((d, H, hd), ("fsdp", "tp", None), nrm()),
+        "wk": ParamDef((d, H, hd), ("fsdp", "tp", None), nrm()),
+        "wv": ParamDef((d, H, hd), ("fsdp", "tp", None), nrm()),
+        "wi": ParamDef((d, H), ("fsdp", "tp"), nrm()),
+        "wf": ParamDef((d, H), ("fsdp", "tp"), nrm()),
+        "bi": ParamDef((H,), ("tp",), zeros_init),
+        "bf": ParamDef((H,), ("tp",), const_init(3.0)),  # open forget gates
+        "head_norm": norm_def(di),
+        "wo": ParamDef((di, d), ("tp", "fsdp"), nrm()),
+        # xLSTM projection sub-block (the arch has d_ff = 0)
+        "up_gate": ParamDef((d, 2 * d), ("fsdp", "tp"), nrm()),
+        "up": ParamDef((d, 2 * d), ("fsdp", "tp"), nrm()),
+        "down": ParamDef((2 * d, d), ("tp", "fsdp"), nrm()),
+        "proj_norm": norm_def(d),
+    }
+
+
+def _mlstm_qkv_gates(cfg, params, x):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    x = rms_norm(x, params["mixer_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt_))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt_))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt_))
+    k = k / (k.shape[-1] ** 0.5)
+    i_raw = x @ params["wi"].astype(dt_) + params["bi"].astype(dt_)
+    f_raw = x @ params["wf"].astype(dt_) + params["bf"].astype(dt_)
+    loga = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))  # (B,S,H)
+    igate = jnp.exp(jnp.clip(i_raw.astype(jnp.float32), -10.0, 10.0))
+    return q, k, v, loga, igate
+
+
+def _mlstm_read(y_aug):
+    """Split [values | normalizer] and normalize (xLSTM eq. with n-state)."""
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    return num / jnp.maximum(jnp.abs(den), 1.0)
+
+
+def mlstm_apply_full(cfg: ModelConfig, params, x, rules, chunk=DEFAULT_CHUNK, unroll=False):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim_
+    q, k, v, loga, igate = _mlstm_qkv_gates(cfg, params, x)
+    ones = jnp.ones((B, S, H, 1), dt_)
+    v_aug = jnp.concatenate([v, ones], axis=-1)  # (B,S,H,hd+1)
+    b = k * igate[..., None]
+    y_aug, _ = chunked_ssd(v_aug, loga, b, q, chunk=chunk, unroll=unroll)
+    y = _mlstm_read(y_aug)
+    y = y.reshape(B, S, H * hd)
+    y = rms_norm(y, params["head_norm"], cfg.norm_eps)
+    h = x + (y @ params["wo"].astype(dt_))  # inner residual (mixer)
+    # projection sub-block
+    hn = rms_norm(h, params["proj_norm"], cfg.norm_eps)
+    g = jax.nn.silu(hn @ params["up_gate"].astype(dt_)) * (hn @ params["up"].astype(dt_))
+    return (g @ params["down"].astype(dt_)) + (h - x)  # residual added by caller
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, hd = cfg.num_heads, cfg.head_dim_
+    return {"state": jnp.zeros((batch, H, hd, hd + 1), jnp.float32)}
+
+
+def mlstm_cache_axes() -> dict:
+    return {"state": ("batch", "tp", None, None)}
+
+
+def mlstm_apply_step(cfg: ModelConfig, params, cache, x, rules):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim_
+    q, k, v, loga, igate = _mlstm_qkv_gates(cfg, params, x)  # S=1
+    v_aug = jnp.concatenate([v[:, 0], jnp.ones((B, H, 1), dt_)], axis=-1)
+    b = (k * igate[..., None])[:, 0]
+    # state layout (B,H,N=hd,P=hd+1) matches ssd_step directly
+    y_aug, h_new = ssd_step(cache["state"], v_aug, loga[:, 0], b, q[:, 0])
+    y = _mlstm_read(y_aug)[:, None]  # (B,1,H,hd)
+    y = y.reshape(B, 1, H * hd)
+    y = rms_norm(y, params["head_norm"], cfg.norm_eps)
+    h = x + (y @ params["wo"].astype(dt_))
+    hn = rms_norm(h, params["proj_norm"], cfg.norm_eps)
+    g = jax.nn.silu(hn @ params["up_gate"].astype(dt_)) * (hn @ params["up"].astype(dt_))
+    out = (g @ params["down"].astype(dt_)) + (h - x)
+    return out, {"state": h_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, exponential gating, stabilized) — sequential
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    gate = lambda: ParamDef((d, d), ("fsdp", "tp"), nrm())
+    rec = lambda: ParamDef((H, dh, dh), ("tp", None, None), nrm(fan_in_axis=1))
+    bias = lambda v=0.0: ParamDef((d,), ("tp",), const_init(v))
+    return {
+        "mixer_norm": norm_def(d),
+        "wi": gate(), "wf": gate(), "wz": gate(), "wo": gate(),
+        "ri": rec(), "rf": rec(), "rz": rec(), "ro": rec(),
+        "bi": bias(), "bf": bias(3.0), "bz": bias(), "bo": bias(),
+        "out_norm": norm_def(d),
+        "w_out": ParamDef((d, d), ("tp", "fsdp"), nrm()),
+        "up_gate": ParamDef((d, 2 * d), ("fsdp", "tp"), nrm()),
+        "up": ParamDef((d, 2 * d), ("fsdp", "tp"), nrm()),
+        "down": ParamDef((2 * d, d), ("tp", "fsdp"), nrm()),
+        "proj_norm": norm_def(d),
+    }
+
+
+def _slstm_cell(cfg, params, carry, xg):
+    """carry: (h, c, n, m) each (B, d); xg: pre-computed W·x_t (B, 4d split)."""
+    h, c, n, m = carry
+    H = cfg.num_heads
+    B, d = h.shape
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+
+    def rec(name):
+        return jnp.einsum("bhk,hkj->bhj", hh, params[name].astype(h.dtype)).reshape(B, d)
+
+    xi, xf, xz, xo = xg
+    it = xi + rec("ri") + params["bi"].astype(h.dtype)
+    ft = xf + rec("rf") + params["bf"].astype(h.dtype)
+    zt = jnp.tanh(xz + rec("rz") + params["bz"].astype(h.dtype))
+    ot = jax.nn.sigmoid(xo + rec("ro") + params["bo"].astype(h.dtype))
+
+    it, ft = it.astype(jnp.float32), ft.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * zt.astype(jnp.float32)
+    n_new = f_p * n + i_p
+    h_new = (ot.astype(jnp.float32) * c_new / jnp.maximum(n_new, 1.0)).astype(h.dtype)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply_full(cfg: ModelConfig, params, x, rules, initial=None, return_state=False):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    xn = rms_norm(x, params["mixer_norm"], cfg.norm_eps)
+    xi = xn @ params["wi"].astype(dt_)
+    xf = xn @ params["wf"].astype(dt_)
+    xz = xn @ params["wz"].astype(dt_)
+    xo = xn @ params["wo"].astype(dt_)
+
+    if initial is None:
+        initial = slstm_init_cache(cfg, B, dt_)["state"]
+
+    def step(carry, xs):
+        new = _slstm_cell(cfg, params, carry, xs)
+        return new, new[0]
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (xi, xf, xz, xo))
+    final, hs = jax.lax.scan(step, initial, xs)
+    y = hs.transpose(1, 0, 2)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    h = x + (y @ params["w_out"].astype(dt_))
+    hn = rms_norm(h, params["proj_norm"], cfg.norm_eps)
+    g = jax.nn.silu(hn @ params["up_gate"].astype(dt_)) * (hn @ params["up"].astype(dt_))
+    out = (g @ params["down"].astype(dt_)) + (h - x)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    z32 = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"state": (jnp.zeros((batch, d), dtype), z32(), z32(), z32() - 1e30)}
+
+
+def slstm_cache_axes() -> dict:
+    ax = ("batch", "tp")
+    return {"state": (ax, ax, ax, ax)}
+
+
+def slstm_apply_step(cfg: ModelConfig, params, cache, x, rules):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    xt = rms_norm(x[:, 0], params["mixer_norm"], cfg.norm_eps)
+    xg = tuple(xt @ params[w].astype(dt_) for w in ("wi", "wf", "wz", "wo"))
+    new = _slstm_cell(cfg, params, cache["state"], xg)
+    y = new[0][:, None]
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    h = x + (y @ params["w_out"].astype(dt_))
+    hn = rms_norm(h, params["proj_norm"], cfg.norm_eps)
+    g = jax.nn.silu(hn @ params["up_gate"].astype(dt_)) * (hn @ params["up"].astype(dt_))
+    out = (g @ params["down"].astype(dt_)) + (h - x)
+    return out, {"state": new}

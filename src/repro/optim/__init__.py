@@ -1,0 +1,13 @@
+from repro.optim.adamw import (  # noqa: F401
+    init_opt_state,
+    opt_state_specs,
+    adamw_update,
+    lr_schedule,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    CompressedAllReduce,
+)

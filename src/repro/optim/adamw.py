@@ -1,0 +1,95 @@
+"""AdamW with fp32 moments, global-norm clipping, warmup-cosine schedule.
+
+Optimizer state mirrors the parameter pytree (and therefore its sharding —
+ZeRO-style: every moment tensor lives wherever its parameter shard lives, so
+optimizer memory scales 1/(pod·data·model) like the params do under FSDP+TP).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+def init_opt_state(params, moments_dtype=jnp.float32) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, moments_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def opt_state_specs(param_specs) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "step": P(),
+        "mu": param_specs,
+        "nu": param_specs,
+    }
+
+
+def opt_state_shapes(param_shapes, moments_dtype=jnp.float32) -> dict:
+    f = lambda p: jax.ShapeDtypeStruct(p.shape, moments_dtype)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "mu": jax.tree.map(f, param_shapes),
+        "nu": jax.tree.map(f, param_shapes),
+    }
+
+
+def lr_schedule(run: RunConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(run.warmup_steps, 1), 1.0)
+    total = jnp.maximum(run.total_steps - run.warmup_steps, 1)
+    frac = jnp.clip((step - run.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return run.learning_rate * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw_update(run: RunConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(run, step)
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    b1, b2, eps = run.beta1, run.beta2, run.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype  # moments may be bf16 (run.optimizer_dtype)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g
+        v32 = b2 * v32 + (1 - b2) * jnp.square(g)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + run.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"step": step, "mu": new_m, "nu": new_v}, metrics

@@ -1,0 +1,85 @@
+"""Gradient compression for cross-pod (DCN) all-reduce: int8 + error feedback.
+
+The Hadoop paper's §IV.b.ii bottleneck is scarce cross-rack bandwidth; the
+multi-pod analogue is the DCN hop between pods. Within a pod we all-reduce in
+bf16 over ICI; across pods the heterogeneity-aware coordinator reduces
+*compressed* pod-summaries: per-tensor symmetric int8 quantization with an
+error-feedback residual (Seide et al. / 1-bit-Adam lineage) so the quantizer
+bias does not accumulate in the optimizer.
+
+These utilities are pure-JAX and host-level; `CompressedAllReduce` is used by
+`core.coordinator` for the weighted cross-pod gradient combine.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _is_payload_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+
+
+def compress_tree(tree):
+    return jax.tree.map(lambda x: compress_int8(x), tree)
+
+
+class CompressedAllReduce:
+    """Stateful error-feedback compressor for a fixed gradient pytree.
+
+    Usage per step (per pod):
+        payload = car.encode(pod_grads)        # int8 + scales, residual kept
+        combined = CompressedAllReduce.combine(payloads, weights)
+    """
+
+    def __init__(self):
+        self._residual = None
+
+    def encode(self, grads):
+        if self._residual is None:
+            self._residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+        corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, self._residual)
+        payload = jax.tree.map(compress_int8, corrected)
+        # residual = corrected − dequant(quant(corrected))
+        self._residual = jax.tree.map(
+            lambda qz, c: c - decompress_int8(*qz),
+            payload,
+            corrected,
+            is_leaf=_is_payload_leaf,
+        )
+        return payload
+
+    @staticmethod
+    def combine(payloads: list, weights: Optional[list] = None):
+        """Weighted mean of decoded payloads (the cross-pod reduce)."""
+        if weights is None:
+            weights = [1.0 / len(payloads)] * len(payloads)
+        total = None
+        for payload, w in zip(payloads, weights):
+            dec = jax.tree.map(
+                lambda qz, w=w: decompress_int8(*qz) * w,
+                payload,
+                is_leaf=_is_payload_leaf,
+            )
+            total = dec if total is None else jax.tree.map(jnp.add, total, dec)
+        return total
+
+    def compression_ratio(self, grads) -> float:
+        """Bytes saved vs fp32 (≈4× minus scale overhead)."""
+        n = sum(l.size for l in jax.tree.leaves(grads))
+        return (4.0 * n) / (1.0 * n + 4.0 * len(jax.tree.leaves(grads)))

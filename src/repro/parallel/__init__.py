@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (  # noqa: F401
+    Axes,
+    ShardingRules,
+    logical_spec,
+    shard_constraint,
+)

@@ -1,0 +1,12 @@
+import os
+
+import numpy as np
+import pytest
+
+# keep CPU math deterministic-ish and fast
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,122 @@
+"""Property tests for the paper's placement technique (§IV.b.ii)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (
+    Grain,
+    het_accumulation_schedule,
+    locality_aware_assignment,
+    plan_placement,
+    proportional_counts,
+    uniform_counts,
+)
+from repro.core.topology import Location, Topology
+
+caps_st = st.lists(st.floats(0.01, 100.0), min_size=1, max_size=32)
+
+
+@given(caps_st, st.integers(0, 2000))
+@settings(max_examples=100, deadline=None)
+def test_proportional_counts_conserve_and_bound(caps, total):
+    counts = proportional_counts(caps, total)
+    assert sum(counts) == total
+    assert all(c >= 0 for c in counts)
+    # largest-remainder: each count within 1 of its exact quota
+    s = sum(caps)
+    for c, cap in zip(counts, caps):
+        assert abs(c - cap / s * total) <= 1.0 + 1e-9
+
+
+@given(caps_st, st.integers(1, 500))
+@settings(max_examples=100, deadline=None)
+def test_proportional_counts_monotone(caps, total):
+    counts = proportional_counts(caps, total)
+    order = np.argsort(caps)
+    sorted_counts = [counts[i] for i in order]
+    # counts must be (weakly) increasing with capacity up to the ±1 remainder
+    for a, b in zip(sorted_counts, sorted_counts[1:]):
+        assert b >= a - 1
+
+
+@given(st.integers(1, 20), st.integers(0, 500))
+@settings(max_examples=50, deadline=None)
+def test_uniform_counts_conserve(n, total):
+    counts = uniform_counts(n, total)
+    assert sum(counts) == total
+    assert max(counts) - min(counts) <= 1
+
+
+def _cluster(num_pods=2, nodes=4):
+    topo = Topology(num_pods=num_pods, nodes_per_pod=nodes)
+    return topo, topo.workers()
+
+
+@given(
+    st.integers(2, 3),
+    st.integers(2, 5),
+    st.integers(1, 3),
+    st.integers(10, 120),
+    st.randoms(use_true_random=False),
+)
+@settings(max_examples=40, deadline=None)
+def test_placement_invariants(pods, nodes, r, n_grains, rnd):
+    topo, workers = _cluster(pods, nodes)
+    caps = [0.5 + rnd.random() for _ in workers]
+    grains = [Grain(i, 1 << 20) for i in range(n_grains)]
+    plan = plan_placement(grains, workers, caps, topo, replication=r)
+    for g in grains:
+        reps = plan.replicas[g.gid]
+        # replication factor honored (bounded by cluster size)
+        assert len(reps) == min(r, len(workers))
+        # never two replicas on the same node
+        assert len(set(reps)) == len(reps)
+        # rack-aware: with r ≥ 3 and >1 pod, replicas span ≥ 2 pods
+        if r >= 3 and pods > 1:
+            assert len({w.pod for w in reps}) >= 2
+    # primary distribution ∝ capacity (largest remainder ⇒ within ±1)
+    counts = [len(plan.per_worker[w]) for w in workers]
+    expect = proportional_counts(caps, n_grains)
+    assert counts == expect
+
+
+def test_capacity_proportional_reduces_movement():
+    """The paper's headline claim: placement ∝ capacity cuts cross-node bytes."""
+    topo, workers = _cluster(2, 8)
+    caps = [3.0 if w.pod == 0 else 1.0 for w in workers]  # 3× faster pod
+    grains = [Grain(i, 64 << 20) for i in range(256)]
+    prop = plan_placement(grains, workers, caps, topo, 3, proportional=True)
+    unif = plan_placement(grains, workers, caps, topo, 3, proportional=False)
+    a_prop = locality_aware_assignment(grains, prop, workers, caps, topo)
+    a_unif = locality_aware_assignment(grains, unif, workers, caps, topo)
+    assert a_prop.moved_bytes <= a_unif.moved_bytes
+    # both meet the same capacity share, so makespans match; movement differs
+    assert a_prop.makespan_s <= a_unif.makespan_s * 1.01
+
+
+@given(caps_st.filter(lambda c: len(c) >= 1), st.integers(1, 256))
+@settings(max_examples=100, deadline=None)
+def test_het_schedule_unbiased_weights(caps, total):
+    sched = het_accumulation_schedule(caps, total)
+    assert len(sched.microbatches) == len(caps)
+    assert all(k >= 1 for k in sched.microbatches)  # every pod contributes
+    assert abs(sum(sched.weights) - 1.0) < 1e-9
+    # weights = k_i / Σk ⇒ the combine is the flat average over microbatches
+    tot = sum(sched.microbatches)
+    for k, w in zip(sched.microbatches, sched.weights):
+        assert abs(w - k / tot) < 1e-9
+
+
+def test_het_schedule_equalizes_time():
+    """k_i ∝ c_i ⇒ per-pod virtual time within one grain of equal."""
+    caps = [4.0, 2.0, 1.0, 1.0]
+    sched = het_accumulation_schedule(caps, 32)
+    times = [k / c for k, c in zip(sched.microbatches, caps)]
+    assert max(times) - min(times) <= 1.0 / min(caps) + 1e-9
+    # vs stock-Hadoop homogeneous split: strictly worse makespan
+    homo = het_accumulation_schedule([1.0] * 4, 32)
+    homo_time = max(k / c for k, c in zip(homo.microbatches, caps))
+    assert max(times) < homo_time

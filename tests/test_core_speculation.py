@@ -1,0 +1,80 @@
+"""Speculative-execution policy behaviour in the het-cluster simulator —
+the paper's §III.b claims (after Zaharia et al. [12])."""
+
+import pytest
+
+from repro.core.placement import Grain, plan_placement
+from repro.core.simulator import SimCluster, SimWorker
+from repro.core.topology import Topology
+
+
+def _setup(het=True, straggler=True, shuffle_frac=0.35, n_grains=64,
+           cross_bw=2e9, nbytes=8 << 30):
+    topo = Topology(num_pods=2, nodes_per_pod=8, in_pod_bw=50e9, cross_pod_bw=cross_bw)
+    workers = [
+        SimWorker(loc, 1.0 if (loc.pod == 0 or not het) else 0.4)
+        for loc in topo.workers()
+    ]
+    if straggler:
+        workers[3].slow_at, workers[3].slow_factor = 10.0, 0.05
+    grains = [
+        Grain(g, nbytes=nbytes, work=20.0, remote_input=(g >= n_grains * (1 - shuffle_frac)))
+        for g in range(n_grains)
+    ]
+    caps = [w.rate for w in workers]
+    plan = plan_placement(grains, [w.loc for w in workers], caps, topo, 3)
+    return topo, workers, grains, plan
+
+
+def _run(pol, **kw):
+    topo, workers, grains, plan = _setup(**kw)
+    return SimCluster(workers, topo).run_job(grains, plan, policy=pol)
+
+
+def test_all_policies_complete_everything():
+    for pol in ("off", "naive", "late"):
+        r = _run(pol)
+        assert r.completed == 64, pol
+
+
+def test_late_rescues_stragglers():
+    off, late = _run("off"), _run("late")
+    assert late.makespan < off.makespan * 0.8  # straggler rescued
+
+
+def test_late_beats_naive_under_heterogeneity():
+    naive, late = _run("naive"), _run("late")
+    assert late.makespan <= naive.makespan
+    # naive mis-selects: most of its backups lose; LATE's win rate is higher
+    naive_rate = naive.n_spec_won / max(naive.n_speculative, 1)
+    late_rate = late.n_spec_won / max(late.n_speculative, 1)
+    assert late_rate >= naive_rate
+
+
+def test_naive_wastes_more_work():
+    naive, late = _run("naive"), _run("late")
+    assert naive.n_speculative > late.n_speculative or naive.wasted_work >= late.wasted_work
+
+
+def test_speculation_harmless_in_homogeneous_cluster():
+    """The homogeneity assumption the paper says stock Hadoop makes: in a
+    truly homogeneous cluster (no stragglers) speculation changes little."""
+    off = _run("off", het=False, straggler=False)
+    naive = _run("naive", het=False, straggler=False)
+    assert abs(naive.makespan - off.makespan) / off.makespan < 0.15
+
+
+def test_failure_requeues_tasks():
+    topo, workers, grains, plan = _setup()
+    workers[1].fail_at = 30.0
+    sim = SimCluster(workers, topo, dead_after_s=60.0)
+    r = sim.run_job(grains, plan, policy="late")
+    assert r.completed == 64
+    assert r.reassigned_after_failure >= 0  # tasks on w1 re-queued after pronounce
+
+
+def test_congestion_model_shares_pipe():
+    """Doubling cross-pod bandwidth must cut shuffle-bound makespan."""
+    slow = _run("off", cross_bw=1e9, straggler=False)
+    fast = _run("off", cross_bw=8e9, straggler=False)
+    assert fast.makespan < slow.makespan

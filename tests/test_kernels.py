@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment requirement c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _arr(rng, *shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+FLASH_CASES = [
+    # (B, Sq, Sk, H, KH, D, window, q_offset, bq, bk)
+    (2, 128, 128, 4, 2, 64, 0, 0, 64, 64),
+    (1, 100, 256, 8, 8, 128, 0, 156, 64, 64),  # ragged + offset (prefill tail)
+    (2, 256, 256, 6, 2, 64, 64, 0, 64, 64),  # sliding window
+    (1, 64, 64, 2, 1, 256, 0, 0, 32, 32),  # big head dim
+    (1, 33, 65, 4, 4, 64, 0, 0, 32, 32),  # non-divisible seq (padding)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype, rng):
+    B, Sq, Sk, H, KH, D, win, off, bq, bk = case
+    q = _arr(rng, B, Sq, H, D, dtype=dtype)
+    k = _arr(rng, B, Sk, KH, D, dtype=dtype)
+    v = _arr(rng, B, Sk, KH, D, dtype=dtype)
+    out = ops.flash_attention(q, k, v, True, off, win, None, bq, bk, True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=win, q_offset=off)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(out.astype(jnp.float32) - exp.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_grad_matches_ref(rng):
+    q = _arr(rng, 1, 64, 4, 64)
+    k = _arr(rng, 1, 64, 2, 64)
+    v = _arr(rng, 1, 64, 2, 64)
+
+    def f_kernel(q, k, v):
+        return ops.flash_attention(q, k, v, True, 0, 0, None, 32, 32, True).sum()
+
+    def f_ref(q, k, v):
+        return ref.flash_attention_ref(q, k, v).astype(jnp.float32).sum()
+
+    for g, ge in zip(jax.grad(f_kernel, (0, 1, 2))(q, k, v), jax.grad(f_ref, (0, 1, 2))(q, k, v)):
+        assert float(jnp.abs(g - ge).max()) < 1e-4
+
+
+DECODE_CASES = [
+    (2, 512, 8, 2, 64, 128),
+    (3, 300, 4, 4, 128, 128),  # padding + MHA
+    (1, 1024, 16, 2, 64, 256),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype, rng):
+    B, S, H, KH, D, bk = case
+    q = _arr(rng, B, H, D, dtype=dtype)
+    k = _arr(rng, B, S, KH, D, dtype=dtype)
+    v = _arr(rng, B, S, KH, D, dtype=dtype)
+    valid = jnp.asarray(rng.random((B, S)) > 0.3)
+    out = ops.decode_attention(q, k, v, valid, block_k=bk, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, valid)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.abs(out.astype(jnp.float32) - exp.astype(jnp.float32)).max()) < tol
+
+
+def test_decode_partials_combine(rng):
+    """Shard the cache in two, combine partials, compare to monolithic."""
+    B, S, H, KH, D = 2, 256, 4, 2, 64
+    q = _arr(rng, B, H, D)
+    k = _arr(rng, B, S, KH, D)
+    v = _arr(rng, B, S, KH, D)
+    valid = jnp.ones((B, S), bool)
+    outs, ms, ls = [], [], []
+    for sl in (slice(0, S // 2), slice(S // 2, S)):
+        o, m, l = ops.decode_attention(
+            q, k[:, sl], v[:, sl], valid[:, sl], return_partials=True, interpret=True
+        )
+        outs.append(o), ms.append(m), ls.append(l)
+    combined = ops.combine_decode_partials(outs, ms, ls)
+    exp = ref.decode_attention_ref(q, k, v, valid)
+    assert float(jnp.abs(combined - exp).max()) < 2e-5
+
+
+SSM_CASES = [
+    (2, 512, 4, 128, 64, 128),
+    (1, 256, 2, 64, 32, 64),
+    (2, 128, 8, 128, 16, 128),  # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_matches_ref(case, dtype, rng):
+    B, S, H, P, N, chunk = case
+    x = _arr(rng, B, S, H, P, dtype=dtype)
+    loga = -jnp.abs(_arr(rng, B, S, H)) * 0.1
+    b = _arr(rng, B, S, H, N, dtype=dtype, scale=0.2)
+    c = _arr(rng, B, S, H, N, dtype=dtype, scale=0.2)
+    y, h = ops.ssm_scan(x, loga, b, c, chunk=chunk, interpret=True)
+    ye, he = ref.ssm_scan_ref(x, loga, b, c)
+    tol = 5e-3 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.abs(y.astype(jnp.float32) - ye.astype(jnp.float32)).max()) < tol
+    assert float(jnp.abs(h - he).max()) < tol
+
+
+def test_ssm_scan_state_carry_across_chunks(rng):
+    """Final state from the kernel equals running the recurrence to the end."""
+    B, S, H, P, N = 1, 64, 1, 8, 4
+    x = _arr(rng, B, S, H, P)
+    loga = -jnp.abs(_arr(rng, B, S, H)) * 0.05
+    b = _arr(rng, B, S, H, N, scale=0.3)
+    c = _arr(rng, B, S, H, N, scale=0.3)
+    _, h16 = ops.ssm_scan(x, loga, b, c, chunk=16, interpret=True)
+    _, h64 = ops.ssm_scan(x, loga, b, c, chunk=64, interpret=True)
+    assert float(jnp.abs(h16 - h64).max()) < 1e-4

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, forward + one train step on
+CPU, asserting output shapes and finiteness (assignment requirement f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import RunConfig
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.models.model import FRONTEND_FEATURE_DIM
+from repro.optim import adamw
+
+RUN = RunConfig(
+    remat="none", attention_impl="chunked", attention_chunk=32, ssd_chunk=16,
+    warmup_steps=1, total_steps=10, z_loss=1e-4,
+)
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    f = 8 if cfg.frontend else 0
+    tokens = jax.random.randint(key, (B, S - f), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tokens,
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if f:
+        feat = FRONTEND_FEATURE_DIM[cfg.frontend]
+        batch["prefix_features"] = jax.random.normal(key, (B, f, feat), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = M.forward(cfg, RUN, params, batch["tokens"], None,
+                            batch.get("prefix_features"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    if cfg.num_experts:
+        assert float(aux["moe_aux"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, RUN, None))
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(metrics["loss"]), arch
+    assert np.isfinite(metrics["grad_norm"]), arch
+    assert int(new_opt["step"]) == 1
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, arch
+
+
+def test_exact_param_counts_match_configs():
+    """Full (non-reduced) configs must land near their nameplate sizes."""
+    expected = {
+        "llama3-405b": (400e9, 420e9),
+        "mixtral-8x22b": (135e9, 145e9),  # 8×22B shares attention
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "internlm2-20b": (18e9, 22e9),
+        "qwen3-1.7b": (1.3e9, 2.2e9),
+        "jamba-1.5-large-398b": (330e9, 430e9),
+        # NOTE: the assignment fixes 48 layers; the original Moonlight-16B
+        # has 27, so the assigned config is genuinely ~28B total (active ≈3B
+        # — the "a3b" part — is asserted in test_active_params_moe)
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        # our xLSTM block carries the full projection sub-block (up×2+gate,
+        # down) per layer, heavier than the paper's minimal variant
+        "xlstm-1.3b": (1.8e9, 2.6e9),
+        "musicgen-medium": (1.2e9, 1.9e9),
+        "llava-next-34b": (30e9, 38e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = M.count_params_exact(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_active_params_moe():
+    cfg = get_config("mixtral-8x22b")
+    total = M.count_params_exact(cfg)
+    active = M.count_active_params_exact(cfg)
+    assert active < total / 2  # top-2 of 8 experts
+    dense = get_config("internlm2-1.8b")
+    assert M.count_active_params_exact(dense) == M.count_params_exact(dense)
+
+
+def test_layer_patterns():
+    jamba = get_config("jamba-1.5-large-398b")
+    kinds = [jamba.layer_kind(i) for i in range(jamba.period)]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    assert [jamba.layer_is_moe(i) for i in range(4)] == [False, True, False, True]
+    xl = get_config("xlstm-1.3b")
+    kinds = [xl.layer_kind(i) for i in range(xl.period)]
+    assert kinds.count("slstm") == 1 and kinds.count("mlstm") == 7
+    dense = get_config("internlm2-20b")
+    assert dense.period == 1 and dense.layer_kind(0) == "attn"
+
+
+def test_long_context_applicability():
+    from repro.configs import SHAPES, shape_applicable
+
+    runs = {a: shape_applicable(get_config(a), SHAPES["long_500k"]) for a in ARCH_IDS}
+    assert runs["jamba-1.5-large-398b"] and runs["mixtral-8x22b"] and runs["xlstm-1.3b"]
+    assert sum(runs.values()) == 3  # exactly the sub-quadratic archs
+
+
+def test_all_cells_count():
+    from repro.configs import all_cells
+
+    assert len(all_cells()) == 33  # 40 − 7 inapplicable long-context cells

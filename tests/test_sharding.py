@@ -1,0 +1,86 @@
+"""ShardingRules logical→physical mapping invariants (no mesh required)."""
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.parallel.sharding import ShardingRules
+
+SINGLE = ShardingRules(("data", "model"), (16, 16))
+MULTI = ShardingRules(("pod", "data", "model"), (2, 16, 16))
+
+
+def test_basic_resolution():
+    assert SINGLE.spec(("batch", None), (256, 4096)) == P(("data",), None)
+    assert MULTI.spec(("batch", None), (256, 4096)) == P(("pod", "data"), None)
+    assert SINGLE.spec(("fsdp", "tp"), (4096, 16384)) == P(("data",), "model")
+
+
+def test_divisibility_degrades_to_replication():
+    # batch=1 (long_500k) cannot shard over data
+    assert SINGLE.spec(("batch", None), (1, 8)) == P(None, None)
+    # 24 heads on a 16-way model axis → replicated (musicgen)
+    assert SINGLE.spec((None, "tp", None), (8, 24, 64)) == P(None, None, None)
+    # 8 kv heads on a 16-way model axis likewise → replicated
+    from jax.sharding import PartitionSpec as P2
+    assert SINGLE.spec(("batch", None, "tp", None), (128, 1, 8, 128)) == P2(("data",), None, None, None)
+
+
+def test_no_axis_used_twice():
+    # expert divisible → takes model; moe_tp silently dropped
+    s = SINGLE.spec(("expert", "fsdp", "moe_tp"), (64, 2048, 1408))
+    assert s == P("model", ("data",), None)
+    # expert NOT divisible (mixtral 8e) → replicated; moe_tp picks up model
+    s = SINGLE.spec(("expert", "fsdp", "moe_tp"), (8, 6144, 16384))
+    assert s == P(None, ("data",), "model")
+
+
+def test_fsdp_off():
+    rules = ShardingRules(("data", "model"), (16, 16), fsdp=False)
+    assert rules.spec(("fsdp", "tp"), (4096, 16384)) == P(None, "model")
+
+
+def test_sequence_parallel_toggle():
+    on = SINGLE.spec(("batch", "sp", None), (256, 4096, 8192))
+    off = ShardingRules(("data", "model"), (16, 16), sequence_parallel=False).spec(
+        ("batch", "sp", None), (256, 4096, 8192)
+    )
+    assert on == P(("data",), "model", None)
+    assert off == P(("data",), None, None)
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "mixtral-8x22b", "jamba-1.5-large-398b", "xlstm-1.3b"])
+def test_model_specs_align_with_defs(arch):
+    """Every param gets a spec of matching rank; sharded dims divide evenly."""
+    cfg = get_config(arch)
+    defs = M.model_defs(cfg)
+    specs = M.model_specs(cfg, MULTI)
+    import jax
+
+    from repro.models.common import is_def
+
+    flat_defs = {tuple(p): d for p, d in M._iter_defs(defs)}
+    flat_specs = jax.tree_util.tree_flatten_with_path(specs)[0]
+    assert len(flat_defs) == len(flat_specs)
+    for path, spec in flat_specs:
+        key = tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
+        d = flat_defs[key]
+        assert len(spec) <= len(d.shape)
+        for dim, ax in zip(d.shape, tuple(spec) + (None,) * (len(d.shape) - len(spec))):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = 1
+            for a in axes:
+                size *= MULTI.axis_size(a)
+            assert dim % size == 0, (key, d.shape, spec)
+
+
+def test_llama405b_fits_hbm_when_fully_sharded():
+    """DESIGN.md §3 arithmetic: params+optimizer ≈ 11 GB/chip on 512 chips."""
+    cfg = get_config("llama3-405b")
+    n = M.count_params_exact(cfg)
+    bytes_total = n * (4 + 4 + 4)  # fp32 params + adam m + v
+    per_chip = bytes_total / 512
+    assert per_chip < 16e9 * 0.85  # fits v5e with activation headroom

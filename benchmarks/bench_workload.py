@@ -1,0 +1,82 @@
+"""Claim 7 (multi-job regime, paper §III + survey arXiv:1207.0780): which
+inter-job scheduler a heterogeneous cluster should run.
+
+Sweeps the canonical workload presets (slow/fast pod mix, homogeneous
+control, shuffle-heavy, faulty) over fifo / fair / capacity-weighted slot
+scheduling, several seeds each, and reports seed-mean makespan, p50/p99 job
+latency, and cross-pod traffic. Per-seed outcomes are noisy (<1% either
+way); the claim — and the assertion the acceptance gate checks — is about
+the seed mean: on ``hetero_2pod`` the capacity-weighted scheduler's mean
+makespan must not exceed FIFO's.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import SimCluster
+from repro.core.workload import PRESETS, build_scenario
+
+SCHEDULERS = ("fifo", "fair", "capacity")
+SEEDS = tuple(range(8))
+
+
+def run_preset(preset: str, scheduler: str, seed: int = 0, policy: str = "late"):
+    topo, workers, jobs = build_scenario(preset, seed=seed)
+    t0 = time.perf_counter()
+    res = SimCluster(workers, topo).run_workload(jobs, scheduler=scheduler, policy=policy)
+    us = (time.perf_counter() - t0) * 1e6
+    return jobs, res, us
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def main(smoke: bool = False) -> list[str]:
+    # smoke trims the preset sweep and seed count, not the job count: the
+    # acceptance claim is about the ≥20-job regime, and the simulator is
+    # cheap — it's the JAX sections that --smoke exists to skip
+    presets = ("hetero_2pod",) if smoke else tuple(PRESETS)
+    seeds = SEEDS[:4] if smoke else SEEDS
+    rows: list[str] = []
+    print(f"(seed-mean over {len(seeds)} seeds, ≥20 jobs each)")
+    print(f"{'preset':14s} {'sched':9s} {'jobs':>4s} {'makespan_s':>10s} "
+          f"{'p50_s':>7s} {'p99_s':>7s} {'cross_GB':>9s} {'wasted':>7s}")
+    for preset in presets:
+        mean_makespan: dict[str, float] = {}
+        for sched in SCHEDULERS:
+            ms, p50s, p99s, crosses, wasteds, uss, n_jobs = [], [], [], [], [], [], 0
+            for seed in seeds:
+                jobs, res, us = run_preset(preset, sched, seed=seed)
+                total = sum(len(j.grains) for j in jobs)
+                assert res.completed == total, (preset, sched, seed, res.completed, total)
+                n_jobs = len(jobs)
+                ms.append(res.makespan)
+                p50s.append(res.latency_quantile(0.5))
+                p99s.append(res.latency_quantile(0.99))
+                crosses.append(res.cross_pod_bytes / 1e9)
+                wasteds.append(res.wasted_work)
+                uss.append(us)
+            mean_makespan[sched] = _mean(ms)
+            print(f"{preset:14s} {sched:9s} {n_jobs:4d} {_mean(ms):10.1f} "
+                  f"{_mean(p50s):7.1f} {_mean(p99s):7.1f} {_mean(crosses):9.1f} "
+                  f"{_mean(wasteds):7.2f}")
+            rows.append(
+                f"workload/{preset}/{sched},{_mean(uss):.0f},makespan={_mean(ms):.1f}s"
+                f";p50={_mean(p50s):.1f}s;p99={_mean(p99s):.1f}s"
+                f";cross_GB={_mean(crosses):.1f}"
+                f";vs_fifo={_mean(ms)/mean_makespan['fifo']:.3f}"
+            )
+        # the paper-level takeaway on the het preset, asserted so the bench
+        # fails loudly if a refactor regresses it
+        if preset == "hetero_2pod":
+            assert mean_makespan["capacity"] <= mean_makespan["fifo"], (
+                "capacity-weighted regressed vs FIFO on seed-mean makespan: "
+                f"{mean_makespan['capacity']:.1f} > {mean_makespan['fifo']:.1f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -3,24 +3,32 @@
 Prints a ``name,us_per_call,derived`` CSV block at the end, per the repo
 convention. The dry-run/roofline section reads whatever cells exist under
 results/dryrun (produced by `python -m repro.launch.dryrun --all`).
+
+``--smoke`` runs the fast policy-level sections only (no JAX kernel
+compiles, reduced workload sizes) — the path scripts/verify.sh gates on.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    args = argparse.ArgumentParser(description=__doc__)
+    args.add_argument("--smoke", action="store_true",
+                      help="fast subset: simulator/analytic claims only")
+    opts = args.parse_args(argv)
+
     from benchmarks import (
         bench_heartbeat,
-        bench_kernels,
         bench_namespace,
         bench_placement,
         bench_replication,
         bench_speculation,
         bench_tuning,
-        roofline,
+        bench_workload,
     )
 
     sections = [
@@ -30,9 +38,18 @@ def main() -> None:
         ("claim4: namespace limits", bench_namespace.main),
         ("claim5: task-size tuning", bench_tuning.main),
         ("claim6: heartbeat throughput", bench_heartbeat.main),
-        ("kernels (interpret mode)", bench_kernels.main),
-        ("roofline (from dry-run artifacts)", roofline.main),
+        ("claim7: multi-job scheduling on het clusters",
+         lambda: bench_workload.main(smoke=opts.smoke)),
     ]
+    if not opts.smoke:
+        # imported lazily: these pull in jax/repro.kernels at module level,
+        # which the smoke gate must not depend on (or pay the import for)
+        from benchmarks import bench_kernels, roofline
+
+        sections += [
+            ("kernels (interpret mode)", bench_kernels.main),
+            ("roofline (from dry-run artifacts)", roofline.main),
+        ]
     csv_rows: list[str] = ["name,us_per_call,derived"]
     failures = 0
     for title, fn in sections:

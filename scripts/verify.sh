@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (documented in ROADMAP.md §Tier-1 verify).
+#
+#   bash scripts/verify.sh          # fast tier + benchmark smoke path
+#   VERIFY_FULL=1 bash scripts/verify.sh   # also run the `slow` JAX tier
+#
+# Works offline: test deps (hypothesis, pytest-timeout) are installed when a
+# wheel source is reachable, otherwise the suite falls back to the seeded
+# shim in tests/_hypothesis_compat.py and runs without per-test timeouts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== [1/3] test deps (best-effort) =="
+if python -m pip install -q hypothesis pytest-timeout 2>/dev/null; then
+    echo "installed hypothesis + pytest-timeout"
+else
+    echo "offline: hypothesis -> tests/_hypothesis_compat.py shim; no per-test timeout plugin"
+fi
+
+# plain string, not an array: empty-array expansion under `set -u` aborts
+# on bash < 4.4
+TIMEOUT_ARGS=""
+if python -c "import pytest_timeout" 2>/dev/null; then
+    TIMEOUT_ARGS="--timeout=120"
+fi
+
+echo "== [2/3] fast tier (pytest.ini deselects @slow) =="
+# shellcheck disable=SC2086
+python -m pytest -x -q $TIMEOUT_ARGS
+
+if [[ "${VERIFY_FULL:-0}" == "1" ]]; then
+    echo "== [2b/3] slow tier (JAX-compile-heavy) =="
+    # shellcheck disable=SC2086
+    python -m pytest -q -m slow $TIMEOUT_ARGS
+fi
+
+echo "== [3/3] benchmark smoke path =="
+PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
+
+echo "verify: OK"

@@ -10,6 +10,8 @@ replication — §IV.c.i replica maintenance + erasure-striping trade-off
 namespace   — §IV.d.i name-node byte-accounting + sharded scaling fix
 tuning      — §IV.b.i task-count / block-size rules of thumb
 coordinator — jobtracker analogue: het-DP training step end to end
+scheduler   — inter-job slot schedulers (fifo | fair | capacity-weighted)
+workload    — seeded multi-job scenario generator + canonical presets
 """
 
 from repro.core.capacity import CapacityEstimator, NodeProfile, PodProfile  # noqa: F401
@@ -26,6 +28,21 @@ from repro.core.placement import (  # noqa: F401
     uniform_counts,
 )
 from repro.core.replication import ReplicaManager, StripingScheme  # noqa: F401
-from repro.core.simulator import SimCluster, SimWorker, POLICIES  # noqa: F401
+from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    POLICIES,
+    SimCluster,
+    SimJob,
+    SimWorker,
+    WorkloadResult,
+)
+from repro.core.workload import (  # noqa: F401
+    PRESETS,
+    ClusterSpec,
+    WorkloadSpec,
+    build_cluster,
+    build_scenario,
+    generate_workload,
+)
 from repro.core.topology import Location, Topology  # noqa: F401
 from repro.core.tuning import TuningInput, tune  # noqa: F401

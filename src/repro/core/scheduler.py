@@ -1,0 +1,101 @@
+"""Inter-job slot schedulers for the multi-job simulator (paper §III / [13]).
+
+Hadoop's jobtracker hands a freed tasktracker slot to some job's task queue;
+*which* job gets the slot is the scheduling policy the related survey
+(arXiv:1207.0780) catalogues. Three are modelled here:
+
+fifo      — stock Hadoop: oldest submitted job with pending tasks wins. Big
+            head-of-line jobs starve everything behind them, and every job
+            pays its own straggler tail serially.
+fair      — max-min fair share over *slots* (the Facebook fair scheduler):
+            the freed slot goes to the job currently holding the fewest
+            slots. Note this counts slots, not speed — on a heterogeneous
+            cluster two jobs with equal slot counts can hold very unequal
+            compute, the same homogeneity assumption the paper critiques.
+capacity  — the paper's §IV.b.ii "fragments ∝ speed" rule lifted to the job
+            level: the currency is *measured capacity* (sum of the rates of
+            the workers a job occupies), not slot count, and each freed
+            worker goes to the job with the largest remaining-work-per-
+            allocated-capacity deficit. This approximates largest-remaining-
+            processing-time sharing, which shrinks workload makespan on
+            slow/fast pod mixes (no giant job is left to tail out alone on
+            the slow pod).
+
+The engine (simulator.run_workload) calls ``select`` every time a worker
+frees, passing a snapshot of all arrived jobs that still have pending tasks.
+Schedulers are stateless between calls; everything they need is in the views,
+which keeps replays bit-deterministic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class JobView:
+    """What a scheduler may see about one runnable job at decision time."""
+
+    job_id: int
+    submit_t: float
+    n_pending: int  # tasks not yet launched (excl. running/done)
+    n_running: int  # live (non-killed, non-done) attempts holding slots
+    remaining_work: float  # total work minus completed tasks' work
+    alloc_capacity: float  # Σ rate of the workers this job occupies now
+
+
+class JobScheduler:
+    """Pick which job's queue a freed worker pulls from."""
+
+    name = "base"
+
+    def select(self, t: float, jobs: list[JobView], worker) -> int:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{type(self).__name__} {self.name}>"
+
+
+class FifoScheduler(JobScheduler):
+    """Stock Hadoop: strict arrival order (ties broken by job id)."""
+
+    name = "fifo"
+
+    def select(self, t, jobs, worker):
+        return min(jobs, key=lambda j: (j.submit_t, j.job_id)).job_id
+
+
+class FairScheduler(JobScheduler):
+    """Max-min fair share over slots: feed the job holding the fewest."""
+
+    name = "fair"
+
+    def select(self, t, jobs, worker):
+        return min(jobs, key=lambda j: (j.n_running, j.submit_t, j.job_id)).job_id
+
+
+class CapacityWeightedScheduler(JobScheduler):
+    """Capacity-weighted deficit: feed the job whose remaining work is
+    largest relative to the measured capacity already serving it (counting
+    the candidate worker's own rate, so a fast slot prefers the job it can
+    help most). Heterogeneity-aware by construction — a slot on a 0.4×
+    node counts for 0.4, not 1."""
+
+    name = "capacity"
+
+    def select(self, t, jobs, worker):
+        wrate = worker.rate_at(t)
+
+        def deficit(j: JobView) -> float:
+            return j.remaining_work / max(j.alloc_capacity + wrate, 1e-9)
+
+        # max deficit; ties go to the earliest-submitted job
+        return max(jobs, key=lambda j: (deficit(j), -j.submit_t, -j.job_id)).job_id
+
+
+SCHEDULERS: dict[str, Callable[[], JobScheduler]] = {
+    "fifo": FifoScheduler,
+    "fair": FairScheduler,
+    "capacity": CapacityWeightedScheduler,
+}

@@ -17,8 +17,14 @@ Model:
     the coarse progress signal is what misleads the naive heuristic.
   * speculative execution policies: off | naive (stock Hadoop) | late
   * heartbeat-based liveness: dead after ``dead_after_s`` → re-queue tasks.
+  * **multi-job workloads**: ``run_workload`` replays a queue of jobs with
+    arrival times through a pluggable inter-job slot scheduler
+    (core/scheduler.py: fifo | fair | capacity); ``run_job`` is the
+    single-job special case. All engine state is keyed by
+    ``(job_id, task_id)`` so jobs contend for the same slots and the same
+    cross-pod pipe — the regime the paper's jobtracker critique is about.
 
-Outputs per job: makespan, wasted (killed-backup) work, bytes moved,
+Outputs per job: makespan/latency, wasted (killed-backup) work, bytes moved,
 per-worker utilization — the quantities the paper's §IV discusses.
 """
 
@@ -27,9 +33,10 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Union
 
 from repro.core.placement import Grain, PlacementPlan
+from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView
 from repro.core.topology import Location, Topology
 
 FETCH_PHASE_FRACTION = 1.0 / 3.0  # Hadoop copy-phase share of task progress
@@ -52,6 +59,24 @@ class SimWorker:
         return self.fail_at is None or t < self.fail_at
 
 
+@dataclass(frozen=True)
+class SimJob:
+    """One job in a workload: its grains, their placement, and arrival time."""
+
+    job_id: int
+    grains: tuple[Grain, ...]
+    plan: PlacementPlan
+    submit_t: float = 0.0
+
+    @property
+    def total_work(self) -> float:
+        return sum(g.work for g in self.grains)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(g.nbytes for g in self.grains)
+
+
 @dataclass
 class Attempt:
     task: int
@@ -61,12 +86,17 @@ class Attempt:
     compute_s: float  # compute duration once fetch completes
     work: float = 0.0  # unit work (re-rated when compute actually starts)
     speculative: bool = False
+    job: int = 0
     # runtime state
     fetched: float = 0.0
     compute_start: Optional[float] = None
     done: bool = False
     killed: bool = False
     finish_t: Optional[float] = None
+
+    @property
+    def key(self) -> tuple[int, int]:
+        return (self.job, self.task)
 
     def progress(self, t: float) -> float:
         if self.done:
@@ -96,11 +126,74 @@ class SimResult:
     util: dict[str, float]
 
 
+@dataclass
+class JobResult:
+    """Per-job outcome inside a workload run."""
+
+    job_id: int
+    submit_t: float
+    first_launch_t: float
+    finish_t: float
+    n_tasks: int
+    completed: int
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-finish (the user-visible job completion time)."""
+        return self.finish_t - self.submit_t
+
+    @property
+    def queue_delay(self) -> float:
+        return self.first_launch_t - self.submit_t
+
+
+@dataclass
+class WorkloadResult:
+    scheduler: str
+    policy: str
+    makespan: float  # last task completion over the whole workload
+    jobs: list[JobResult]
+    wasted_work: float
+    moved_bytes: float
+    cross_pod_bytes: float
+    n_speculative: int
+    n_spec_won: int
+    completed: int
+    reassigned_after_failure: int
+    util: dict[str, float]
+
+    def latencies(self) -> list[float]:
+        return sorted(j.latency for j in self.jobs if j.finish_t >= 0)
+
+    def latency_quantile(self, q: float) -> float:
+        lats = self.latencies()
+        if not lats:
+            return float("nan")
+        idx = min(len(lats) - 1, max(0, math.ceil(q * len(lats)) - 1))
+        return lats[idx]
+
+    @property
+    def mean_latency(self) -> float:
+        lats = self.latencies()
+        return sum(lats) / len(lats) if lats else float("nan")
+
+
 class SpeculationPolicy:
     name = "off"
 
-    def pick(self, t, running: list[Attempt], free_worker: SimWorker, sim) -> Optional[int]:
+    def pick(
+        self, t, running: list[Attempt], free_worker: SimWorker, sim
+    ) -> Optional[tuple[int, int]]:
+        """Return the (job_id, task_id) to back up, or None."""
         return None
+
+    def observable(self, t: float, a: Attempt, sim) -> bool:
+        """Hadoop's speculative lag, scaled to the model: the jobtracker
+        only sees progress via heartbeats, so an attempt is not judgeable
+        until a couple of reports have arrived. Also guards the degenerate
+        rate≈0 of an attempt launched earlier in the same scheduling wave,
+        which would otherwise rank as the slowest task in the cluster."""
+        return t - a.start >= 2.0 * sim.heartbeat_s
 
 
 class NaiveSpeculation(SpeculationPolicy):
@@ -115,11 +208,21 @@ class NaiveSpeculation(SpeculationPolicy):
     def pick(self, t, running, free_worker, sim):
         if not running:
             return None
-        allp = [a.progress(t) for a in sim._attempts if not a.killed]
-        mean_p = sum(allp) / max(len(allp), 1)
+        # the published heuristic is per-job: mean progress over all of THE
+        # JOB's attempts (completed ones at 1.0 drag it up — the misfire)
+        mean_by_job: dict[int, float] = {}
         for a in running:
-            if a.progress(t) < mean_p - self.threshold and not sim.has_backup(a.task):
-                return a.task
+            if a.job in mean_by_job:
+                continue
+            ps = [x.progress(t) for x in sim._attempts if x.job == a.job and not x.killed]
+            mean_by_job[a.job] = sum(ps) / max(len(ps), 1)
+        for a in running:
+            if (
+                self.observable(t, a, sim)
+                and a.progress(t) < mean_by_job[a.job] - self.threshold
+                and not sim.has_backup(a.job, a.task)
+            ):
+                return a.key
         return None
 
 
@@ -141,7 +244,9 @@ class LateSpeculation(SpeculationPolicy):
             return None
         cands = [
             a for a in running
-            if not sim.has_backup(a.task)
+            if self.observable(t, a, sim)
+            and a.progress(t) < 1.0 - 1e-12  # done-but-unreported ≠ straggler
+            and not sim.has_backup(a.job, a.task)
             and (a.fetch_bytes == 0 or a.compute_start is not None)
         ]
         if not cands:
@@ -149,7 +254,7 @@ class LateSpeculation(SpeculationPolicy):
         cands.sort(key=lambda a: a.rate(t))
         cands = cands[: max(1, int(len(cands) * self.slow_task_quantile))]
         best = max(cands, key=lambda a: (1 - a.progress(t)) / max(a.rate(t), 1e-9))
-        return best.task
+        return best.key
 
 
 POLICIES: dict[str, Callable[[], SpeculationPolicy]] = {
@@ -197,6 +302,34 @@ class _SharedPipe:
         return self.last_t + max(rem, 0.0) / share + 1e-9
 
 
+class _JobRun:
+    """Mutable per-job engine state (pending/done/attempt bookkeeping)."""
+
+    __slots__ = (
+        "job", "gmap", "pending", "done", "attempts_of", "total_work",
+        "done_work", "first_launch_t", "finish_t", "arrived",
+    )
+
+    def __init__(self, job: SimJob):
+        self.job = job
+        self.gmap = {g.gid: g for g in job.grains}
+        self.pending: list[int] = [g.gid for g in job.grains]
+        self.done: set[int] = set()
+        self.attempts_of: dict[int, list[Attempt]] = {}
+        self.total_work = job.total_work  # cached: read per free worker per event
+        self.done_work = 0.0
+        self.first_launch_t = -1.0
+        self.finish_t = -1.0
+        self.arrived = False
+
+    @property
+    def remaining_work(self) -> float:
+        return self.total_work - self.done_work
+
+    def finished(self) -> bool:
+        return len(self.done) == len(self.gmap)
+
+
 class SimCluster:
     def __init__(
         self,
@@ -213,9 +346,9 @@ class SimCluster:
         self._attempts: list[Attempt] = []
 
     # ------------------------------------------------------------------
-    def has_backup(self, task: int) -> bool:
+    def has_backup(self, job: int, task: int) -> bool:
         return any(
-            a.task == task and a.speculative and not a.done and not a.killed
+            a.job == job and a.task == task and a.speculative and not a.done and not a.killed
             for a in self._attempts
         )
 
@@ -230,12 +363,46 @@ class SimCluster:
         policy: str = "late",
         congestion: bool = True,
     ) -> SimResult:
+        """Single-job replay — thin wrapper over :meth:`run_workload`."""
+        job = SimJob(job_id=0, grains=tuple(grains), plan=plan, submit_t=0.0)
+        wr = self.run_workload([job], scheduler="fifo", policy=policy, congestion=congestion)
+        return SimResult(
+            makespan=wr.makespan,
+            wasted_work=wr.wasted_work,
+            moved_bytes=wr.moved_bytes,
+            cross_pod_bytes=wr.cross_pod_bytes,
+            n_speculative=wr.n_speculative,
+            n_spec_won=wr.n_spec_won,
+            completed=wr.completed,
+            reassigned_after_failure=wr.reassigned_after_failure,
+            util=wr.util,
+        )
+
+    # ------------------------------------------------------------------
+    def run_workload(
+        self,
+        jobs: Sequence[SimJob],
+        scheduler: Union[str, JobScheduler] = "fifo",
+        policy: str = "late",
+        congestion: bool = True,
+    ) -> WorkloadResult:
+        """Replay a multi-job workload through a pluggable slot scheduler.
+
+        Every time a worker frees, the ``scheduler`` decides which *job* the
+        slot serves next (core/scheduler.py); within that job the locality-
+        first rule picks the grain. Speculation (``policy``) kicks in only
+        when no arrived job has pending work — exactly Hadoop's behaviour of
+        backing up stragglers with otherwise-idle slots.
+        """
+        sched = SCHEDULERS[scheduler]() if isinstance(scheduler, str) else scheduler
         pol = POLICIES[policy]()
         self._attempts = []
-        gmap = {g.gid: g for g in grains}
-        pending = [g.gid for g in grains]
-        done: set[int] = set()
-        attempts_of: dict[int, list[Attempt]] = {}
+        jrs: dict[int, _JobRun] = {}
+        for job in jobs:
+            if job.job_id in jrs:
+                raise ValueError(f"duplicate job_id {job.job_id}")
+            jrs[job.job_id] = _JobRun(job)
+        total_tasks = sum(len(jr.gmap) for jr in jrs.values())
         pipe = _SharedPipe(self.topo.cross_pod_bw)
         moved = cross = wasted = 0.0
         n_spec = n_spec_won = reassigned = 0
@@ -262,10 +429,10 @@ class SimCluster:
                 next_check[0] = nf
                 push(nf, "pipe_check", None)
 
-        def fetch_plan(w: SimWorker, gid: int) -> tuple[float, float, int]:
+        def fetch_plan(jr: _JobRun, w: SimWorker, gid: int) -> tuple[float, float, int]:
             """(pipe_bytes, fixed_fetch_s, distance) for gid on w."""
-            g = gmap[gid]
-            reps = plan.replicas[gid]
+            g = jr.gmap[gid]
+            reps = jr.job.plan.replicas[gid]
             src = min(reps, key=lambda r: self.topo.distance(r, w.loc))
             dist = self.topo.distance(src, w.loc)
             if g.remote_input:
@@ -276,22 +443,25 @@ class SimCluster:
                 return 0.0, g.nbytes / self.topo.in_pod_bw, 1
             return (g.nbytes, 0.0, 2) if congestion else (0.0, g.nbytes / self.topo.cross_pod_bw, 2)
 
-        def launch(wloc: Location, gid: int, t: float, speculative: bool) -> None:
+        def launch(wloc: Location, jid: int, gid: int, t: float, speculative: bool) -> None:
             nonlocal moved, cross, n_spec
+            jr = jrs[jid]
             w = self.workers[wloc]
-            pipe_bytes, fixed_s, dist = fetch_plan(w, gid)
-            compute_s = gmap[gid].work / max(w.rate_at(t), 1e-9)
+            pipe_bytes, fixed_s, dist = fetch_plan(jr, w, gid)
+            compute_s = jr.gmap[gid].work / max(w.rate_at(t), 1e-9)
             a = Attempt(gid, wloc, t, pipe_bytes, compute_s,
-                        work=gmap[gid].work, speculative=speculative)
+                        work=jr.gmap[gid].work, speculative=speculative, job=jid)
             self._attempts.append(a)
-            attempts_of.setdefault(gid, []).append(a)
+            jr.attempts_of.setdefault(gid, []).append(a)
+            if jr.first_launch_t < 0:
+                jr.first_launch_t = t
             busy[wloc] = a
             if speculative:
                 n_spec += 1
             if dist > 0:
-                moved += gmap[gid].nbytes
+                moved += jr.gmap[gid].nbytes
             if dist == 2:
-                cross += gmap[gid].nbytes
+                cross += jr.gmap[gid].nbytes
             if pipe_bytes > 0:
                 pipe.add(a, t)
                 reschedule_pipe()
@@ -312,6 +482,28 @@ class SimCluster:
             if busy.get(a.worker) is a:
                 busy[a.worker] = None
 
+        def job_views(t: float) -> list[JobView]:
+            """Snapshot of arrived, unfinished jobs with pending work, plus
+            the slot/capacity allocation the schedulers arbitrate over."""
+            n_running: dict[int, int] = {}
+            alloc_cap: dict[int, float] = {}
+            for wloc, a in busy.items():
+                if a is not None and not a.done and not a.killed:
+                    n_running[a.job] = n_running.get(a.job, 0) + 1
+                    alloc_cap[a.job] = alloc_cap.get(a.job, 0.0) + self.workers[wloc].rate_at(t)
+            return [
+                JobView(
+                    job_id=jid,
+                    submit_t=jr.job.submit_t,
+                    n_pending=len(jr.pending),
+                    n_running=n_running.get(jid, 0),
+                    remaining_work=jr.remaining_work,
+                    alloc_capacity=alloc_cap.get(jid, 0.0),
+                )
+                for jid, jr in jrs.items()
+                if jr.arrived and jr.pending
+            ]
+
         def schedule_wave(t: float) -> None:
             free = [
                 w
@@ -319,31 +511,38 @@ class SimCluster:
                 if busy[w] is None and self.workers[w].alive(t) and w not in dead
             ]
             for wloc in sorted(free, key=lambda l: -self.workers[l].rate_at(t)):
-                if pending:
-                    gid = self._pick_local_first(pending, plan, wloc)
-                    pending.remove(gid)
-                    launch(wloc, gid, t, False)
+                views = job_views(t)
+                if views:
+                    jid = sched.select(t, views, self.workers[wloc])
+                    jr = jrs[jid]
+                    gid = self._pick_local_first(jr.pending, jr.job.plan, wloc)
+                    jr.pending.remove(gid)
+                    launch(wloc, jid, gid, t, False)
                 else:
                     live = [
                         a
                         for a in self._attempts
-                        if not a.done and not a.killed and a.task not in done
+                        if not a.done and not a.killed
+                        and jrs[a.job].arrived
+                        and a.task not in jrs[a.job].done
                     ]
                     if not live:
                         continue
                     pick = pol.pick(t, live, self.workers[wloc], self)
                     if pick is not None:
-                        launch(wloc, pick, t, True)
+                        launch(wloc, pick[0], pick[1], t, True)
 
-        # failure timers
+        # arrival + failure timers
+        for jid, jr in sorted(jrs.items()):
+            push(jr.job.submit_t, "job_arrival", jid)
         for w in self.workers.values():
             if w.fail_at is not None:
                 push(w.fail_at + self.dead_after_s, "pronounce_dead", w.loc)
                 push(w.fail_at, "worker_fail", w.loc)
 
-        schedule_wave(0.0)
         makespan = 0.0
-        while heap and len(done) < len(grains):
+        total_done = 0
+        while heap and total_done < total_tasks:
             t, _, kind, payload = heapq.heappop(heap)
             finished_fetches = pipe.advance(t)
             for a in finished_fetches:
@@ -356,6 +555,14 @@ class SimCluster:
 
             if kind == "pipe_check":
                 pass  # advance above did the work
+            elif kind == "job_arrival":
+                jrs[payload].arrived = True
+                # drain same-instant arrivals before scheduling: a burst must
+                # be arbitrated as one queue (fair splitting slots max-min),
+                # not serialized job-by-job with the first seizing every slot
+                while heap and heap[0][0] == t and heap[0][2] == "job_arrival":
+                    _, _, _, jid2 = heapq.heappop(heap)
+                    jrs[jid2].arrived = True
             elif kind == "worker_fail":
                 for a in list(self._attempts):
                     if a.worker == payload and not a.done and not a.killed:
@@ -363,14 +570,15 @@ class SimCluster:
             elif kind == "pronounce_dead":
                 dead.add(payload)
                 for a in self._attempts:
-                    if a.worker == payload and a.task not in done:
+                    jr = jrs[a.job]
+                    if a.worker == payload and a.task not in jr.done:
                         alive_attempts = [
                             x
-                            for x in attempts_of.get(a.task, [])
+                            for x in jr.attempts_of.get(a.task, [])
                             if not x.killed and not x.done
                         ]
-                        if not alive_attempts and a.task not in pending:
-                            pending.append(a.task)
+                        if not alive_attempts and a.task not in jr.pending:
+                            jr.pending.append(a.task)
                             reassigned += 1
             elif kind == "finish":
                 a = payload
@@ -383,12 +591,17 @@ class SimCluster:
                 makespan = max(makespan, t)
                 busy_time[a.worker] += t - a.start
                 busy[a.worker] = None
-                if a.task in done:
+                jr = jrs[a.job]
+                if a.task in jr.done:
                     continue
-                done.add(a.task)
+                jr.done.add(a.task)
+                jr.done_work += a.work
+                total_done += 1
                 if a.speculative:
                     n_spec_won += 1
-                for other in attempts_of.get(a.task, []):
+                if jr.finished():
+                    jr.finish_t = t
+                for other in jr.attempts_of.get(a.task, []):
                     if other is not a:
                         kill(other, t)
             schedule_wave(t)
@@ -397,14 +610,28 @@ class SimCluster:
             str(w): (busy_time[w] / makespan if makespan > 0 else 0.0)
             for w in self.workers
         }
-        return SimResult(
+        job_results = [
+            JobResult(
+                job_id=jid,
+                submit_t=jr.job.submit_t,
+                first_launch_t=jr.first_launch_t,
+                finish_t=jr.finish_t,
+                n_tasks=len(jr.gmap),
+                completed=len(jr.done),
+            )
+            for jid, jr in sorted(jrs.items())
+        ]
+        return WorkloadResult(
+            scheduler=sched.name,
+            policy=pol.name,
             makespan=makespan,
+            jobs=job_results,
             wasted_work=wasted,
             moved_bytes=moved,
             cross_pod_bytes=cross,
             n_speculative=n_spec,
             n_spec_won=n_spec_won,
-            completed=len(done),
+            completed=total_done,
             reassigned_after_failure=reassigned,
             util=util,
         )

@@ -1,0 +1,210 @@
+"""Seeded multi-job workload generation for the het-cluster simulator.
+
+The paper's regime — many MapReduce jobs sharing one heterogeneous cluster —
+needs reproducible *scenarios*: an arrival process, a job-size mix, a
+locality profile, and optional fault injection. Everything here is driven by
+``random.Random(seed)`` so the same spec + seed produces a bit-identical job
+list (and therefore, with a deterministic scheduler, a bit-identical
+``WorkloadResult``); benchmarks and property tests sweep dozens of scenarios
+by just varying the seed.
+
+Layout:
+  ClusterSpec  — pods, per-pod speed ratio, bandwidths, fault injection
+  WorkloadSpec — arrivals (burst | uniform | poisson), size mix, shuffle frac
+  build_cluster / generate_workload / build_scenario — the factory functions
+  PRESETS      — canonical named scenarios used by benchmarks and tests
+                 ("hetero_2pod" is the paper's slow/fast pod mix)
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.core.placement import Grain, plan_placement
+from repro.core.simulator import SimJob, SimWorker
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A pod-structured fleet; rate per pod models mixed hardware
+    generations (the paper's heterogeneous cloud cluster)."""
+
+    nodes_per_pod: int = 8
+    pod_rates: tuple[float, ...] = (1.0, 0.4)  # one entry per pod
+    in_pod_bw: float = 50e9
+    cross_pod_bw: float = 2e9
+    # fault injection (seeded): fraction of nodes that degrade / die
+    straggler_frac: float = 0.0
+    straggler_factor: float = 0.1
+    straggler_window_s: tuple[float, float] = (10.0, 300.0)
+    fail_frac: float = 0.0
+    fail_window_s: tuple[float, float] = (30.0, 600.0)
+
+    @property
+    def num_pods(self) -> int:
+        return len(self.pod_rates)
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """A job mix: how many, when they arrive, how big, how shuffle-heavy."""
+
+    n_jobs: int = 20
+    arrival: str = "poisson"  # burst | uniform | poisson
+    mean_interarrival_s: float = 40.0
+    # (weight, min_tasks, max_tasks) job-size classes, Facebook-trace style:
+    # mostly small jobs plus a heavy tail of big ones
+    size_mix: tuple[tuple[float, int, int], ...] = (
+        (0.6, 4, 8),
+        (0.3, 10, 24),
+        (0.1, 32, 64),
+    )
+    work_per_task: tuple[float, float] = (10.0, 30.0)
+    nbytes_per_task: int = 2 << 30
+    remote_input_frac: float = 0.25  # shuffle-like tasks (cross-pod pipe)
+    replication: int = 3
+    proportional_placement: bool = True  # paper §IV.b.ii vs stock-uniform
+
+
+def build_cluster(
+    spec: ClusterSpec, seed: int = 0
+) -> tuple[Topology, list[SimWorker]]:
+    """Topology + workers, with seeded straggler/failure injection."""
+    topo = Topology(
+        num_pods=spec.num_pods,
+        nodes_per_pod=spec.nodes_per_pod,
+        in_pod_bw=spec.in_pod_bw,
+        cross_pod_bw=spec.cross_pod_bw,
+    )
+    workers = [SimWorker(loc, spec.pod_rates[loc.pod]) for loc in topo.workers()]
+    rng = random.Random(seed)
+    for w in workers:
+        if spec.straggler_frac > 0 and rng.random() < spec.straggler_frac:
+            w.slow_at = rng.uniform(*spec.straggler_window_s)
+            w.slow_factor = spec.straggler_factor
+        if spec.fail_frac > 0 and rng.random() < spec.fail_frac:
+            w.fail_at = rng.uniform(*spec.fail_window_s)
+    return topo, workers
+
+
+def _arrival_times(spec: WorkloadSpec, rng: random.Random) -> list[float]:
+    if spec.arrival == "burst":
+        return [0.0] * spec.n_jobs
+    if spec.arrival == "uniform":
+        span = spec.mean_interarrival_s * max(spec.n_jobs - 1, 1)
+        return sorted(rng.uniform(0.0, span) for _ in range(spec.n_jobs))
+    if spec.arrival == "poisson":
+        t, out = 0.0, []
+        for _ in range(spec.n_jobs):
+            out.append(t)
+            t += rng.expovariate(1.0 / spec.mean_interarrival_s)
+        return out
+    raise ValueError(f"unknown arrival process {spec.arrival!r}")
+
+
+def _job_sizes(spec: WorkloadSpec, rng: random.Random) -> list[int]:
+    weights = [w for w, _, _ in spec.size_mix]
+    out = []
+    for _ in range(spec.n_jobs):
+        _, lo, hi = rng.choices(spec.size_mix, weights=weights, k=1)[0]
+        out.append(rng.randint(lo, hi))
+    return out
+
+
+def generate_workload(
+    spec: WorkloadSpec,
+    topo: Topology,
+    workers: list[SimWorker],
+    seed: int = 0,
+) -> list[SimJob]:
+    """Jobs with seeded arrivals/sizes/shuffle flags, each placed on the
+    cluster by the capacity-proportional (or stock-uniform) planner."""
+    rng = random.Random(seed)
+    arrivals = _arrival_times(spec, rng)
+    sizes = _job_sizes(spec, rng)
+    locs = [w.loc for w in workers]
+    caps = [w.rate for w in workers]
+    jobs: list[SimJob] = []
+    for jid, (submit_t, n_tasks) in enumerate(zip(arrivals, sizes)):
+        lo, hi = spec.work_per_task
+        grains = tuple(
+            Grain(
+                gid,
+                nbytes=spec.nbytes_per_task,
+                work=rng.uniform(lo, hi),
+                remote_input=rng.random() < spec.remote_input_frac,
+            )
+            for gid in range(n_tasks)
+        )
+        plan = plan_placement(
+            grains, locs, caps, topo,
+            replication=spec.replication,
+            proportional=spec.proportional_placement,
+        )
+        jobs.append(SimJob(job_id=jid, grains=grains, plan=plan, submit_t=submit_t))
+    return jobs
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    cluster: ClusterSpec
+    workload: WorkloadSpec
+    description: str = ""
+
+
+PRESETS: dict[str, Scenario] = {
+    # The paper's canonical regime: one fast pod, one 0.4× pod (mixed
+    # generations), a bursty queue with a heavy-tailed size mix. This is the
+    # preset the acceptance benchmark sweeps — capacity-weighted scheduling
+    # must not lose to FIFO on makespan here.
+    "hetero_2pod": Scenario(
+        name="hetero_2pod",
+        cluster=ClusterSpec(nodes_per_pod=8, pod_rates=(1.0, 0.4), cross_pod_bw=2e9),
+        workload=WorkloadSpec(
+            n_jobs=24, arrival="poisson", mean_interarrival_s=10.0,
+            remote_input_frac=0.25,
+        ),
+        description="slow/fast pod mix, contended poisson queue, heavy-tailed sizes",
+    ),
+    "homogeneous": Scenario(
+        name="homogeneous",
+        cluster=ClusterSpec(nodes_per_pod=8, pod_rates=(1.0, 1.0), cross_pod_bw=2e9),
+        workload=WorkloadSpec(n_jobs=24, arrival="poisson", mean_interarrival_s=25.0),
+        description="the homogeneity assumption stock Hadoop makes",
+    ),
+    "shuffle_heavy": Scenario(
+        name="shuffle_heavy",
+        cluster=ClusterSpec(nodes_per_pod=8, pod_rates=(1.0, 0.4), cross_pod_bw=1e9),
+        workload=WorkloadSpec(
+            n_jobs=16, arrival="uniform", mean_interarrival_s=30.0,
+            remote_input_frac=1.0,
+        ),
+        description="reduce-phase regime: every task crosses the shared pipe",
+    ),
+    "faulty": Scenario(
+        name="faulty",
+        cluster=ClusterSpec(
+            nodes_per_pod=8, pod_rates=(1.0, 0.4),
+            straggler_frac=0.2, fail_frac=0.1,
+        ),
+        workload=WorkloadSpec(n_jobs=16, arrival="poisson", mean_interarrival_s=40.0),
+        description="seeded stragglers + node deaths on the het mix",
+    ),
+}
+
+
+def build_scenario(
+    name_or_scenario, seed: int = 0, n_jobs: Optional[int] = None
+):
+    """(topology, workers, jobs) for a named preset or a Scenario object.
+
+    ``n_jobs`` overrides the preset's job count (benchmark smoke paths)."""
+    sc = PRESETS[name_or_scenario] if isinstance(name_or_scenario, str) else name_or_scenario
+    wspec = sc.workload if n_jobs is None else replace(sc.workload, n_jobs=n_jobs)
+    topo, workers = build_cluster(sc.cluster, seed=seed)
+    jobs = generate_workload(wspec, topo, workers, seed=seed)
+    return topo, workers, jobs

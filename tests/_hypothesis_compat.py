@@ -1,0 +1,188 @@
+"""Minimal stand-in for the ``hypothesis`` API the tier-1 suite uses.
+
+The container may not have ``hypothesis`` installed and the repo cannot pull
+wheels at test time, so ``conftest.py`` registers this module under
+``sys.modules["hypothesis"]`` when the real package is missing. It is NOT a
+general replacement: it implements exactly the surface our tests touch —
+``given``, ``settings``, and ``strategies.{integers,floats,lists,randoms,
+booleans,sampled_from}`` with ``.filter``/``.map`` — using seeded
+pseudo-random example generation (deterministic per test name), plus
+deliberate boundary examples (min/max/empty) so the edge cases hypothesis
+would shrink toward still get exercised. No shrinking, no database, no
+stateful testing. When the real ``hypothesis`` is installed it wins and this
+file is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Callable, Optional
+
+DEFAULT_MAX_EXAMPLES = 100
+_FILTER_TRIES = 2000
+
+
+class SearchStrategy:
+    def __init__(self, gen: Callable[[random.Random], object], boundary=None):
+        self._gen = gen
+        # boundary: optional list of deterministic edge-case examples that
+        # are tried before random ones (hypothesis finds these by shrinking)
+        self._boundary = list(boundary or [])
+
+    def example_at(self, i: int, rng: random.Random):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._gen(rng)
+
+    def filter(self, pred) -> "SearchStrategy":
+        def gen(rng):
+            for _ in range(_FILTER_TRIES):
+                v = self._gen(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected all generated examples")
+
+        return SearchStrategy(gen, [b for b in self._boundary if pred(b)])
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(
+            lambda rng: fn(self._gen(rng)), [fn(b) for b in self._boundary]
+        )
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    bounds = [min_value, max_value] if max_value > min_value else [min_value]
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value), bounds)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.uniform(min_value, max_value), [min_value, max_value]
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, [False, True])
+
+
+def sampled_from(options) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(lambda rng: rng.choice(options), options[:1])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def gen(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements._gen(rng) for _ in range(n)]
+
+    boundary = []
+    if min_size == 0:
+        boundary.append([])
+    if elements._boundary:
+        boundary.append([elements._boundary[0]] * max(min_size, 1))
+    return SearchStrategy(gen, boundary)
+
+
+def randoms(use_true_random: bool = False, note_method_calls: bool = False) -> SearchStrategy:
+    return SearchStrategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+class settings:
+    """Decorator recording max_examples etc.; composes with @given both ways."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hc_settings = self
+        return fn
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(fn):
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # parameters; anything to their left (pytest fixtures) is passed
+        # through. Bind by name so fixture kwargs compose cleanly.
+        params = list(inspect.signature(fn).parameters.values())
+        pos_names = [p.name for p in params[len(params) - len(arg_strategies):]]
+        consumed = set(pos_names) | set(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            st_obj: Optional[settings] = getattr(wrapper, "_hc_settings", None) or getattr(
+                fn, "_hc_settings", None
+            )
+            n = st_obj.max_examples if st_obj else DEFAULT_MAX_EXAMPLES
+            # deterministic per-test seed, stable across processes/runs
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                ex_kw = {name: s.example_at(i, rng) for name, s in zip(pos_names, arg_strategies)}
+                ex_kw.update((k, s.example_at(i, rng)) for k, s in kw_strategies.items())
+                try:
+                    fn(*args, **kwargs, **ex_kw)
+                except _UnsatisfiedAssumption:
+                    continue  # assume() rejected this example; draw another
+                except Exception as e:  # show the failing example, hypothesis-style
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {ex_kw!r}"
+                    ) from e
+
+        # pytest must not see the strategy-filled params as fixtures: expose
+        # a signature with only the leftover (fixture) parameters, and drop
+        # __wrapped__ so pytest doesn't unwrap back to the original
+        wrapper.__signature__ = inspect.Signature(
+            [p for p in params if p.name not in consumed]
+        )
+        del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    """Abort the current example when the assumption fails, matching real
+    hypothesis (which discards the example and draws another)."""
+    if not condition:
+        raise _UnsatisfiedAssumption
+    return True
+
+
+def _as_module() -> tuple[types.ModuleType, types.ModuleType]:
+    """Build importable ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "randoms", "sampled_from"):
+        setattr(strategies, name, globals()[name])
+    strategies.SearchStrategy = SearchStrategy
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strategies
+    hyp.__version__ = "0.0-compat"
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    return hyp, strategies
+
+
+def install_if_missing() -> bool:
+    """Register the shim under ``hypothesis`` unless the real one imports."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ModuleNotFoundError:
+        hyp, strategies = _as_module()
+        sys.modules["hypothesis"] = hyp
+        sys.modules["hypothesis.strategies"] = strategies
+        return True

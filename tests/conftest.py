@@ -1,10 +1,18 @@
 import os
+import sys
 
 import numpy as np
 import pytest
 
 # keep CPU math deterministic-ish and fast
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# tier-1 must collect whether or not hypothesis is installed: register the
+# seeded mini-shim under sys.modules["hypothesis"] when the real one is absent
+sys.path.insert(0, os.path.dirname(__file__))
+import _hypothesis_compat  # noqa: E402
+
+USING_HYPOTHESIS_SHIM = _hypothesis_compat.install_if_missing()
 
 
 @pytest.fixture(scope="session")

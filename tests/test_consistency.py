@@ -12,6 +12,8 @@ from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: deselected in the default tier-1 run
+
 RUN = RunConfig(remat="none", attention_impl="xla", ssd_chunk=16)
 
 

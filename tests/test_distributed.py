@@ -11,6 +11,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: deselected in the default tier-1 run
+
 REPO = Path(__file__).resolve().parents[1]
 
 

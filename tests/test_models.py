@@ -15,6 +15,8 @@ from repro.models import model as M
 from repro.models.model import FRONTEND_FEATURE_DIM
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: deselected in the default tier-1 run
+
 RUN = RunConfig(
     remat="none", attention_impl="chunked", attention_chunk=32, ssd_chunk=16,
     warmup_steps=1, total_steps=10, z_loss=1e-4,

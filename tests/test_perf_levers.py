@@ -19,6 +19,8 @@ from repro.launch.steps import make_train_step
 from repro.models import model as M
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: deselected in the default tier-1 run
+
 F32 = dict(param_dtype="float32", compute_dtype="float32")
 
 

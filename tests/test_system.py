@@ -18,6 +18,8 @@ from repro.launch.steps import make_grad_step, make_train_step
 from repro.models import model as M
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: deselected in the default tier-1 run
+
 CFG = get_config("internlm2-1.8b").reduced(num_layers=2, d_model=64, vocab_size=64)
 RUN = RunConfig(
     learning_rate=3e-3, warmup_steps=5, total_steps=100, remat="none",

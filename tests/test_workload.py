@@ -1,0 +1,256 @@
+"""Multi-job workload engine: scheduler invariants, determinism, goldens.
+
+Property-style invariants over seeded scenarios (every submitted task
+completes exactly once under every scheduler; conservation/bounds on the
+accounting), plus the behavioural claims: schedulers are indistinguishable
+on a single-job workload, and the capacity-weighted scheduler (the paper's
+"fragments ∝ speed" rule lifted to the job level) beats FIFO makespan on the
+canonical slow/fast 2-pod scenario.
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import Grain, plan_placement
+from repro.core.scheduler import SCHEDULERS
+from repro.core.simulator import SimCluster, SimJob, SimWorker
+from repro.core.topology import Topology
+from repro.core.workload import (
+    PRESETS,
+    ClusterSpec,
+    WorkloadSpec,
+    build_cluster,
+    build_scenario,
+    generate_workload,
+)
+
+ALL_SCHEDULERS = ("fifo", "fair", "capacity")
+
+
+def _run_preset(name, scheduler, policy="late", seed=0, n_jobs=None):
+    topo, workers, jobs = build_scenario(name, seed=seed, n_jobs=n_jobs)
+    res = SimCluster(workers, topo).run_workload(jobs, scheduler=scheduler, policy=policy)
+    return jobs, res
+
+
+# ------------------------------------------------------------- invariants
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
+def test_every_task_completes_exactly_once(scheduler):
+    jobs, res = _run_preset("hetero_2pod", scheduler)
+    total = sum(len(j.grains) for j in jobs)
+    assert len(jobs) >= 20  # the acceptance-scale workload
+    assert res.completed == total
+    # per-job: each task done exactly once (completed counts unique tasks)
+    assert all(jr.completed == jr.n_tasks for jr in res.jobs)
+    assert sum(jr.completed for jr in res.jobs) == total
+    # no job finishes before it starts; no job starts before submit
+    for jr in res.jobs:
+        assert jr.submit_t <= jr.first_launch_t <= jr.finish_t
+
+
+@given(st.integers(0, 10_000), st.sampled_from(ALL_SCHEDULERS))
+@settings(max_examples=25, deadline=None)
+def test_accounting_invariants_under_random_scenarios(seed, scheduler):
+    cluster = ClusterSpec(nodes_per_pod=3, pod_rates=(1.0, 0.5))
+    wspec = WorkloadSpec(
+        n_jobs=6, arrival="poisson", mean_interarrival_s=20.0,
+        size_mix=((0.7, 2, 5), (0.3, 6, 12)), remote_input_frac=0.3,
+    )
+    topo, workers = build_cluster(cluster, seed=seed)
+    jobs = generate_workload(wspec, topo, workers, seed=seed)
+    res = SimCluster(workers, topo).run_workload(jobs, scheduler=scheduler)
+    assert res.completed == sum(len(j.grains) for j in jobs)
+    assert res.wasted_work >= 0.0
+    assert res.cross_pod_bytes <= res.moved_bytes
+    assert res.n_spec_won <= res.n_speculative
+    assert all(0.0 <= u <= 1.0 + 1e-9 for u in res.util.values())
+    assert res.makespan >= max(j.finish_t for j in res.jobs) - 1e-9
+
+
+def test_fault_injection_still_completes():
+    jobs, res = _run_preset("faulty", "fair", seed=3)
+    assert res.completed == sum(len(j.grains) for j in jobs)
+    assert res.reassigned_after_failure >= 0
+
+
+# ----------------------------------------------- scheduler equivalences
+
+
+def test_schedulers_identical_on_single_job_workload():
+    """With one job there is nothing to arbitrate: fifo/fair/capacity must
+    produce the same numbers (the scheduler label is the only difference)."""
+    topo = Topology(num_pods=2, nodes_per_pod=4, cross_pod_bw=2e9)
+    workers0 = [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
+    grains = tuple(Grain(g, nbytes=1 << 30, work=15.0, remote_input=g % 4 == 0) for g in range(24))
+    plan = plan_placement(grains, [w.loc for w in workers0], [w.rate for w in workers0], topo, 3)
+    job = SimJob(0, grains, plan, submit_t=0.0)
+
+    outs = {}
+    for sched in ALL_SCHEDULERS:
+        workers = [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
+        res = SimCluster(workers, topo).run_workload([job], scheduler=sched, policy="late")
+        outs[sched] = dataclasses.replace(res, scheduler="-")
+    assert outs["fifo"] == outs["fair"] == outs["capacity"]
+
+
+def _canonical_two_pod_jobs(topo, locs, caps):
+    """Three small jobs ahead of one big job in FIFO order — the burst where
+    run-to-completion leaves the giant to tail out alone on the slow pod."""
+
+    def job(jid, n, work):
+        grains = tuple(Grain(g, nbytes=1 << 30, work=work) for g in range(n))
+        return SimJob(jid, grains, plan_placement(grains, locs, caps, topo, 3), submit_t=0.0)
+
+    return [job(0, 6, 10.0), job(1, 6, 10.0), job(2, 6, 10.0), job(3, 40, 30.0)]
+
+
+def test_capacity_weighted_beats_fifo_on_het_2pod():
+    topo = Topology(num_pods=2, nodes_per_pod=4, in_pod_bw=50e9, cross_pod_bw=2e9)
+
+    def fresh():
+        return [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
+
+    workers = fresh()
+    jobs = _canonical_two_pod_jobs(topo, [w.loc for w in workers], [w.rate for w in workers])
+    makespans = {}
+    for sched in ALL_SCHEDULERS:
+        res = SimCluster(fresh(), topo).run_workload(jobs, scheduler=sched, policy="off")
+        assert res.completed == sum(len(j.grains) for j in jobs)
+        makespans[sched] = res.makespan
+    assert makespans["capacity"] < makespans["fifo"]
+
+
+def test_capacity_no_worse_than_fifo_on_preset_sweep():
+    """Per-seed outcomes are noisy (a single poisson draw can favour either
+    scheduler by <1%); the claim is about the regime, so compare seed means —
+    the same statistic benchmarks/bench_workload.py reports and gates on."""
+    fifo_ms, cap_ms = [], []
+    for seed in range(6):
+        fifo_ms.append(_run_preset("hetero_2pod", "fifo", seed=seed)[1].makespan)
+        cap_ms.append(_run_preset("hetero_2pod", "capacity", seed=seed)[1].makespan)
+    assert sum(cap_ms) <= sum(fifo_ms)
+
+
+def test_fair_improves_median_latency_in_canonical_burst():
+    """Max-min sharing lets small jobs through instead of queueing behind
+    the giant — median job latency must not regress vs capacity-weighted."""
+    topo = Topology(num_pods=2, nodes_per_pod=4, in_pod_bw=50e9, cross_pod_bw=2e9)
+
+    def fresh():
+        return [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
+
+    workers = fresh()
+    jobs = _canonical_two_pod_jobs(topo, [w.loc for w in workers], [w.rate for w in workers])
+    fair = SimCluster(fresh(), topo).run_workload(jobs, scheduler="fair", policy="off")
+    cap = SimCluster(fresh(), topo).run_workload(jobs, scheduler="capacity", policy="off")
+    assert fair.latency_quantile(0.5) <= cap.latency_quantile(0.5)
+
+
+# ------------------------------------------------------------ determinism
+
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
+def test_bit_identical_replay_under_same_seed(scheduler):
+    a = _run_preset("hetero_2pod", scheduler, seed=11, n_jobs=20)[1]
+    b = _run_preset("hetero_2pod", scheduler, seed=11, n_jobs=20)[1]
+    assert a == b  # dataclass equality: every float, every dict entry
+
+
+def test_different_seeds_differ():
+    a = _run_preset("hetero_2pod", "fifo", seed=1)[1]
+    b = _run_preset("hetero_2pod", "fifo", seed=2)[1]
+    assert a != b
+
+
+def test_workload_generation_deterministic():
+    topo, workers = build_cluster(PRESETS["hetero_2pod"].cluster, seed=5)
+    w = PRESETS["hetero_2pod"].workload
+    j1 = generate_workload(w, topo, workers, seed=5)
+    j2 = generate_workload(w, topo, workers, seed=5)
+    assert [j.submit_t for j in j1] == [j.submit_t for j in j2]
+    assert [j.grains for j in j1] == [j.grains for j in j2]
+
+
+# ------------------------------------------------- golden regression pins
+
+# Pinned against the refactored job-agnostic loop (PR 1) — identical to the
+# pre-refactor seed behaviour: the heartbeat-scaled speculative lag plus the
+# per-job naive mean keep single-job semantics bit-for-bit. The setup is
+# test_core_speculation._setup's default scenario; these numbers moving
+# means the event loop's semantics changed — bump deliberately, not
+# accidentally.
+_GOLDEN_MAKESPAN = {"off": 420.0, "naive": 205.47644040434605, "late": 204.14194104707803}
+_GOLDEN_WASTED = {"off": 0.0, "naive": 5.866667614835959, "late": 2.221724546863034}
+
+
+def _speculation_setup():
+    # the exact scenario the goldens pin — imported, not copied, so a change
+    # to that setup fails here instead of silently unpinning the goldens
+    from test_core_speculation import _setup
+
+    return _setup()
+
+
+@pytest.mark.parametrize("policy", ["off", "naive", "late"])
+def test_golden_makespan_regression(policy):
+    topo, workers, grains, plan = _speculation_setup()
+    r = SimCluster(workers, topo).run_job(grains, plan, policy=policy)
+    assert r.completed == 64
+    assert r.makespan == pytest.approx(_GOLDEN_MAKESPAN[policy], rel=1e-9)
+    assert r.wasted_work == pytest.approx(_GOLDEN_WASTED[policy], rel=1e-9, abs=1e-12)
+
+
+def test_golden_naive_vs_late_ordering():
+    """The §III.b claim the original suite checks, pinned as a workload run
+    through the refactored loop: LATE ≤ naive, both far under speculation-off."""
+    results = {}
+    for policy in ("off", "naive", "late"):
+        topo, workers, grains, plan = _speculation_setup()
+        job = SimJob(0, tuple(grains), plan)
+        results[policy] = SimCluster(workers, topo).run_workload(
+            [job], scheduler="fifo", policy=policy
+        )
+    assert results["late"].makespan <= results["naive"].makespan
+    assert results["late"].makespan < results["off"].makespan * 0.8
+
+
+# ------------------------------------------------------------- tooling
+
+
+@given(st.integers(0, 1_000_000))
+@settings(max_examples=5, deadline=None)
+def test_property_harness_composes_with_fixtures(rng, seed):
+    """@given + pytest fixture must work under both real hypothesis and the
+    offline shim (tests/_hypothesis_compat.py): strategies fill the rightmost
+    params, fixtures pass through on the left."""
+    assert isinstance(seed, int) and 0 <= seed <= 1_000_000
+    assert rng.integers(0, 10) < 10  # the session-scoped numpy fixture
+
+
+def test_burst_arrivals_scheduled_as_one_queue():
+    """Same-instant submissions must be arbitrated together: under fair,
+    neither burst job may wait a full task length before its first launch."""
+    topo = Topology(num_pods=1, nodes_per_pod=8)
+    workers = [SimWorker(loc, 1.0) for loc in topo.workers()]
+    locs = [w.loc for w in workers]
+    caps = [1.0] * len(workers)
+
+    def mk(jid):
+        grains = tuple(Grain(g, 1 << 20, work=100.0) for g in range(8))
+        return SimJob(jid, grains, plan_placement(grains, locs, caps, topo, 1), submit_t=0.0)
+
+    res = SimCluster(workers, topo).run_workload([mk(0), mk(1)], scheduler="fair", policy="off")
+    assert all(j.first_launch_t == 0.0 for j in res.jobs)
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_scheduler_registry_complete():
+    assert set(SCHEDULERS) == set(ALL_SCHEDULERS)
+    for name, factory in SCHEDULERS.items():
+        assert factory().name == name

@@ -26,7 +26,9 @@ def build(regime: str):
         for loc in topo.workers()
     ]
     if regime == "R2-straggler":
-        workers[3].slow_at, workers[3].slow_factor = 10.0, 0.05
+        # 0.01 since PR 2: slowdowns re-rate the in-flight attempt, so the
+        # straggler's tail must outlast queue drain to need rescuing
+        workers[3].slow_at, workers[3].slow_factor = 10.0, 0.01
         shuffle = 0.35
     elif regime == "R3-shuffle-heavy":
         shuffle = 1.0

@@ -14,17 +14,18 @@ from __future__ import annotations
 
 import time
 
-from repro.core.simulator import SimCluster
-from repro.core.workload import PRESETS, build_scenario
+from repro.core.workload import PRESETS, build_sim
 
 SCHEDULERS = ("fifo", "fair", "capacity")
 SEEDS = tuple(range(8))
 
 
 def run_preset(preset: str, scheduler: str, seed: int = 0, policy: str = "late"):
-    topo, workers, jobs = build_scenario(preset, seed=seed)
+    # build_sim honours per-preset heartbeat timing (churny_3pod pronounces
+    # its dead pod after 60s, not the default 10 minutes)
+    sim, jobs = build_sim(preset, seed=seed)
     t0 = time.perf_counter()
-    res = SimCluster(workers, topo).run_workload(jobs, scheduler=scheduler, policy=policy)
+    res = sim.run_workload(jobs, scheduler=scheduler, policy=policy)
     us = (time.perf_counter() - t0) * 1e6
     return jobs, res, us
 

@@ -22,6 +22,7 @@ def main(argv=None) -> None:
     opts = args.parse_args(argv)
 
     from benchmarks import (
+        bench_elastic,
         bench_heartbeat,
         bench_namespace,
         bench_placement,
@@ -40,6 +41,8 @@ def main(argv=None) -> None:
         ("claim6: heartbeat throughput", bench_heartbeat.main),
         ("claim7: multi-job scheduling on het clusters",
          lambda: bench_workload.main(smoke=opts.smoke)),
+        ("claim8: elastic re-mesh under multi-job churn",
+         lambda: bench_elastic.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

@@ -47,7 +47,9 @@ def part2_speculation():
     print("2) speculation under heterogeneity (paper §III.b)")
     topo = Topology(num_pods=2, nodes_per_pod=8, cross_pod_bw=2e9)
     workers = [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
-    workers[3].slow_at, workers[3].slow_factor = 10.0, 0.05
+    # 0.01: slowdowns re-rate the in-flight attempt (PR 2), so the straggler
+    # tail must outlast queue drain for the off-policy pain to show
+    workers[3].slow_at, workers[3].slow_factor = 10.0, 0.01
     grains = [Grain(g, 8 << 30, work=20.0, remote_input=(g >= 40)) for g in range(64)]
     caps = [w.rate for w in workers]
     plan = plan_placement(grains, [w.loc for w in workers], caps, topo, 3)

@@ -13,11 +13,15 @@ shows the trade surface:
   capacity — the paper's "fragments ∝ speed" rule at the job level: best
              workload makespan on the het mix, at the cost of median latency
 
+A fourth section replays the churn preset (pod death mid-queue, heartbeat
+timeout, re-replication, re-registration) and shows the elastic recovery
+chain's effect on the same contended queue, plus the churn trace the
+training-side ElasticController can replay (launch/elastic.py).
+
     PYTHONPATH=src python examples/multi_job.py
 """
 
-from repro.core.simulator import SimCluster
-from repro.core.workload import PRESETS, build_scenario
+from repro.core.workload import PRESETS, build_sim
 
 
 def show(preset: str, seed: int = 2) -> None:
@@ -28,8 +32,8 @@ def show(preset: str, seed: int = 2) -> None:
     print(f"{'scheduler':10s} {'makespan_s':>10s} {'p50_s':>8s} {'p99_s':>8s} "
           f"{'mean_s':>8s} {'wasted':>7s}")
     for sched in ("fifo", "fair", "capacity"):
-        topo, workers, jobs = build_scenario(preset, seed=seed)
-        res = SimCluster(workers, topo).run_workload(jobs, scheduler=sched, policy="late")
+        sim, jobs = build_sim(preset, seed=seed)
+        res = sim.run_workload(jobs, scheduler=sched, policy="late")
         assert res.completed == sum(len(j.grains) for j in jobs)
         print(f"{sched:10s} {res.makespan:10.1f} {res.latency_quantile(0.5):8.1f} "
               f"{res.latency_quantile(0.99):8.1f} {res.mean_latency:8.1f} "
@@ -41,8 +45,8 @@ def per_job_timeline(seed: int = 2) -> None:
     print("\n=== per-job view (hetero_2pod): fifo vs capacity-weighted")
     out = {}
     for sched in ("fifo", "capacity"):
-        topo, workers, jobs = build_scenario("hetero_2pod", seed=seed)
-        out[sched] = SimCluster(workers, topo).run_workload(jobs, scheduler=sched)
+        sim, jobs = build_sim("hetero_2pod", seed=seed)
+        out[sched] = sim.run_workload(jobs, scheduler=sched)
     print(f"{'job':>4s} {'tasks':>6s} {'submit':>7s} {'fifo_lat':>9s} {'cap_lat':>9s}")
     for jf, jc in zip(out["fifo"].jobs, out["capacity"].jobs):
         print(f"{jf.job_id:4d} {jf.n_tasks:6d} {jf.submit_t:7.1f} "
@@ -50,7 +54,34 @@ def per_job_timeline(seed: int = 2) -> None:
     print(f"{'makespan':>18s} {out['fifo'].makespan:9.1f} {out['capacity'].makespan:9.1f}")
 
 
+def elastic_churn(seed: int = 0) -> None:
+    """The paper's §IV.c failure chain against a contended queue: pod1 dies
+    at t=120s, is pronounced dead at 180s (heartbeat-derived: 60s after its
+    last beat), and re-registers at 540s. Static allocation detours every
+    read of its grains cross-pod; re-proportioning re-replicates them onto
+    survivors ∝ capacity."""
+    print("\n=== elastic churn (churny_3pod): static vs capacity re-proportioning")
+    print(f"{'mode':13s} {'makespan_s':>10s} {'p99_s':>8s} {'cross_GB':>9s} "
+          f"{'re_repl_GB':>10s} {'requeued':>8s}")
+    results = {}
+    for mode in ("static", "reproportion"):
+        sim, jobs = build_sim("churny_3pod", seed=seed)
+        res = sim.run_workload(jobs, scheduler="capacity", policy="late", elastic=mode)
+        assert res.completed == sum(len(j.grains) for j in jobs)
+        results[mode] = res
+        print(f"{mode:13s} {res.makespan:10.1f} {res.latency_quantile(0.99):8.1f} "
+              f"{res.cross_pod_bytes / 1e9:9.1f} {res.re_replicated_bytes / 1e9:10.1f} "
+              f"{res.reassigned_after_failure:8d}")
+    print("\n  churn trace (reproportion run, pod-level + first per kind):")
+    seen = set()
+    for ev in results["reproportion"].churn:
+        if ev.kind in ("pod_dead", "pod_alive") or ev.kind not in seen:
+            seen.add(ev.kind)
+            print(f"    t={ev.time:7.1f}  {ev.kind:15s} {ev.detail}")
+
+
 if __name__ == "__main__":
     for preset in ("hetero_2pod", "homogeneous", "shuffle_heavy", "faulty"):
         show(preset)
     per_job_timeline()
+    elastic_churn()

@@ -31,6 +31,7 @@ from repro.core.replication import ReplicaManager, StripingScheme  # noqa: F401
 from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     POLICIES,
+    ChurnEvent,
     SimCluster,
     SimJob,
     SimWorker,
@@ -42,6 +43,7 @@ from repro.core.workload import (  # noqa: F401
     WorkloadSpec,
     build_cluster,
     build_scenario,
+    build_sim,
     generate_workload,
 )
 from repro.core.topology import Location, Topology  # noqa: F401

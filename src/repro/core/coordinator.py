@@ -156,6 +156,15 @@ class HetCoordinator:
     def fail_pod(self, name: str) -> None:
         self.pods[name].alive = False
 
+    def revive_pod(self, name: str, t: float = 0.0) -> None:
+        """Re-admit a pod that re-registered after being pronounced dead
+        (elastic re-grow): fresh liveness + nameplate capacity, so the next
+        ``schedule()`` re-proportions microbatches over the restored fleet."""
+        p = self.pods[name]
+        p.alive = True
+        self.capacity.register(p.name, p.speed)
+        self.monitor.revive(p.name, t, nameplate=p.speed)
+
     def set_speed(self, name: str, speed: float) -> None:
         """Simulate thermal throttling / contention mid-run."""
         self.pods[name].speed = speed

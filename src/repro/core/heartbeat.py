@@ -115,6 +115,13 @@ class HeartbeatMonitor:
                     self.on_dead(w, now)
         return newly_dead
 
+    def revive(self, worker: str, t: float, nameplate: float = 1.0) -> None:
+        """Re-admit a worker whose post-pronouncement heartbeat was answered
+        with RE_REGISTER (the paper's re-register command): fresh liveness
+        state and a fresh capacity nameplate — its measured history died
+        with the pronouncement."""
+        self.register(worker, t, nameplate)
+
     def pronounce(self, worker: str, now: float = 0.0) -> None:
         """Directly pronounce a worker dead (its heartbeats stopped and the
         timeout elapsed) — the failure-injection entry point."""

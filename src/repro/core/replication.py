@@ -51,12 +51,17 @@ class ReplicaManager:
         topology: Topology,
         replication: int = 3,
         pipeline_overhead: float = 0.05,
+        capacities: Optional[dict[Location, float]] = None,
     ):
         self.plan = plan
         self.nbytes = grains_bytes
         self.topo = topology
         self.r = replication
         self.pipeline_overhead = pipeline_overhead
+        # optional worker speeds: recovery targets are then chosen so the
+        # re-replicated fragments land ∝ capacity (paper §IV.b.ii lifted to
+        # the recovery path), instead of plain copy-count balancing
+        self.capacities = capacities
         self.failed: set[Location] = set()
 
     # ------------------------------------------------------------------
@@ -86,7 +91,11 @@ class ReplicaManager:
         """Restore replication for every under-replicated grain.
 
         Target choice is rack-aware: prefer a pod NOT already holding a
-        replica; never a node that already has one. Source = nearest replica.
+        replica; never a node that already has one. Source = nearest
+        replica. With ``capacities`` set, ties are arbitrated by the
+        smallest post-copy load/capacity ratio, so fast survivors absorb
+        proportionally more of the re-replicated data (capacity
+        re-proportioning after a shrink).
         """
         events: list[ReplicationEvent] = []
         read = written = t_total = 0.0
@@ -106,7 +115,17 @@ class ReplicaManager:
                     cands = [w for w in workers if w not in live]
                 if not cands:
                     break
-                dst = min(cands, key=lambda w: load[w])
+                if self.capacities:
+                    dst = min(
+                        cands,
+                        key=lambda w: (
+                            (load[w] + 1) / max(self.capacities.get(w, 1.0), 1e-9),
+                            w.pod,
+                            w.node,
+                        ),
+                    )
+                else:
+                    dst = min(cands, key=lambda w: load[w])
                 src = min(live, key=lambda s: self.topo.distance(s, dst))
                 b = self.nbytes[gid]
                 events.append(ReplicationEvent(gid, src, dst, b, "re-replication"))

@@ -25,6 +25,13 @@ The engine (simulator.run_workload) calls ``select`` every time a worker
 frees, passing a snapshot of all arrived jobs that still have pending tasks.
 Schedulers are stateless between calls; everything they need is in the views,
 which keeps replays bit-deterministic.
+
+Under churn (PR 2) this snapshot protocol is what makes the schedulers
+elastic for free: ``alloc_capacity`` is summed from ``rate_at(t)`` and dead
+workers never free, so when a pod is pronounced dead (or a straggler
+re-rates, or a worker re-registers) the very next ``select`` call sees the
+shrunken/re-grown capacity and re-proportions its decisions — no explicit
+re-planning step.
 """
 
 from __future__ import annotations

@@ -16,7 +16,16 @@ Model:
   * Hadoop-style phase progress (fetch ≈ first third, compute the rest) —
     the coarse progress signal is what misleads the naive heuristic.
   * speculative execution policies: off | naive (stock Hadoop) | late
-  * heartbeat-based liveness: dead after ``dead_after_s`` → re-queue tasks.
+  * heartbeat-derived liveness (§IV.c.ii): worker silence is noticed by a
+    :class:`~repro.core.heartbeat.HeartbeatMonitor` ``dead_after_s`` after
+    the worker's *last heartbeat* — not after the (unobservable) failure
+    instant — then its tasks re-queue and, in elastic mode, its grains
+    re-replicate (core/replication.py) with capacity-proportional targets.
+  * worker-rate changes are first-class events: a straggler turning on
+    (``slow_at``) or off (``slow_until``) re-rates the attempt currently
+    running on that worker, so a mid-task slowdown delays the attempt —
+    the signal LATE [12] exists to detect. A failed worker can re-register
+    (``recover_at``) and re-grow the schedulable fleet.
   * **multi-job workloads**: ``run_workload`` replays a queue of jobs with
     arrival times through a pluggable inter-job slot scheduler
     (core/scheduler.py: fifo | fair | capacity); ``run_job`` is the
@@ -25,7 +34,10 @@ Model:
     cross-pod pipe — the regime the paper's jobtracker critique is about.
 
 Outputs per job: makespan/latency, wasted (killed-backup) work, bytes moved,
-per-worker utilization — the quantities the paper's §IV discusses.
+per-worker utilization, plus a **churn trace** (``WorkloadResult.churn``):
+every arrival / failure / straggler / pronounce-dead / re-replication /
+re-registration transition, in event order — the feed launch/elastic.py
+replays against the training-side ElasticController.
 """
 
 from __future__ import annotations
@@ -35,7 +47,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core.heartbeat import Heartbeat, HeartbeatMonitor
 from repro.core.placement import Grain, PlacementPlan
+from repro.core.replication import ReplicaManager
 from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView
 from repro.core.topology import Location, Topology
 
@@ -49,14 +63,22 @@ class SimWorker:
     fail_at: Optional[float] = None  # hard failure time (None = healthy)
     slow_at: Optional[float] = None  # becomes a straggler at this time
     slow_factor: float = 0.1
+    slow_until: Optional[float] = None  # straggler recovers at this time
+    recover_at: Optional[float] = None  # failed worker re-registers here
 
     def rate_at(self, t: float) -> float:
-        if self.slow_at is not None and t >= self.slow_at:
+        if (
+            self.slow_at is not None
+            and t >= self.slow_at
+            and (self.slow_until is None or t < self.slow_until)
+        ):
             return self.rate * self.slow_factor
         return self.rate
 
     def alive(self, t: float) -> bool:
-        return self.fail_at is None or t < self.fail_at
+        if self.fail_at is None or t < self.fail_at:
+            return True
+        return self.recover_at is not None and t >= self.recover_at
 
 
 @dataclass(frozen=True)
@@ -113,6 +135,28 @@ class Attempt:
         return self.progress(t) / max(t - self.start, 1e-9)
 
 
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One liveness/rate/arrival transition observed by the engine.
+
+    Kinds: ``job_arrival`` | ``worker_fail`` | ``straggler_on`` |
+    ``straggler_off`` | ``pronounce_dead`` | ``re_replicated`` |
+    ``re_registered`` | ``pod_dead`` | ``pod_alive``. The trace is in
+    event order and deterministic for a fixed (jobs, seed, flags) tuple,
+    so it can be replayed elsewhere (launch/elastic.py ``apply_churn``).
+
+    Only *observable* transitions are recorded: a silent (failed or
+    pronounced) worker emits no rate changes. ``re_registered`` resets the
+    worker's observed rate to nominal; a worker that rejoins still
+    degraded emits ``straggler_on`` at the same instant, so the rate state
+    implied by any trace prefix is consistent.
+    """
+
+    time: float
+    kind: str
+    detail: dict = field(default_factory=dict)
+
+
 @dataclass
 class SimResult:
     makespan: float
@@ -161,6 +205,12 @@ class WorkloadResult:
     completed: int
     reassigned_after_failure: int
     util: dict[str, float]
+    # elastic-churn accounting (PR 2): the recovery chain's observable cost
+    elastic: str = "static"  # failure-recovery mode the run used
+    churn: list[ChurnEvent] = field(default_factory=list)
+    re_replicated_bytes: float = 0.0  # bytes written restoring replication
+    re_replication_s: float = 0.0  # summed (throttled, off-pipe) copy time
+    n_re_replicated: int = 0  # replica copies made
 
     def latencies(self) -> list[float]:
         return sorted(j.latency for j in self.jobs if j.finish_t >= 0)
@@ -306,13 +356,21 @@ class _JobRun:
     """Mutable per-job engine state (pending/done/attempt bookkeeping)."""
 
     __slots__ = (
-        "job", "gmap", "pending", "done", "attempts_of", "total_work",
+        "job", "gmap", "plan", "pending", "done", "attempts_of", "total_work",
         "done_work", "first_launch_t", "finish_t", "arrived",
     )
 
     def __init__(self, job: SimJob):
         self.job = job
         self.gmap = {g.gid: g for g in job.grains}
+        # private copy of the replica map: elastic recovery mutates it
+        # (re-replication re-points replicas), and the same SimJob must be
+        # replayable bit-identically across runs
+        self.plan = PlacementPlan(
+            primary=job.plan.primary,
+            replicas={gid: list(reps) for gid, reps in job.plan.replicas.items()},
+            per_worker=job.plan.per_worker,
+        )
         self.pending: list[int] = [g.gid for g in job.grains]
         self.done: set[int] = set()
         self.attempts_of: dict[int, list[Attempt]] = {}
@@ -362,10 +420,14 @@ class SimCluster:
         plan: PlacementPlan,
         policy: str = "late",
         congestion: bool = True,
+        elastic: Union[bool, str] = False,
     ) -> SimResult:
         """Single-job replay — thin wrapper over :meth:`run_workload`."""
         job = SimJob(job_id=0, grains=tuple(grains), plan=plan, submit_t=0.0)
-        wr = self.run_workload([job], scheduler="fifo", policy=policy, congestion=congestion)
+        wr = self.run_workload(
+            [job], scheduler="fifo", policy=policy, congestion=congestion,
+            elastic=elastic,
+        )
         return SimResult(
             makespan=wr.makespan,
             wasted_work=wr.wasted_work,
@@ -385,6 +447,7 @@ class SimCluster:
         scheduler: Union[str, JobScheduler] = "fifo",
         policy: str = "late",
         congestion: bool = True,
+        elastic: Union[bool, str] = False,
     ) -> WorkloadResult:
         """Replay a multi-job workload through a pluggable slot scheduler.
 
@@ -393,7 +456,32 @@ class SimCluster:
         first rule picks the grain. Speculation (``policy``) kicks in only
         when no arrived job has pending work — exactly Hadoop's behaviour of
         backing up stragglers with otherwise-idle slots.
+
+        ``elastic`` selects the failure-recovery mode (paper §IV.c):
+
+        * ``False`` / ``"static"`` — pronounce-dead only re-queues the dead
+          worker's tasks; data placement stays as submitted, so every later
+          read of that worker's grains detours to the nearest *surviving*
+          replica (often cross-pod, on the contended pipe).
+        * ``True`` / ``"reproportion"`` — the paper's full chain: on
+          pronounce-dead a per-job :class:`ReplicaManager` re-replicates the
+          under-replicated grains onto survivors chosen ∝ capacity, so the
+          queue behind the failure regains locality; jobs arriving after a
+          death are re-proportioned on arrival. Copy bytes/seconds accrue in
+          ``re_replicated_bytes`` / ``re_replication_s`` (modelled as a
+          throttled background transfer, HDFS-style, not on the job fetch
+          pipe — the availability of new replicas is instant, the cost is
+          reported).
+
+        Either way the run emits a churn trace: heartbeat-derived pronounce
+        events (timeout counts from the worker's last heartbeat, via
+        :class:`HeartbeatMonitor`), straggler on/off boundaries, job
+        arrivals, re-replications, and re-registrations of recovered
+        workers. Trace collection stops when the last task completes.
         """
+        mode = {False: "static", True: "reproportion"}.get(elastic, elastic)
+        if mode not in ("static", "reproportion"):
+            raise ValueError(f"unknown elastic mode {elastic!r}")
         sched = SCHEDULERS[scheduler]() if isinstance(scheduler, str) else scheduler
         pol = POLICIES[policy]()
         self._attempts = []
@@ -405,10 +493,23 @@ class SimCluster:
         total_tasks = sum(len(jr.gmap) for jr in jrs.values())
         pipe = _SharedPipe(self.topo.cross_pod_bw)
         moved = cross = wasted = 0.0
+        re_bytes = re_seconds = 0.0
+        n_re_copies = 0
         n_spec = n_spec_won = reassigned = 0
         busy: dict[Location, Optional[Attempt]] = {w: None for w in self.workers}
         busy_time: dict[Location, float] = {w: 0.0 for w in self.workers}
         dead: set[Location] = set()
+        churn: list[ChurnEvent] = []
+        pods_down: set[int] = set()
+        name_of = {loc: str(loc) for loc in self.workers}
+        loc_of = {n: loc for loc, n in name_of.items()}
+        capacities = {loc: w.rate for loc, w in self.workers.items()}
+        monitor = HeartbeatMonitor(
+            interval_s=self.heartbeat_s, dead_after_s=self.dead_after_s
+        )
+        for loc, w in self.workers.items():
+            monitor.register(name_of[loc], 0.0, nameplate=w.rate)
+        managers: dict[int, ReplicaManager] = {}
         heap: list[tuple[float, int, str, object]] = []
         seq = [0]
 
@@ -429,10 +530,17 @@ class SimCluster:
                 next_check[0] = nf
                 push(nf, "pipe_check", None)
 
+        def live_replicas(jr: _JobRun, gid: int) -> list[Location]:
+            """Replicas not on pronounced-dead workers (the coordinator's
+            observable state; silent-but-unpronounced nodes still count).
+            Falls back to the full set when everything is down."""
+            reps = [r for r in jr.plan.replicas[gid] if r not in dead]
+            return reps or jr.plan.replicas[gid]
+
         def fetch_plan(jr: _JobRun, w: SimWorker, gid: int) -> tuple[float, float, int]:
             """(pipe_bytes, fixed_fetch_s, distance) for gid on w."""
             g = jr.gmap[gid]
-            reps = jr.job.plan.replicas[gid]
+            reps = live_replicas(jr, gid)
             src = min(reps, key=lambda r: self.topo.distance(r, w.loc))
             dist = self.topo.distance(src, w.loc)
             if g.remote_input:
@@ -442,6 +550,108 @@ class SimCluster:
             if dist == 1:
                 return 0.0, g.nbytes / self.topo.in_pod_bw, 1
             return (g.nbytes, 0.0, 2) if congestion else (0.0, g.nbytes / self.topo.cross_pod_bw, 2)
+
+        def pick_local_first(jr: _JobRun, wloc: Location) -> int:
+            """HDFS data-awareness: node-local > pod-local > any (paper
+            §III.a). A ``remote_input`` (shuffle-like) grain is distance 2
+            no matter where its replicas sit — ``fetch_plan`` forces it over
+            the cross-pod pipe — and dead workers' replicas don't count."""
+            best, best_d = jr.pending[0], 3
+            for gid in jr.pending:
+                if jr.gmap[gid].remote_input:
+                    d = 2
+                else:
+                    d = min(
+                        self.topo.distance(r, wloc) for r in live_replicas(jr, gid)
+                    )
+                if d < best_d:
+                    best, best_d = gid, d
+                    if d == 0:
+                        break
+            return best
+
+        # -- elastic recovery + heartbeat-derived liveness helpers ---------
+        def last_beat(t: float) -> float:
+            """Latest heartbeat boundary at or before t."""
+            return math.floor(t / self.heartbeat_s) * self.heartbeat_s
+
+        def observed_beat(w: SimWorker, t: float) -> float:
+            """When the coordinator last heard from w (silent since failure
+            unless recovered)."""
+            if w.fail_at is None or t < w.fail_at:
+                return last_beat(t)
+            if w.recover_at is not None and t >= w.recover_at:
+                return last_beat(t)
+            return last_beat(w.fail_at)
+
+        def manager_for(jr: _JobRun) -> ReplicaManager:
+            rm = managers.get(jr.job.job_id)
+            if rm is None:
+                rm = ReplicaManager(
+                    jr.plan,
+                    {g.gid: g.nbytes for g in jr.job.grains},
+                    self.topo,
+                    replication=max(
+                        (len(v) for v in jr.plan.replicas.values()), default=3
+                    ),
+                    capacities=capacities,
+                )
+                managers[jr.job.job_id] = rm
+            return rm
+
+        def recover_job(jr: _JobRun, t: float, reason: str) -> None:
+            """Restore the job's replication level onto survivors ∝ capacity
+            and charge the copy cost (paper §IV.c.i re-replication)."""
+            nonlocal re_bytes, re_seconds, n_re_copies
+            rm = manager_for(jr)
+            rm.failed |= dead
+            cost = rm.recover()
+            if cost.events:
+                re_bytes += cost.bytes_written
+                re_seconds += cost.transfer_s
+                n_re_copies += len(cost.events)
+                churn.append(
+                    ChurnEvent(t, "re_replicated", {
+                        "job": jr.job.job_id,
+                        "copies": len(cost.events),
+                        "bytes": cost.bytes_written,
+                        "reason": reason,
+                    })
+                )
+
+        def requeue_lost(loc: Location, t: float) -> None:
+            """Re-queue every task whose only attempts ran on ``loc`` and
+            died with it (conservation: completed + requeued == total)."""
+            nonlocal reassigned
+            for a in self._attempts:
+                if a.worker != loc:
+                    continue
+                jr = jrs[a.job]
+                if a.task in jr.done or a.task in jr.pending:
+                    continue
+                alive_attempts = [
+                    x
+                    for x in jr.attempts_of.get(a.task, [])
+                    if not x.killed and not x.done
+                ]
+                if not alive_attempts:
+                    jr.pending.append(a.task)
+                    reassigned += 1
+
+        def mark_dead(loc: Location, t: float) -> None:
+            """Record one pronouncement (no recovery yet: a sweep can expire
+            a whole pod at once, and recovery must see the full death set —
+            otherwise it re-replicates onto workers dying the same instant
+            and double-charges the copy accounting)."""
+            dead.add(loc)
+            churn.append(ChurnEvent(t, "pronounce_dead", {"worker": name_of[loc]}))
+            requeue_lost(loc, t)
+            pod = loc.pod
+            if pod not in pods_down and all(
+                l in dead for l in self.workers if l.pod == pod
+            ):
+                pods_down.add(pod)
+                churn.append(ChurnEvent(t, "pod_dead", {"pod": pod}))
 
         def launch(wloc: Location, jid: int, gid: int, t: float, speculative: bool) -> None:
             nonlocal moved, cross, n_spec
@@ -475,11 +685,16 @@ class SimCluster:
             if a.done or a.killed:
                 return
             a.killed = True
-            wasted += a.progress(t)
+            # work units (fraction × task work), same currency as done_work —
+            # comparable across policies and presets
+            wasted += a.progress(t) * a.work
             if a.fetch_bytes > 0 and a.compute_start is None:
                 pipe.remove(a, t)
                 reschedule_pipe()
             if busy.get(a.worker) is a:
+                # the slot was occupied from launch to kill: killed backups
+                # and failed workers' attempts are real occupancy, not idle
+                busy_time[a.worker] += t - a.start
                 busy[a.worker] = None
 
         def job_views(t: float) -> list[JobView]:
@@ -515,7 +730,7 @@ class SimCluster:
                 if views:
                     jid = sched.select(t, views, self.workers[wloc])
                     jr = jrs[jid]
-                    gid = self._pick_local_first(jr.pending, jr.job.plan, wloc)
+                    gid = pick_local_first(jr, wloc)
                     jr.pending.remove(gid)
                     launch(wloc, jid, gid, t, False)
                 else:
@@ -532,13 +747,24 @@ class SimCluster:
                     if pick is not None:
                         launch(wloc, pick[0], pick[1], t, True)
 
-        # arrival + failure timers
+        # arrival + failure + rate-boundary timers
         for jid, jr in sorted(jrs.items()):
             push(jr.job.submit_t, "job_arrival", jid)
         for w in self.workers.values():
+            if w.slow_at is not None:
+                push(w.slow_at, "rate_change", w.loc)
+                if w.slow_until is not None and w.slow_until > w.slow_at:
+                    push(w.slow_until, "rate_change", w.loc)
             if w.fail_at is not None:
-                push(w.fail_at + self.dead_after_s, "pronounce_dead", w.loc)
                 push(w.fail_at, "worker_fail", w.loc)
+                # the timeout runs from the last heartbeat the coordinator
+                # actually received, not from the failure instant (+ε so the
+                # float sum can never land a hair before the expiry check)
+                pronounce_t = last_beat(w.fail_at) + self.dead_after_s + 1e-9
+                if w.recover_at is None or w.recover_at > pronounce_t:
+                    push(pronounce_t, "pronounce_check", w.loc)
+                if w.recover_at is not None:
+                    push(max(w.recover_at, w.fail_at), "worker_recover", w.loc)
 
         makespan = 0.0
         total_done = 0
@@ -556,34 +782,123 @@ class SimCluster:
             if kind == "pipe_check":
                 pass  # advance above did the work
             elif kind == "job_arrival":
-                jrs[payload].arrived = True
+
+                def arrive(jid: int) -> None:
+                    jrs[jid].arrived = True
+                    churn.append(ChurnEvent(t, "job_arrival", {"job": jid}))
+                    # a job submitted after a death was placed against the
+                    # full fleet: re-proportion its replicas on arrival
+                    if mode == "reproportion" and dead:
+                        recover_job(jrs[jid], t, "job_arrival")
+
+                arrive(payload)
                 # drain same-instant arrivals before scheduling: a burst must
                 # be arbitrated as one queue (fair splitting slots max-min),
                 # not serialized job-by-job with the first seizing every slot
                 while heap and heap[0][0] == t and heap[0][2] == "job_arrival":
                     _, _, _, jid2 = heapq.heappop(heap)
-                    jrs[jid2].arrived = True
+                    arrive(jid2)
+            elif kind == "rate_change":
+                w = self.workers[payload]
+                # a silent (failed or pronounced) worker reports no rate
+                # change, and it has no running attempt to re-rate — its
+                # boundary is unobservable and must not enter the trace
+                if not w.alive(t) or payload in dead:
+                    schedule_wave(t)
+                    continue
+                slowed = w.rate_at(t) < w.rate
+                churn.append(
+                    ChurnEvent(t, "straggler_on" if slowed else "straggler_off",
+                               {"worker": name_of[payload],
+                                "factor": w.rate_at(t) / w.rate})
+                )
+                # re-rate the attempt currently computing on this worker:
+                # keep progress continuous at t, finish at t + remaining
+                # work over the new rate (the mid-task straggler LATE [12]
+                # was built to detect — previously in-flight attempts kept
+                # their launch-time rate, so this signal could never occur)
+                a = busy.get(payload)
+                if (
+                    a is not None
+                    and not a.done
+                    and not a.killed
+                    and a.compute_start is not None
+                ):
+                    r_new = max(w.rate_at(t), 1e-9)
+                    if t < a.compute_start:
+                        # fixed-delay fetch still in progress: the whole
+                        # compute window now runs at the new rate
+                        a.compute_s = a.work / r_new
+                        a.finish_t = a.compute_start + a.compute_s
+                        push(a.finish_t, "finish", a)
+                    else:
+                        frac = (t - a.compute_start) / a.compute_s
+                        if frac < 1.0 - 1e-12:
+                            rem_s = a.work * (1.0 - frac) / r_new
+                            a.compute_s = rem_s / (1.0 - frac)
+                            a.compute_start = t - frac * a.compute_s
+                            a.finish_t = t + rem_s
+                            push(a.finish_t, "finish", a)
             elif kind == "worker_fail":
+                churn.append(
+                    ChurnEvent(t, "worker_fail", {"worker": name_of[payload]})
+                )
                 for a in list(self._attempts):
                     if a.worker == payload and not a.done and not a.killed:
                         kill(a, t)  # work lost immediately; requeue on pronounce
-            elif kind == "pronounce_dead":
-                dead.add(payload)
-                for a in self._attempts:
-                    jr = jrs[a.job]
-                    if a.worker == payload and a.task not in jr.done:
-                        alive_attempts = [
-                            x
-                            for x in jr.attempts_of.get(a.task, [])
-                            if not x.killed and not x.done
-                        ]
-                        if not alive_attempts and a.task not in jr.pending:
-                            jr.pending.append(a.task)
-                            reassigned += 1
+            elif kind == "pronounce_check":
+                if payload not in dead:
+                    # freshen the beats the coordinator would have seen so
+                    # the sweep expires exactly the silent workers
+                    for loc2, w2 in self.workers.items():
+                        if loc2 in dead:
+                            continue
+                        st = monitor.workers.get(name_of[loc2])
+                        beat_t = observed_beat(w2, t)
+                        if st is not None and not st.dead and beat_t >= st.last_seen:
+                            monitor.beat(Heartbeat(name_of[loc2], time=beat_t))
+                    newly_dead = monitor.sweep(t)
+                    for name in newly_dead:
+                        mark_dead(loc_of[name], t)
+                    # one recovery pass over the complete death set
+                    if newly_dead and mode == "reproportion":
+                        for _, jr in sorted(jrs.items()):
+                            if jr.arrived and not jr.finished():
+                                recover_job(jr, t, "pronounce_dead")
+            elif kind == "worker_recover":
+                w = self.workers[payload]
+                name = name_of[payload]
+                if payload in dead:
+                    # paper: an expired node's next heartbeat is answered
+                    # with RE_REGISTER; it rejoins with fresh liveness state
+                    monitor.revive(name, t, nameplate=w.rate)
+                    dead.discard(payload)
+                    for rm in managers.values():
+                        rm.failed.discard(payload)
+                    churn.append(ChurnEvent(t, "re_registered", {"worker": name}))
+                    # re_registered resets the observed rate to nominal; if
+                    # the worker rejoins still inside a slow window, report
+                    # it immediately so every trace prefix has a consistent
+                    # rate state (its boundaries during the silence were
+                    # unobservable and never emitted)
+                    if w.rate_at(t) < w.rate:
+                        churn.append(
+                            ChurnEvent(t, "straggler_on",
+                                       {"worker": name,
+                                        "factor": w.rate_at(t) / w.rate})
+                        )
+                    if payload.pod in pods_down:
+                        pods_down.discard(payload.pod)
+                        churn.append(
+                            ChurnEvent(t, "pod_alive", {"pod": payload.pod})
+                        )
+                else:
+                    monitor.beat(Heartbeat(name, time=t))
+                requeue_lost(payload, t)
             elif kind == "finish":
                 a = payload
-                if a.killed or a.done:
-                    continue
+                if a.killed or a.done or a.finish_t != t:
+                    continue  # stale entry: the attempt was re-rated since
                 w = self.workers[a.worker]
                 if not w.alive(t):
                     continue
@@ -634,15 +949,9 @@ class SimCluster:
             completed=total_done,
             reassigned_after_failure=reassigned,
             util=util,
+            elastic=mode,
+            churn=churn,
+            re_replicated_bytes=re_bytes,
+            re_replication_s=re_seconds,
+            n_re_replicated=n_re_copies,
         )
-
-    def _pick_local_first(self, pending: list[int], plan: PlacementPlan, wloc: Location) -> int:
-        """HDFS data-awareness: node-local > pod-local > any (paper §III.a)."""
-        best, best_d = pending[0], 3
-        for gid in pending:
-            d = min(self.topo.distance(r, wloc) for r in plan.replicas[gid])
-            if d < best_d:
-                best, best_d = gid, d
-                if d == 0:
-                    break
-        return best

@@ -10,10 +10,15 @@ by just varying the seed.
 
 Layout:
   ClusterSpec  — pods, per-pod speed ratio, bandwidths, fault injection
+                 (per-node stragglers/failures, whole-pod death/recovery,
+                 heartbeat cadence + pronounce-dead timeout)
   WorkloadSpec — arrivals (burst | uniform | poisson), size mix, shuffle frac
   build_cluster / generate_workload / build_scenario — the factory functions
+  build_sim    — (SimCluster, jobs) honouring the spec's heartbeat timing,
+                 for churn presets whose pronounce window matters
   PRESETS      — canonical named scenarios used by benchmarks and tests
-                 ("hetero_2pod" is the paper's slow/fast pod mix)
+                 ("hetero_2pod" is the paper's slow/fast pod mix;
+                 "churny_3pod" kills a pod mid-queue under straggler churn)
 """
 
 from __future__ import annotations
@@ -23,7 +28,7 @@ from dataclasses import dataclass, field, replace
 from typing import Optional
 
 from repro.core.placement import Grain, plan_placement
-from repro.core.simulator import SimJob, SimWorker
+from repro.core.simulator import SimCluster, SimJob, SimWorker
 from repro.core.topology import Topology
 
 
@@ -42,6 +47,13 @@ class ClusterSpec:
     straggler_window_s: tuple[float, float] = (10.0, 300.0)
     fail_frac: float = 0.0
     fail_window_s: tuple[float, float] = (30.0, 600.0)
+    # churn extensions (PR 2): flapping stragglers, whole-pod death/regrow,
+    # and the heartbeat timing that turns silence into a pronouncement
+    straggler_duration_s: Optional[tuple[float, float]] = None  # recover window
+    pod_fail: Optional[tuple[int, float]] = None  # (pod index, failure time)
+    pod_recover_s: Optional[float] = None  # pod re-registers this much later
+    heartbeat_s: float = 3.0
+    dead_after_s: float = 600.0  # the paper's 10-minute timeout
 
     @property
     def num_pods(self) -> int:
@@ -85,8 +97,19 @@ def build_cluster(
         if spec.straggler_frac > 0 and rng.random() < spec.straggler_frac:
             w.slow_at = rng.uniform(*spec.straggler_window_s)
             w.slow_factor = spec.straggler_factor
+            if spec.straggler_duration_s is not None:
+                w.slow_until = w.slow_at + rng.uniform(*spec.straggler_duration_s)
         if spec.fail_frac > 0 and rng.random() < spec.fail_frac:
             w.fail_at = rng.uniform(*spec.fail_window_s)
+    # deterministic whole-pod death (the paper's §IV.c failure chain): every
+    # node in the pod goes silent together, optionally re-registering later
+    if spec.pod_fail is not None:
+        pod, fail_t = spec.pod_fail
+        for w in workers:
+            if w.loc.pod == pod:
+                w.fail_at = fail_t
+                if spec.pod_recover_s is not None:
+                    w.recover_at = fail_t + spec.pod_recover_s
     return topo, workers
 
 
@@ -194,6 +217,26 @@ PRESETS: dict[str, Scenario] = {
         workload=WorkloadSpec(n_jobs=16, arrival="poisson", mean_interarrival_s=40.0),
         description="seeded stragglers + node deaths on the het mix",
     ),
+    # The elastic-churn regime (PR 2 / paper §IV.c): a whole pod dies while
+    # the queue is contended and re-registers near the tail; stragglers flap
+    # on and off under load. The 60 s pronounce timeout makes the failure
+    # chain land mid-workload; benchmarks/bench_elastic.py (claim 8) gates
+    # capacity-aware re-proportioning vs static allocation on this preset.
+    "churny_3pod": Scenario(
+        name="churny_3pod",
+        cluster=ClusterSpec(
+            nodes_per_pod=4, pod_rates=(1.0, 0.7, 0.4), cross_pod_bw=0.8e9,
+            straggler_frac=0.25, straggler_factor=0.15,
+            straggler_window_s=(30.0, 240.0), straggler_duration_s=(60.0, 180.0),
+            pod_fail=(1, 120.0), pod_recover_s=420.0,
+            heartbeat_s=3.0, dead_after_s=60.0,
+        ),
+        workload=WorkloadSpec(
+            n_jobs=18, arrival="poisson", mean_interarrival_s=15.0,
+            nbytes_per_task=8 << 30, remote_input_frac=0.1,
+        ),
+        description="pod1 dies mid-queue (60s heartbeat timeout) and re-registers; stragglers flap under load",
+    ),
 }
 
 
@@ -208,3 +251,22 @@ def build_scenario(
     topo, workers = build_cluster(sc.cluster, seed=seed)
     jobs = generate_workload(wspec, topo, workers, seed=seed)
     return topo, workers, jobs
+
+
+def build_sim(
+    name_or_scenario, seed: int = 0, n_jobs: Optional[int] = None
+) -> tuple[SimCluster, list[SimJob]]:
+    """(SimCluster, jobs) for a preset, honouring its heartbeat timing.
+
+    ``build_scenario`` callers construct ``SimCluster(workers, topo)`` with
+    the default 10-minute pronounce timeout; churn presets carry their own
+    ``heartbeat_s``/``dead_after_s`` so the failure chain lands mid-workload
+    — use this builder whenever the preset injects faults."""
+    sc = PRESETS[name_or_scenario] if isinstance(name_or_scenario, str) else name_or_scenario
+    topo, workers, jobs = build_scenario(sc, seed=seed, n_jobs=n_jobs)
+    sim = SimCluster(
+        workers, topo,
+        heartbeat_s=sc.cluster.heartbeat_s,
+        dead_after_s=sc.cluster.dead_after_s,
+    )
+    return sim, jobs

@@ -6,47 +6,70 @@ Wires the paper's failure chain end to end:
   schedule (§IV.b.ii re-proportioning) → restore training state from the
   last redundant checkpoint → resume.
 
+Two feeds drive the controller:
+
+* **live monitor callbacks** — ``HeartbeatMonitor.on_dead`` fires when a
+  worker's silence crosses the timeout (the training-loop path used by
+  tests/test_system.py and examples/heterogeneous_cluster.py);
+* **simulator churn traces** — :meth:`ElasticController.apply_churn`
+  replays a ``WorkloadResult.churn`` list (core/simulator.py) so pod
+  shrink/re-grow decisions are exercised against *contended multi-job
+  queues*, not a lone job: the simulator pronounces deaths from
+  heartbeat-derived timeouts mid-workload, and this controller mirrors
+  them into the coordinator's capacity schedule (re-proportioned on the
+  next step) and the replica manager's cost accounting.
+
 On hardware the "rebuild the mesh" step re-runs jax.distributed init with
 the survivor set and re-jits the step (the compiled artifact is a pure
 function of (cfg, mesh)); in this container the coordinator's logical pods
-shrink instead — the control flow is identical and is exercised by
-tests/test_elastic.py and examples/heterogeneous_cluster.py.
+shrink instead — the control flow is identical.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import TYPE_CHECKING, Any, Iterable, Optional
 
-from repro.checkpoint import CheckpointManager
-from repro.core.coordinator import HetCoordinator
 from repro.core.heartbeat import HeartbeatMonitor
-from repro.core.placement import PlacementPlan
 from repro.core.replication import ReplicaManager
 from repro.core.topology import Location
+
+if TYPE_CHECKING:  # jax-heavy imports, type-only: the simulator-side churn
+    from repro.checkpoint import CheckpointManager  # path must not pull jax
+    from repro.core.coordinator import HetCoordinator
 
 
 @dataclass
 class ElasticEvent:
     time: float
-    kind: str  # pod_dead | re_replicated | restored | resumed
+    kind: str  # pod_dead | re_replicated | restored | resumed | pod_re_registered
     detail: dict = field(default_factory=dict)
 
 
 class ElasticController:
+    """Coordinator-side response to liveness churn.
+
+    ``coordinator`` is optional: a simulator-driven controller can run with
+    just a :class:`HeartbeatMonitor` (liveness + replica accounting) — the
+    training-side shrink/restore steps are skipped when absent.
+    """
+
     def __init__(
         self,
-        coordinator: HetCoordinator,
+        coordinator: Optional["HetCoordinator"] = None,
         replicas: Optional[ReplicaManager] = None,
-        checkpoints: Optional[CheckpointManager] = None,
+        checkpoints: Optional["CheckpointManager"] = None,
         pod_locations: Optional[dict[str, Location]] = None,
+        monitor: Optional[HeartbeatMonitor] = None,
     ):
         self.coord = coordinator
         self.replicas = replicas
         self.ckpt = checkpoints
         self.pod_locations = pod_locations or {}
         self.events: list[ElasticEvent] = []
-        self.coord.monitor.on_dead = self._on_dead
+        self.monitor = monitor or (coordinator.monitor if coordinator else None)
+        if self.monitor is not None:
+            self.monitor.on_dead = self._on_dead
         self._template = None
         self._restore_requested = False
 
@@ -56,7 +79,8 @@ class ElasticController:
     # ------------------------------------------------------------------
     def _on_dead(self, worker: str, t: float) -> None:
         self.events.append(ElasticEvent(t, "pod_dead", {"pod": worker}))
-        self.coord.fail_pod(worker)
+        if self.coord is not None:
+            self.coord.fail_pod(worker)
         if self.replicas is not None:
             loc = self.pod_locations.get(worker)
             if loc is not None:
@@ -76,6 +100,41 @@ class ElasticController:
         self._restore_requested = True
 
     # ------------------------------------------------------------------
+    def apply_churn(
+        self,
+        churn: Iterable[Any],
+        pod_names: Optional[dict[int, str]] = None,
+    ) -> list[Any]:
+        """Replay a simulator churn trace against the training side.
+
+        Handles the pod-level transitions of ``WorkloadResult.churn``:
+        ``pod_dead`` pronounces the named pod on the monitor (which fires
+        ``_on_dead`` → coordinator shrink + re-replication), ``pod_alive``
+        re-registers it (re-grow: the next schedule re-proportions over the
+        restored capacity). Worker-level events pass through untouched —
+        the simulator already acted on them. Returns the applied events.
+        """
+        names = pod_names or {}
+        applied = []
+        for ev in churn:
+            if ev.kind == "pod_dead":
+                name = names.get(ev.detail["pod"], f"pod{ev.detail['pod']}")
+                if self.monitor is not None:
+                    self.monitor.pronounce(name, ev.time)
+                applied.append(ev)
+            elif ev.kind == "pod_alive":
+                name = names.get(ev.detail["pod"], f"pod{ev.detail['pod']}")
+                if self.coord is not None:
+                    self.coord.revive_pod(name, ev.time)
+                elif self.monitor is not None:
+                    self.monitor.revive(name, ev.time)
+                self.events.append(
+                    ElasticEvent(ev.time, "pod_re_registered", {"pod": name})
+                )
+                applied.append(ev)
+        return applied
+
+    # ------------------------------------------------------------------
     def maybe_restore(self, params, opt_state):
         """After a death, roll back to the last checkpoint (if any)."""
         if not self._restore_requested or self.ckpt is None or self._template is None:
@@ -93,4 +152,6 @@ class ElasticController:
 
     @property
     def alive_pod_names(self) -> list[str]:
+        if self.coord is None:
+            return [] if self.monitor is None else self.monitor.alive()
         return [p.name for p in self.coord.alive_pods()]

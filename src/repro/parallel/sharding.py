@@ -134,7 +134,10 @@ class ShardingRules:
 
 
 def _active_mesh() -> Optional[Mesh]:
-    mesh = jax.sharding.get_abstract_mesh()
+    # jax.sharding.get_abstract_mesh landed after 0.4.37 — fall through to
+    # the thread-resources env mesh on older versions (this container)
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_abstract() if get_abstract is not None else None
     try:
         if mesh is not None and not mesh.empty:
             return mesh

@@ -1,0 +1,369 @@
+"""Elastic re-mesh under multi-job churn (PR 2, paper §IV.c).
+
+Covers the churn-event flow end to end: in-flight straggler re-rating (the
+bug LATE's signal depended on), heartbeat-derived pronounce-dead, task
+conservation through failure/recovery, re-replication cost accounting
+against an independent ReplicaManager, pod re-registration (re-grow),
+bit-identical churn replays, and the churn-trace feed into the
+training-side ElasticController.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heartbeat import HeartbeatMonitor
+from repro.core.placement import Grain, PlacementPlan, plan_placement
+from repro.core.replication import ReplicaManager
+from repro.core.simulator import SimCluster, SimJob, SimWorker
+from repro.core.topology import Location, Topology
+from repro.core.workload import build_sim
+from repro.launch.elastic import ElasticController
+
+
+def _single_worker(**kw):
+    topo = Topology(num_pods=1, nodes_per_pod=1)
+    w = SimWorker(Location(0, 0), 1.0, **kw)
+    grains = [Grain(0, 1 << 20, work=10.0)]
+    plan = plan_placement(grains, [w.loc], [1.0], topo, 1)
+    return SimCluster([w], topo), grains, plan
+
+
+# ------------------------------------------------- in-flight straggler fix
+
+
+def test_slow_at_inside_compute_window_delays_attempt():
+    """Regression for the in-flight straggler bug: before PR 2 compute_s was
+    fixed at launch, so this attempt finished at t=10 at full speed. Now:
+    5 work at rate 1 (t=0..5), then 5 work at rate 0.5 → finish t=15."""
+    sim, grains, plan = _single_worker(slow_at=5.0, slow_factor=0.5)
+    r = sim.run_job(grains, plan, policy="off")
+    assert r.makespan == pytest.approx(15.0)
+
+
+def test_slow_until_rerates_back_to_full_speed():
+    """5 work @1 (0..5), 2.5 work @0.5 (5..10), 2.5 work @1 → finish 12.5."""
+    sim, grains, plan = _single_worker(slow_at=5.0, slow_factor=0.5, slow_until=10.0)
+    r = sim.run_job(grains, plan, policy="off")
+    assert r.makespan == pytest.approx(12.5)
+
+
+def test_straggler_churn_events_emitted():
+    sim, grains, plan = _single_worker(slow_at=5.0, slow_factor=0.5, slow_until=10.0)
+    job = SimJob(0, tuple(grains), plan)
+    res = sim.run_workload([job], policy="off")
+    kinds = [e.kind for e in res.churn]
+    assert kinds == ["job_arrival", "straggler_on", "straggler_off"]
+
+
+# --------------------------------------- wasted-work units + util credit
+
+
+def _fail_midtask():
+    """w0 (fast) takes the only task, dies halfway; w1 finishes it after the
+    heartbeat-derived pronouncement."""
+    topo = Topology(num_pods=1, nodes_per_pod=2)
+    w0 = SimWorker(Location(0, 0), 1.0, fail_at=5.0)
+    w1 = SimWorker(Location(0, 1), 0.5)
+    grains = [Grain(0, 1 << 20, work=10.0)]
+    plan = plan_placement(grains, [w0.loc, w1.loc], [1.0, 0.5], topo, 2)
+    sim = SimCluster([w0, w1], topo, heartbeat_s=3.0, dead_after_s=60.0)
+    job = SimJob(0, tuple(grains), plan)
+    res = sim.run_workload([job], policy="off")
+    return sim, res
+
+
+def test_wasted_work_charged_in_work_units():
+    """The killed half-done attempt wastes progress × work = 0.5 × 10 = 5.0
+    work units (pre-PR-2 it charged the bare fraction 0.5 — incomparable
+    with done_work)."""
+    sim, res = _fail_midtask()
+    assert res.completed == 1
+    assert res.wasted_work == pytest.approx(5.0)
+    # pronounce at last_beat(5.0)=3.0 + 60s timeout; then w1 computes 20s
+    assert res.makespan == pytest.approx(83.0, abs=1e-6)
+    assert res.reassigned_after_failure == 1
+
+
+def test_util_credits_killed_attempts():
+    """w0 was busy from 0 to its death at 5 — that occupancy counts (pre-PR-2
+    only finished attempts credited busy_time, so failed workers and killed
+    backups read as 0% utilized)."""
+    sim, res = _fail_midtask()
+    assert res.util["pod0/node0"] == pytest.approx(5.0 / res.makespan)
+
+
+# --------------------------------------------------- locality picking fix
+
+
+def test_remote_input_grain_not_picked_as_local():
+    """A shuffle-like grain always crosses the pod pipe (fetch_plan forces
+    distance 2), so locality picking must not prefer it over a genuinely
+    pod-local grain just because a replica happens to sit on the worker."""
+    topo = Topology(num_pods=2, nodes_per_pod=2, cross_pod_bw=1e9)
+    workers = [SimWorker(loc, 1.0 if loc.pod == 0 else 0.01) for loc in topo.workers()]
+    # grain 0: remote_input, primary on the fast worker; grain 1: plain,
+    # replica on the fast worker's pod-mate
+    grains = [
+        Grain(0, 1 << 30, work=5.0, remote_input=True),
+        Grain(1, 1 << 30, work=5.0),
+    ]
+    plan = PlacementPlan(
+        primary={0: Location(0, 0), 1: Location(0, 1)},
+        replicas={0: [Location(0, 0)], 1: [Location(0, 1)]},
+        per_worker={w.loc: [] for w in workers},
+    )
+    sim = SimCluster(workers, topo)
+    job = SimJob(0, tuple(grains), plan)
+    sim.run_workload([job], policy="off")
+    first = sim._attempts[0]
+    assert first.worker == Location(0, 0)
+    assert first.task == 1  # pod-local beats forced-cross-pod (old code: 0)
+
+
+# ------------------------------------------------- churn-path properties
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["static", "reproportion"]))
+@settings(max_examples=12, deadline=None)
+def test_recovery_conserves_tasks_under_churn(seed, mode):
+    """completed + requeued-and-completed == total: every submitted task
+    completes exactly once even when a pod dies mid-queue and re-registers."""
+    sim, jobs = build_sim("churny_3pod", seed=seed, n_jobs=8)
+    res = sim.run_workload(jobs, scheduler="capacity", policy="late", elastic=mode)
+    assert res.completed == sum(len(j.grains) for j in jobs)
+    assert all(jr.completed == jr.n_tasks for jr in res.jobs)
+    assert res.wasted_work >= 0.0
+    assert all(0.0 <= u <= 1.0 + 1e-9 for u in res.util.values())
+
+
+def test_churn_trace_records_failure_chain():
+    sim, jobs = build_sim("churny_3pod", seed=0)
+    res = sim.run_workload(jobs, scheduler="capacity", policy="late", elastic=True)
+    kinds = [e.kind for e in res.churn]
+    for expected in ("job_arrival", "worker_fail", "pronounce_dead", "pod_dead",
+                     "re_replicated", "re_registered", "pod_alive"):
+        assert expected in kinds, expected
+    # the chain is causally ordered: fail < pronounce < re-register
+    t_fail = min(e.time for e in res.churn if e.kind == "worker_fail")
+    t_dead = min(e.time for e in res.churn if e.kind == "pronounce_dead")
+    t_back = min(e.time for e in res.churn if e.kind == "re_registered")
+    assert t_fail < t_dead < t_back
+    # heartbeat-derived: pronounced dead_after_s after the LAST HEARTBEAT
+    # (t=120 → last beat 120//3*3 = 120), not after the failure instant
+    assert t_dead == pytest.approx(120.0 + 60.0, abs=1e-6)
+
+
+def test_rereplication_bytes_match_replica_manager():
+    """The engine's cost accounting must equal an offline ReplicaManager
+    replaying the same failure on the same plan."""
+    topo = Topology(num_pods=2, nodes_per_pod=2)
+    workers = [SimWorker(loc, 1.0) for loc in topo.workers()]
+    workers[1].fail_at = 10.0  # pod0/node1
+    grains = tuple(Grain(g, 1 << 30, work=40.0) for g in range(12))
+    locs = [w.loc for w in workers]
+    plan = plan_placement(grains, locs, [w.rate for w in workers], topo, 2)
+    sim = SimCluster(workers, topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off", elastic=True)
+
+    offline = ReplicaManager(
+        PlacementPlan(plan.primary,
+                      {g: list(v) for g, v in plan.replicas.items()},
+                      plan.per_worker),
+        {g.gid: g.nbytes for g in grains}, topo,
+        replication=max(len(v) for v in plan.replicas.values()),
+        capacities={w.loc: w.rate for w in workers},
+    )
+    offline.fail_worker(Location(0, 1))
+    cost = offline.recover()
+    assert res.re_replicated_bytes == pytest.approx(cost.bytes_written)
+    assert res.re_replication_s == pytest.approx(cost.transfer_s)
+    assert res.n_re_replicated == len(cost.events)
+    # and the churn trace carries the same total
+    traced = sum(e.detail["bytes"] for e in res.churn if e.kind == "re_replicated")
+    assert traced == pytest.approx(res.re_replicated_bytes)
+
+
+def test_simultaneous_pod_death_recovery_not_double_charged():
+    """A whole pod expiring in one sweep must be pronounced as a set before
+    recovery runs: per-worker recovery would re-replicate onto pod-mates
+    that are dead at the same instant and double-charge the accounting."""
+    topo = Topology(num_pods=3, nodes_per_pod=2)
+    workers = [SimWorker(loc, 1.0) for loc in topo.workers()]
+    for w in workers:
+        if w.loc.pod == 1:
+            w.fail_at = 10.0  # both pod1 workers go silent together
+    grains = tuple(Grain(g, 1 << 30, work=60.0) for g in range(12))
+    locs = [w.loc for w in workers]
+    plan = plan_placement(grains, locs, [w.rate for w in workers], topo, 3)
+    sim = SimCluster(workers, topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off", elastic=True)
+
+    offline = ReplicaManager(
+        PlacementPlan(plan.primary,
+                      {g: list(v) for g, v in plan.replicas.items()},
+                      plan.per_worker),
+        {g.gid: g.nbytes for g in grains}, topo,
+        replication=max(len(v) for v in plan.replicas.values()),
+        capacities={w.loc: w.rate for w in workers},
+    )
+    offline.fail_worker(Location(1, 0))
+    offline.fail_worker(Location(1, 1))
+    cost = offline.recover()  # one pass over the complete death set
+    assert res.re_replicated_bytes == pytest.approx(cost.bytes_written)
+    assert res.n_re_replicated == len(cost.events)
+    # and nothing was copied onto the dead pod
+    for jr_reps in offline.plan.replicas.values():
+        assert all(r.pod != 1 for r in jr_reps if r not in plan.replicas)
+
+
+def test_no_straggler_events_from_dead_workers():
+    """A pronounced-dead worker is silent: its slow_at/slow_until boundaries
+    must not appear in the churn trace while it is down."""
+    topo = Topology(num_pods=1, nodes_per_pod=2)
+    w0 = SimWorker(Location(0, 0), 1.0, fail_at=5.0,
+                   slow_at=50.0, slow_factor=0.5, slow_until=60.0)
+    w1 = SimWorker(Location(0, 1), 0.2)
+    grains = tuple(Grain(g, 1 << 20, work=10.0) for g in range(6))
+    plan = plan_placement(grains, [w0.loc, w1.loc], [1.0, 0.2], topo, 2)
+    sim = SimCluster([w0, w1], topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off")
+    assert res.completed == 6
+    stragglers = [e for e in res.churn if e.kind.startswith("straggler")]
+    assert stragglers == []  # both boundaries fall inside w0's silence
+
+
+def test_degraded_rejoin_reports_straggler_state():
+    """A worker whose slow window straddles its outage must re-report its
+    rate on re-registration, so every trace prefix implies the true rate:
+    slow_at falls inside the silence (unobservable), but the rejoin at
+    t=50 is still inside the window → straggler_on@50, paired by the
+    observable straggler_off@80."""
+    topo = Topology(num_pods=1, nodes_per_pod=2)
+    w0 = SimWorker(Location(0, 0), 1.0, fail_at=5.0, recover_at=50.0,
+                   slow_at=10.0, slow_factor=0.5, slow_until=80.0)
+    w1 = SimWorker(Location(0, 1), 0.2)
+    grains = tuple(Grain(g, 1 << 20, work=10.0) for g in range(8))
+    plan = plan_placement(grains, [w0.loc, w1.loc], [1.0, 0.2], topo, 2)
+    sim = SimCluster([w0, w1], topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off")
+    assert res.completed == 8
+    rate_events = [(e.time, e.kind) for e in res.churn
+                   if e.kind.startswith("straggler")]
+    assert rate_events == [(50.0, "straggler_on"), (80.0, "straggler_off")]
+
+
+def test_slow_window_ending_during_silence_never_enters_trace():
+    """Mirror case: the whole slow window (2..20) sits inside the outage
+    (5..50) except its observable start — re_registered resets the rate, so
+    no unpaired straggler_on survives past the rejoin."""
+    topo = Topology(num_pods=1, nodes_per_pod=2)
+    w0 = SimWorker(Location(0, 0), 1.0, fail_at=5.0, recover_at=50.0,
+                   slow_at=2.0, slow_factor=0.5, slow_until=20.0)
+    w1 = SimWorker(Location(0, 1), 0.2)
+    grains = tuple(Grain(g, 1 << 20, work=10.0) for g in range(8))
+    plan = plan_placement(grains, [w0.loc, w1.loc], [1.0, 0.2], topo, 2)
+    sim = SimCluster([w0, w1], topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off")
+    assert res.completed == 8
+    kinds = [e.kind for e in res.churn]
+    # straggler_on@2 is observable; its end at 20 is not, and the rejoin at
+    # 50 (full rate) resets the state — no events after re_registered
+    i_rereg = kinds.index("re_registered")
+    assert "straggler_on" in kinds[:i_rereg]
+    assert not any(k.startswith("straggler") for k in kinds[i_rereg:])
+
+
+def test_static_mode_moves_no_recovery_bytes():
+    sim, jobs = build_sim("churny_3pod", seed=1, n_jobs=8)
+    res = sim.run_workload(jobs, policy="late", elastic="static")
+    assert res.re_replicated_bytes == 0.0
+    assert res.n_re_replicated == 0
+    assert res.elastic == "static"
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_bit_identical_replay_with_churn(seed):
+    a = build_sim("churny_3pod", seed=seed, n_jobs=10)
+    b = build_sim("churny_3pod", seed=seed, n_jobs=10)
+    ra = a[0].run_workload(a[1], scheduler="capacity", policy="late", elastic=True)
+    rb = b[0].run_workload(b[1], scheduler="capacity", policy="late", elastic=True)
+    assert ra == rb  # dataclass equality: every float, every churn event
+
+
+def test_recovered_worker_reused_after_reregistration():
+    """Re-grow: a worker that re-registers after pronouncement gets tasks
+    again, and its pre-failure work is not double-counted."""
+    topo = Topology(num_pods=1, nodes_per_pod=2)
+    w0 = SimWorker(Location(0, 0), 1.0, fail_at=5.0, recover_at=100.0)
+    w1 = SimWorker(Location(0, 1), 0.1)
+    grains = tuple(Grain(g, 1 << 20, work=10.0) for g in range(6))
+    plan = plan_placement(grains, [w0.loc, w1.loc], [1.0, 0.1], topo, 2)
+    sim = SimCluster([w0, w1], topo, dead_after_s=30.0)
+    res = sim.run_workload([SimJob(0, grains, plan)], policy="off")
+    assert res.completed == 6
+    assert any(a.worker == w0.loc and a.start >= 100.0 for a in sim._attempts)
+    kinds = [e.kind for e in res.churn]
+    assert "re_registered" in kinds
+    # w1 stayed up, so the pod never fully died: no pod-level transitions
+    assert "pod_dead" not in kinds and "pod_alive" not in kinds
+
+
+# -------------------------------------------- churn feed into launch-side
+
+
+def test_apply_churn_drives_elastic_controller():
+    """The simulator's churn trace replays against the training-side
+    controller: pod_dead shrinks the monitor's fleet, pod_alive re-grows it
+    — the contended-queue feed the single-job elastic path never had."""
+    sim, jobs = build_sim("churny_3pod", seed=0)
+    res = sim.run_workload(jobs, scheduler="capacity", policy="late", elastic=True)
+
+    monitor = HeartbeatMonitor()
+    for p in range(3):
+        monitor.register(f"pod{p}", 0.0)
+    ctrl = ElasticController(monitor=monitor)
+    applied = ctrl.apply_churn(res.churn)
+    assert [e.kind for e in applied] == ["pod_dead", "pod_alive"]
+    # death fired the controller's shrink callback, regrow re-registered it
+    assert [e.kind for e in ctrl.events] == ["pod_dead", "pod_re_registered"]
+    assert ctrl.events[0].detail["pod"] == "pod1"
+    assert monitor.is_alive("pod1")  # re-registered by the pod_alive replay
+    assert set(monitor.alive()) == {"pod0", "pod1", "pod2"}
+
+
+# ---------------------------------------------- policy claims under churn
+
+
+def test_late_beats_naive_on_faulty_preset():
+    """§III.b on the updated ``faulty`` preset (in-flight stragglers now
+    real): LATE matches naive's seed-mean makespan while launching far
+    fewer backups and wasting far less work — the paper's 'wrong tasks
+    chosen, resources wasted' critique, quantified."""
+    naive_ms = late_ms = naive_wasted = late_wasted = 0.0
+    for seed in range(6):
+        sim, jobs = build_sim("faulty", seed=seed)
+        n = sim.run_workload(jobs, policy="naive")
+        sim, jobs = build_sim("faulty", seed=seed)
+        l = sim.run_workload(jobs, policy="late")
+        naive_ms += n.makespan
+        late_ms += l.makespan
+        naive_wasted += n.wasted_work
+        late_wasted += l.wasted_work
+    assert late_ms <= naive_ms * 1.01
+    assert late_wasted <= 0.75 * naive_wasted
+
+
+def test_reproportion_beats_static_on_churny_preset():
+    """The claim-8 acceptance gate, at test scale: capacity-aware
+    re-proportioning after the pod death must not lose to static allocation
+    on seed-mean makespan (benchmarks/bench_elastic.py sweeps more seeds)."""
+    static_ms = repro_ms = 0.0
+    for seed in range(4):
+        sim, jobs = build_sim("churny_3pod", seed=seed)
+        static_ms += sim.run_workload(jobs, scheduler="capacity", policy="late",
+                                      elastic="static").makespan
+        sim, jobs = build_sim("churny_3pod", seed=seed)
+        repro_ms += sim.run_workload(jobs, scheduler="capacity", policy="late",
+                                     elastic="reproportion").makespan
+    assert repro_ms <= static_ms

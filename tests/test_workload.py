@@ -177,14 +177,19 @@ def test_workload_generation_deterministic():
 
 # ------------------------------------------------- golden regression pins
 
-# Pinned against the refactored job-agnostic loop (PR 1) — identical to the
-# pre-refactor seed behaviour: the heartbeat-scaled speculative lag plus the
-# per-job naive mean keep single-job semantics bit-for-bit. The setup is
+# Pinned against the churn-aware loop (PR 2). Two deliberate semantic bumps
+# from the PR 1 pins: (1) a worker's ``slow_at``/``slow_until`` now re-rates
+# the attempt already in flight (pre-PR-2, in-flight attempts kept their
+# launch-time rate, so a mid-task straggler could not exist — "off" jumps to
+# 1010s because _setup's straggler now drags its current task, factor 0.01,
+# instead of quietly finishing it at full speed and grabbing another);
+# (2) ``wasted_work`` is in work units (progress × task work), the same
+# currency as done_work, not a bare progress fraction. The setup is
 # test_core_speculation._setup's default scenario; these numbers moving
 # means the event loop's semantics changed — bump deliberately, not
 # accidentally.
-_GOLDEN_MAKESPAN = {"off": 420.0, "naive": 205.47644040434605, "late": 204.14194104707803}
-_GOLDEN_WASTED = {"off": 0.0, "naive": 5.866667614835959, "late": 2.221724546863034}
+_GOLDEN_MAKESPAN = {"off": 1010.0, "naive": 204.15153974772463, "late": 204.15153974772463}
+_GOLDEN_WASTED = {"off": 0.0, "naive": 84.82107678040613, "late": 30.302914842492875}
 
 
 def _speculation_setup():

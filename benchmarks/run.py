@@ -22,6 +22,7 @@ def main(argv=None) -> None:
     opts = args.parse_args(argv)
 
     from benchmarks import (
+        bench_admission,
         bench_elastic,
         bench_heartbeat,
         bench_namespace,
@@ -43,6 +44,8 @@ def main(argv=None) -> None:
          lambda: bench_workload.main(smoke=opts.smoke)),
         ("claim8: elastic re-mesh under multi-job churn",
          lambda: bench_elastic.main(smoke=opts.smoke)),
+        ("claim9: SLO-aware admission control under overload",
+         lambda: bench_admission.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

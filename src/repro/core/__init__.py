@@ -10,8 +10,11 @@ replication — §IV.c.i replica maintenance + erasure-striping trade-off
 namespace   — §IV.d.i name-node byte-accounting + sharded scaling fix
 tuning      — §IV.b.i task-count / block-size rules of thumb
 coordinator — jobtracker analogue: het-DP training step end to end
-scheduler   — inter-job slot schedulers (fifo | fair | capacity-weighted)
+scheduler   — inter-job slot schedulers (fifo | fair | fair_capacity |
+              capacity-weighted)
 workload    — seeded multi-job scenario generator + canonical presets
+admission   — SLO-aware admission control (admit/reject/defer at the door),
+              shared by the simulator and launch/serve.py
 """
 
 from repro.core.capacity import CapacityEstimator, NodeProfile, PodProfile  # noqa: F401
@@ -26,6 +29,13 @@ from repro.core.placement import (  # noqa: F401
     plan_placement,
     proportional_counts,
     uniform_counts,
+)
+from repro.core.admission import (  # noqa: F401
+    ADMISSION,
+    AdmissionPolicy,
+    ClusterView,
+    JobRequest,
+    get_policy,
 )
 from repro.core.replication import ReplicaManager, StripingScheme  # noqa: F401
 from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView  # noqa: F401

@@ -12,6 +12,10 @@ fair      — max-min fair share over *slots* (the Facebook fair scheduler):
             slots. Note this counts slots, not speed — on a heterogeneous
             cluster two jobs with equal slot counts can hold very unequal
             compute, the same homogeneity assumption the paper critiques.
+fair_capacity — max-min fair share over *measured capacity*: the freed slot
+            goes to the job holding the least aggregate rate, so fairness
+            is in the currency that actually finishes work on a slow/fast
+            pod mix (the het-aware repair of `fair`).
 capacity  — the paper's §IV.b.ii "fragments ∝ speed" rule lifted to the job
             level: the currency is *measured capacity* (sum of the rates of
             the workers a job occupies), not slot count, and each freed
@@ -101,8 +105,26 @@ class CapacityWeightedScheduler(JobScheduler):
         return max(jobs, key=lambda j: (deficit(j), -j.submit_t, -j.job_id)).job_id
 
 
+class FairCapacityScheduler(JobScheduler):
+    """Max-min fairness over *measured capacity*: feed the job currently
+    holding the least aggregate rate, not the fewest slots. The slot-fair
+    scheduler repeats the paper's homogeneity assumption — two jobs with
+    equal slot counts can hold very unequal compute on a slow/fast pod mix;
+    equalising ``alloc_capacity`` (Σ ``rate_at(t)`` of occupied workers) is
+    the same fix capacity-proportional placement (§IV.b.ii) applies to
+    data: the currency is measured speed, not node count."""
+
+    name = "fair_capacity"
+
+    def select(self, t, jobs, worker):
+        return min(
+            jobs, key=lambda j: (j.alloc_capacity, j.submit_t, j.job_id)
+        ).job_id
+
+
 SCHEDULERS: dict[str, Callable[[], JobScheduler]] = {
     "fifo": FifoScheduler,
     "fair": FairScheduler,
+    "fair_capacity": FairCapacityScheduler,
     "capacity": CapacityWeightedScheduler,
 }

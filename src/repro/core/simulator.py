@@ -47,6 +47,16 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from repro.core.admission import (
+    ADMIT,
+    DEFER,
+    AdmissionPolicy,
+    ClusterView,
+    JobRequest,
+    get_policy,
+    quantile as _quantile,
+    trailing_class_p99,
+)
 from repro.core.heartbeat import Heartbeat, HeartbeatMonitor
 from repro.core.placement import Grain, PlacementPlan
 from repro.core.replication import ReplicaManager
@@ -83,12 +93,20 @@ class SimWorker:
 
 @dataclass(frozen=True)
 class SimJob:
-    """One job in a workload: its grains, their placement, and arrival time."""
+    """One job in a workload: its grains, their placement, and arrival time.
+
+    ``slo_class``/``deadline_s`` are the admission-control handles (PR 3):
+    class 0 is the strictest SLO; the deadline is a sojourn budget relative
+    to ``submit_t``. Both default to "no SLO" so pre-admission workloads
+    replay unchanged.
+    """
 
     job_id: int
     grains: tuple[Grain, ...]
     plan: PlacementPlan
     submit_t: float = 0.0
+    slo_class: int = 0
+    deadline_s: float = math.inf
 
     @property
     def total_work(self) -> float:
@@ -172,7 +190,16 @@ class SimResult:
 
 @dataclass
 class JobResult:
-    """Per-job outcome inside a workload run."""
+    """Per-job outcome inside a workload run.
+
+    ``decision`` is the admission outcome (``admitted`` | ``rejected`` |
+    ``deferred`` — the last only when the run ended before the policy ever
+    released the job); ``admit_t`` is when the job entered the runnable
+    queue (== ``submit_t`` without an admission policy), so
+    ``admit_t - submit_t`` is the admission-deferral component of the
+    sojourn. ``latency`` stays submit-to-finish: admission control is
+    meaningless if the wait it imposes is invisible.
+    """
 
     job_id: int
     submit_t: float
@@ -180,15 +207,25 @@ class JobResult:
     finish_t: float
     n_tasks: int
     completed: int
+    slo_class: int = 0
+    deadline_s: float = math.inf
+    work: float = 0.0
+    decision: str = "admitted"
+    admit_t: float = -1.0
 
     @property
     def latency(self) -> float:
-        """Submit-to-finish (the user-visible job completion time)."""
+        """Submit-to-finish sojourn (the user-visible job completion time)."""
         return self.finish_t - self.submit_t
 
     @property
     def queue_delay(self) -> float:
         return self.first_launch_t - self.submit_t
+
+    @property
+    def on_time(self) -> bool:
+        """Completed within its SLO budget (vacuously needs completion)."""
+        return self.finish_t >= 0 and self.latency <= self.deadline_s + 1e-9
 
 
 @dataclass
@@ -211,21 +248,45 @@ class WorkloadResult:
     re_replicated_bytes: float = 0.0  # bytes written restoring replication
     re_replication_s: float = 0.0  # summed (throttled, off-pipe) copy time
     n_re_replicated: int = 0  # replica copies made
+    # admission accounting (PR 3): what the policy did at the door
+    admission: str = "none"  # admission policy the run used
+    n_admitted: int = 0
+    n_rejected: int = 0
+    n_deferred: int = 0  # jobs deferred at least once (admitted later or not)
 
-    def latencies(self) -> list[float]:
-        return sorted(j.latency for j in self.jobs if j.finish_t >= 0)
+    def latencies(self, slo_class: Optional[int] = None) -> list[float]:
+        return sorted(
+            j.latency
+            for j in self.jobs
+            if j.finish_t >= 0 and (slo_class is None or j.slo_class == slo_class)
+        )
 
-    def latency_quantile(self, q: float) -> float:
-        lats = self.latencies()
-        if not lats:
-            return float("nan")
-        idx = min(len(lats) - 1, max(0, math.ceil(q * len(lats)) - 1))
-        return lats[idx]
+    def latency_quantile(self, q: float, slo_class: Optional[int] = None) -> float:
+        return _quantile(self.latencies(slo_class), q)
 
     @property
     def mean_latency(self) -> float:
         lats = self.latencies()
         return sum(lats) / len(lats) if lats else float("nan")
+
+    def class_stats(self) -> dict[int, dict[str, float]]:
+        """Per-SLO-class sojourn/goodput summary: job counts by admission
+        outcome, p50/p99 sojourn over completed jobs, and ``on_time_work``
+        (Σ work of jobs finishing within their own deadline — the goodput
+        currency benchmarks/bench_admission.py gates on)."""
+        out: dict[int, dict[str, float]] = {}
+        for cls in sorted({j.slo_class for j in self.jobs}):
+            jobs = [j for j in self.jobs if j.slo_class == cls]
+            out[cls] = {
+                "n": len(jobs),
+                "n_completed": sum(1 for j in jobs if j.finish_t >= 0),
+                "n_rejected": sum(1 for j in jobs if j.decision == "rejected"),
+                "p50": self.latency_quantile(0.5, cls),
+                "p99": self.latency_quantile(0.99, cls),
+                "on_time_work": sum(j.work for j in jobs if j.on_time),
+                "total_work": sum(j.work for j in jobs),
+            }
+        return out
 
 
 class SpeculationPolicy:
@@ -357,7 +418,8 @@ class _JobRun:
 
     __slots__ = (
         "job", "gmap", "plan", "pending", "done", "attempts_of", "total_work",
-        "done_work", "first_launch_t", "finish_t", "arrived",
+        "done_work", "first_launch_t", "finish_t", "arrived", "admit_t",
+        "decision",
     )
 
     def __init__(self, job: SimJob):
@@ -379,6 +441,8 @@ class _JobRun:
         self.first_launch_t = -1.0
         self.finish_t = -1.0
         self.arrived = False
+        self.admit_t = -1.0
+        self.decision = "pending"  # admitted | rejected | deferred | pending
 
     @property
     def remaining_work(self) -> float:
@@ -448,6 +512,7 @@ class SimCluster:
         policy: str = "late",
         congestion: bool = True,
         elastic: Union[bool, str] = False,
+        admission: Union[str, AdmissionPolicy, None] = None,
     ) -> WorkloadResult:
         """Replay a multi-job workload through a pluggable slot scheduler.
 
@@ -478,12 +543,25 @@ class SimCluster:
         :class:`HeartbeatMonitor`), straggler on/off boundaries, job
         arrivals, re-replications, and re-registrations of recovered
         workers. Trace collection stops when the last task completes.
+
+        ``admission`` (PR 3) routes every arrival through an
+        :class:`~repro.core.admission.AdmissionPolicy` (name from the
+        ``ADMISSION`` registry, a policy instance, or ``None`` for the
+        legacy admit-everything path). Admitted jobs enter the runnable
+        queue (``job_admitted`` churn event); rejected jobs never launch an
+        attempt and appear in no churn event beyond their own
+        ``job_arrival``/``job_rejected`` pair; deferred jobs are held by
+        the policy and released on later ``job_admitted`` events (their
+        sojourn still counts from ``submit_t``). The policy sees the same
+        capacity signal the elastic chain emits — pronounce-dead,
+        re-registration, and straggler boundaries re-rate it mid-run.
         """
         mode = {False: "static", True: "reproportion"}.get(elastic, elastic)
         if mode not in ("static", "reproportion"):
             raise ValueError(f"unknown elastic mode {elastic!r}")
         sched = SCHEDULERS[scheduler]() if isinstance(scheduler, str) else scheduler
         pol = POLICIES[policy]()
+        adm = get_policy(admission)
         self._attempts = []
         jrs: dict[int, _JobRun] = {}
         for job in jobs:
@@ -491,6 +569,8 @@ class SimCluster:
                 raise ValueError(f"duplicate job_id {job.job_id}")
             jrs[job.job_id] = _JobRun(job)
         total_tasks = sum(len(jr.gmap) for jr in jrs.values())
+        # tasks the run must complete before it can stop; rejections shrink it
+        expected_tasks = [total_tasks]
         pipe = _SharedPipe(self.topo.cross_pod_bw)
         moved = cross = wasted = 0.0
         re_bytes = re_seconds = 0.0
@@ -510,6 +590,13 @@ class SimCluster:
         for loc, w in self.workers.items():
             monitor.register(name_of[loc], 0.0, nameplate=w.rate)
         managers: dict[int, ReplicaManager] = {}
+        # -- admission-control state (PR 3) ---------------------------------
+        adm_name = adm.name if adm is not None else "none"
+        n_admitted = n_rejected = n_deferred = 0
+        adm_reqs: dict[int, JobRequest] = {}
+        deferred_ids: set[int] = set()
+        class_hist: dict[int, list[float]] = {}  # completed sojourns per class
+        total_nameplate = sum(w.rate for w in self.workers.values())
         heap: list[tuple[float, int, str, object]] = []
         seq = [0]
 
@@ -719,6 +806,92 @@ class SimCluster:
                 if jr.arrived and jr.pending
             ]
 
+        # -- admission-control helpers (PR 3) ------------------------------
+        def live_capacity(t: float) -> float:
+            """Observed work rate: Σ rate over workers not pronounced dead.
+            A silently-failed worker still counts until its pronouncement —
+            the coordinator cannot see the failure, only the silence."""
+            return sum(
+                w.rate_at(t)
+                for loc, w in self.workers.items()
+                if loc not in dead
+            )
+
+        def cluster_view(t: float) -> ClusterView:
+            running = [jr for jr in jrs.values() if jr.arrived and not jr.finished()]
+            free = sum(
+                1
+                for loc, w in self.workers.items()
+                if busy[loc] is None and w.alive(t) and loc not in dead
+            )
+            return ClusterView(
+                time=t,
+                live_capacity=live_capacity(t),
+                total_capacity=total_nameplate,
+                free_slots=free,
+                queue_depth=len(running),
+                backlog_work=sum(jr.remaining_work for jr in running),
+                deferred_depth=len(deferred_ids),
+                deferred_work=sum(adm_reqs[j].total_work for j in deferred_ids),
+                class_p99=trailing_class_p99(class_hist),
+            )
+
+        def admit_job(jid: int, t: float) -> None:
+            nonlocal n_admitted
+            jr = jrs[jid]
+            jr.arrived = True
+            jr.admit_t = t
+            jr.decision = "admitted"
+            n_admitted += 1
+            if adm is not None:
+                churn.append(
+                    ChurnEvent(t, "job_admitted", {
+                        "job": jid,
+                        "slo_class": jr.job.slo_class,
+                        "waited_s": t - jr.job.submit_t,
+                    })
+                )
+            # a job admitted after a death was placed against the full
+            # fleet: re-proportion its replicas when it becomes runnable
+            if mode == "reproportion" and dead:
+                recover_job(jr, t, "job_arrival")
+
+        def reject_job(jid: int, t: float) -> None:
+            nonlocal n_rejected
+            jr = jrs[jid]
+            jr.decision = "rejected"
+            n_rejected += 1
+            expected_tasks[0] -= len(jr.gmap)
+            churn.append(
+                ChurnEvent(t, "job_rejected",
+                           {"job": jid, "slo_class": jr.job.slo_class})
+            )
+
+        next_adm_check = [float("inf")]
+
+        def drain_admission(t: float) -> None:
+            """Resolve deferred arrivals the policy can release now, and arm
+            a timer for the earliest purely-time-driven release (token
+            refill) so deferral can never strand the run."""
+            if adm is None or not deferred_ids:
+                return
+            for req, decision in adm.poll(cluster_view(t)):
+                deferred_ids.discard(req.job_id)
+                if decision == ADMIT:
+                    admit_job(req.job_id, t)
+                else:
+                    reject_job(req.job_id, t)
+            nxt = adm.next_event_t()
+            if nxt is not None and nxt > t and (
+                nxt < next_adm_check[0] - 1e-12 or next_adm_check[0] <= t
+            ):
+                next_adm_check[0] = nxt
+                push(nxt, "admission_check", None)
+
+        def signal_capacity(t: float) -> None:
+            if adm is not None:
+                adm.on_capacity(t, live_capacity(t))
+
         def schedule_wave(t: float) -> None:
             free = [
                 w
@@ -768,7 +941,7 @@ class SimCluster:
 
         makespan = 0.0
         total_done = 0
-        while heap and total_done < total_tasks:
+        while heap and total_done < expected_tasks[0]:
             t, _, kind, payload = heapq.heappop(heap)
             finished_fetches = pipe.advance(t)
             for a in finished_fetches:
@@ -784,12 +957,34 @@ class SimCluster:
             elif kind == "job_arrival":
 
                 def arrive(jid: int) -> None:
-                    jrs[jid].arrived = True
+                    nonlocal n_deferred
+                    jr = jrs[jid]
                     churn.append(ChurnEvent(t, "job_arrival", {"job": jid}))
-                    # a job submitted after a death was placed against the
-                    # full fleet: re-proportion its replicas on arrival
-                    if mode == "reproportion" and dead:
-                        recover_job(jrs[jid], t, "job_arrival")
+                    if adm is None:
+                        admit_job(jid, t)
+                        return
+                    req = JobRequest(
+                        job_id=jid,
+                        arrive_t=jr.job.submit_t,
+                        n_tasks=len(jr.gmap),
+                        total_work=jr.total_work,
+                        slo_class=jr.job.slo_class,
+                        deadline_s=jr.job.deadline_s,
+                    )
+                    adm_reqs[jid] = req
+                    decision = adm.offer(req, cluster_view(t))
+                    if decision == ADMIT:
+                        admit_job(jid, t)
+                    elif decision == DEFER:
+                        n_deferred += 1
+                        jr.decision = "deferred"
+                        deferred_ids.add(jid)
+                        churn.append(
+                            ChurnEvent(t, "job_deferred",
+                                       {"job": jid, "slo_class": jr.job.slo_class})
+                        )
+                    else:
+                        reject_job(jid, t)
 
                 arrive(payload)
                 # drain same-instant arrivals before scheduling: a burst must
@@ -812,6 +1007,7 @@ class SimCluster:
                                {"worker": name_of[payload],
                                 "factor": w.rate_at(t) / w.rate})
                 )
+                signal_capacity(t)
                 # re-rate the attempt currently computing on this worker:
                 # keep progress continuous at t, finish at t + remaining
                 # work over the new rate (the mid-task straggler LATE [12]
@@ -865,6 +1061,8 @@ class SimCluster:
                         for _, jr in sorted(jrs.items()):
                             if jr.arrived and not jr.finished():
                                 recover_job(jr, t, "pronounce_dead")
+                    if newly_dead:
+                        signal_capacity(t)  # admission sees the shrink
             elif kind == "worker_recover":
                 w = self.workers[payload]
                 name = name_of[payload]
@@ -892,6 +1090,7 @@ class SimCluster:
                         churn.append(
                             ChurnEvent(t, "pod_alive", {"pod": payload.pod})
                         )
+                    signal_capacity(t)  # admission sees the re-grow
                 else:
                     monitor.beat(Heartbeat(name, time=t))
                 requeue_lost(payload, t)
@@ -916,9 +1115,14 @@ class SimCluster:
                     n_spec_won += 1
                 if jr.finished():
                     jr.finish_t = t
+                    if adm is not None:
+                        sojourn = t - jr.job.submit_t
+                        class_hist.setdefault(jr.job.slo_class, []).append(sojourn)
+                        adm.on_job_done(t, adm_reqs[a.job], sojourn)
                 for other in jr.attempts_of.get(a.task, []):
                     if other is not a:
                         kill(other, t)
+            drain_admission(t)
             schedule_wave(t)
 
         util = {
@@ -933,6 +1137,11 @@ class SimCluster:
                 finish_t=jr.finish_t,
                 n_tasks=len(jr.gmap),
                 completed=len(jr.done),
+                slo_class=jr.job.slo_class,
+                deadline_s=jr.job.deadline_s,
+                work=jr.total_work,
+                decision=jr.decision,
+                admit_t=jr.admit_t,
             )
             for jid, jr in sorted(jrs.items())
         ]
@@ -954,4 +1163,8 @@ class SimCluster:
             re_replicated_bytes=re_bytes,
             re_replication_s=re_seconds,
             n_re_replicated=n_re_copies,
+            admission=adm_name,
+            n_admitted=n_admitted,
+            n_rejected=n_rejected,
+            n_deferred=n_deferred,
         )

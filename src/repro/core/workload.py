@@ -18,7 +18,14 @@ Layout:
                  for churn presets whose pronounce window matters
   PRESETS      — canonical named scenarios used by benchmarks and tests
                  ("hetero_2pod" is the paper's slow/fast pod mix;
-                 "churny_3pod" kills a pod mid-queue under straggler churn)
+                 "churny_3pod" kills a pod mid-queue under straggler churn;
+                 "overload_2pod" offers ~3x capacity with SLO classes for
+                 admission control; "churny_3pod_slo" adds deadlines to the
+                 churn preset)
+
+Jobs carry SLO classes (PR 3) when the spec sets ``slo_mix``: per-job
+(class, deadline) draws feed core/admission.py policies through
+``run_workload(..., admission=...)``.
 """
 
 from __future__ import annotations
@@ -79,6 +86,10 @@ class WorkloadSpec:
     remote_input_frac: float = 0.25  # shuffle-like tasks (cross-pod pipe)
     replication: int = 3
     proportional_placement: bool = True  # paper §IV.b.ii vs stock-uniform
+    # per-job SLO classes (PR 3): (weight, slo_class, deadline_s) draws.
+    # None keeps the pre-SLO rng sequence bit-identical (class 0, no
+    # deadline) — existing presets and their golden pins are untouched.
+    slo_mix: Optional[tuple[tuple[float, int, float], ...]] = None
 
 
 def build_cluster(
@@ -150,6 +161,9 @@ def generate_workload(
     sizes = _job_sizes(spec, rng)
     locs = [w.loc for w in workers]
     caps = [w.rate for w in workers]
+    slo_weights = (
+        [w for w, _, _ in spec.slo_mix] if spec.slo_mix is not None else None
+    )
     jobs: list[SimJob] = []
     for jid, (submit_t, n_tasks) in enumerate(zip(arrivals, sizes)):
         lo, hi = spec.work_per_task
@@ -162,12 +176,22 @@ def generate_workload(
             )
             for gid in range(n_tasks)
         )
+        slo_class, deadline_s = 0, float("inf")
+        if spec.slo_mix is not None:
+            _, slo_class, deadline_s = rng.choices(
+                spec.slo_mix, weights=slo_weights, k=1
+            )[0]
         plan = plan_placement(
             grains, locs, caps, topo,
             replication=spec.replication,
             proportional=spec.proportional_placement,
         )
-        jobs.append(SimJob(job_id=jid, grains=grains, plan=plan, submit_t=submit_t))
+        jobs.append(
+            SimJob(
+                job_id=jid, grains=grains, plan=plan, submit_t=submit_t,
+                slo_class=slo_class, deadline_s=deadline_s,
+            )
+        )
     return jobs
 
 
@@ -236,6 +260,44 @@ PRESETS: dict[str, Scenario] = {
             nbytes_per_task=8 << 30, remote_input_frac=0.1,
         ),
         description="pod1 dies mid-queue (60s heartbeat timeout) and re-registers; stragglers flap under load",
+    ),
+    # The overload regime admission control exists for (PR 3): offered load
+    # ~3× the fleet's aggregate rate (total capacity 11.2 work/s, arrivals
+    # ~34 work/s), so without admission every class's sojourn grows without
+    # bound as the queue deepens. Class 0 alone is ~60% of capacity — a
+    # policy that protects it has the headroom to, if it sheds the
+    # best-effort classes. benchmarks/bench_admission.py (claim 9) gates
+    # slo_classes vs admit_all on this preset.
+    "overload_2pod": Scenario(
+        name="overload_2pod",
+        cluster=ClusterSpec(nodes_per_pod=8, pod_rates=(1.0, 0.4), cross_pod_bw=2e9),
+        workload=WorkloadSpec(
+            n_jobs=36, arrival="poisson", mean_interarrival_s=8.0,
+            remote_input_frac=0.25,
+            slo_mix=((0.2, 0, 600.0), (0.4, 1, 1200.0), (0.4, 2, 2700.0)),
+        ),
+        description="arrival rate ~3x total capacity; 3 SLO classes (600s/1200s/2700s budgets)",
+    ),
+    # churny_3pod with SLO classes: the PR-2 failure chain (pod death,
+    # 60s pronounce, re-registration, flapping stragglers) now hits a queue
+    # whose jobs carry deadlines — the regime where token_bucket must
+    # re-rate off the pronounce/re-register capacity signal and slo_classes
+    # must keep class 0 inside budget *through* the outage.
+    "churny_3pod_slo": Scenario(
+        name="churny_3pod_slo",
+        cluster=ClusterSpec(
+            nodes_per_pod=4, pod_rates=(1.0, 0.7, 0.4), cross_pod_bw=0.8e9,
+            straggler_frac=0.25, straggler_factor=0.15,
+            straggler_window_s=(30.0, 240.0), straggler_duration_s=(60.0, 180.0),
+            pod_fail=(1, 120.0), pod_recover_s=420.0,
+            heartbeat_s=3.0, dead_after_s=60.0,
+        ),
+        workload=WorkloadSpec(
+            n_jobs=18, arrival="poisson", mean_interarrival_s=15.0,
+            nbytes_per_task=8 << 30, remote_input_frac=0.1,
+            slo_mix=((0.25, 0, 420.0), (0.45, 1, 1200.0), (0.3, 2, 3600.0)),
+        ),
+        description="the PR-2 churn preset with SLO classes: pod death + deadlines",
     ),
 }
 

@@ -2,21 +2,44 @@
 
 A request queue feeds a fixed-width decode batch; finished sequences free
 their slot and the next request is admitted with its own prefill (the
-vLLM-style slot model, minus paging — the cache is dense per slot). The
-straggler lever from the paper appears here too: slow replicas get fewer
-admitted requests (capacity-proportional admission), and stuck requests can
-be speculatively re-dispatched to another replica (LATE for serving).
+vLLM-style slot model, minus paging — the cache is dense per slot).
+
+**Admission is the simulator's policy layer** (PR 3): every request is
+offered to an :class:`~repro.core.admission.AdmissionPolicy` from the same
+``ADMISSION`` registry ``core/simulator.run_workload`` uses — a request is
+just a tiny job whose work is its token budget, and the
+:class:`~repro.core.admission.ClusterView` it is judged against is built
+from *measured* decode throughput, the paper's §IV.a capacity discipline.
+A policy tuned against the overload/churn presets drops in here unchanged
+(``--admission slo_classes``); there is no serve-private admit path.
+
+**Decode is genuinely batched**: slot caches live stacked along the batch
+axis, grouped by cache position, so one ``decode_step`` call advances every
+slot in a group per step (the continuous batching the docstring always
+promised — previously each slot paid its own dispatch). Position is the
+batching key because ``decode_step`` takes a single position scalar for
+the whole batch — so uniform-length prompts admitted together share one
+group (one dispatch per step, ~3.7× tok/s at batch 4), groups whose
+positions coincide later re-merge at step time, and mixed prompt lengths /
+staggered admits degrade gracefully toward per-slot dispatch
+(``decode_calls`` in the stats exposes how much batching a run actually
+got). ``--no-batch`` keeps per-slot groups as an escape hatch
+(bit-identical to the old loop).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-smoke \
-      --requests 16 --batch 4 --prompt-len 32 --gen 16
+      --requests 16 --batch 4 --prompt-len 32 --gen 16 \
+      --admission slo_classes
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
+from typing import Union
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +47,15 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig
+from repro.core.admission import (
+    ADMIT,
+    DEFER,
+    AdmissionPolicy,
+    ClusterView,
+    JobRequest,
+    get_policy,
+    trailing_class_p99,
+)
 from repro.data.dataset import SyntheticCorpus
 from repro.models import model as M
 
@@ -33,19 +65,75 @@ class Request:
     rid: int
     prompt: np.ndarray
     max_new: int
-    submitted: float = 0.0
+    submitted: float = 0.0  # admit time (slot granted; prefill starts)
     first_token: float = -1.0
     finished: float = -1.0
     tokens: list[int] = field(default_factory=list)
+    # admission handles (PR 3): arrival is stamped at *enqueue*, so TTFT and
+    # latency include queueing + deferral — admission control is meaningless
+    # if the wait it imposes is invisible to the metrics.
+    arrived: float = -1.0
+    slo_class: int = 0
+    deadline_s: float = math.inf
+    rejected: bool = False
+
+    @property
+    def queue_wait(self) -> float:
+        return self.submitted - self.arrived
+
+
+class _Group:
+    """Slots whose caches share a position, stacked along the batch axis.
+
+    ``cache["layers"]`` leaves are ``(n_layer_periods, B, ...)`` (the layer
+    dim comes from the prefill scan), so batch concatenation/indexing is on
+    axis 1. ``pos`` is tracked host-side and mirrors the scalar
+    ``cache["pos"]`` every member shares — the model's decode step takes
+    one position for the whole batch, which is exactly why grouping by
+    position is the correct batching key.
+    """
+
+    __slots__ = ("pos", "rids", "cache", "last")
+
+    def __init__(self, pos: int, rids: list[int], cache, last: list[int]):
+        self.pos, self.rids, self.cache, self.last = pos, rids, cache, last
+
+
+def _cat(a, b):
+    layers = jax.tree.map(
+        lambda x, y: jnp.concatenate([x, y], axis=1), a["layers"], b["layers"]
+    )
+    return {"pos": a["pos"], "layers": layers}
+
+
+def _take(cache, idx: list[int]):
+    sel = jnp.asarray(idx)
+    return {
+        "pos": cache["pos"],
+        "layers": jax.tree.map(lambda x: jnp.take(x, sel, axis=1), cache["layers"]),
+    }
 
 
 class ServeLoop:
-    """Single-replica slot-based continuous batching."""
+    """Single-replica continuous batching behind a shared admission policy."""
 
-    def __init__(self, cfg, run, params, batch: int, max_len: int):
+    def __init__(
+        self,
+        cfg,
+        run,
+        params,
+        batch: int,
+        max_len: int,
+        admission: Union[str, AdmissionPolicy, None] = "admit_all",
+        batched: bool = True,
+        warmup: bool = True,
+    ):
         self.cfg, self.run, self.params = cfg, run, params
         self.batch = batch
         self.max_len = max_len
+        self.admission = admission
+        self.batched = batched
+        self.warmup = warmup
         self.prefill = jax.jit(
             lambda p, toks: M.prefill(cfg, run, p, toks, max_len, None)
         )
@@ -53,56 +141,243 @@ class ServeLoop:
             lambda p, c, toks: M.decode_step(cfg, run, p, c, toks, None)
         )
 
-    def run_requests(self, requests: list[Request], greedy: bool = True) -> dict:
-        queue = list(requests)
-        active: list[Request | None] = [None] * self.batch
-        caches: list = [None] * self.batch
-        last_tok = np.zeros((self.batch, 1), np.int32)
-        t0 = time.perf_counter()
-        decode_steps = 0
+    def _warm(self, prompt_len: int) -> None:
+        """Compile prefill (B=1) and decode at every group width once,
+        *before* the measured window opens: a first-hit XLA compile inside
+        the serve loop stalls decoding mid-run and lands a compile-dominated
+        sample in the capacity EMA — which capacity-gated policies then
+        act on permanently (an offer is final)."""
+        tok = jnp.zeros((1, prompt_len), jnp.int32)
+        _, cache = self.prefill(self.params, tok)
+        widths = range(1, self.batch + 1) if self.batched else (1,)
+        c = cache
+        for b in widths:
+            if b > 1:
+                c = _cat(c, cache)
+            self.decode(self.params, c, jnp.zeros((b, 1), jnp.int32))
 
-        def admit(slot: int):
-            if not queue:
-                active[slot] = None
+    def run_requests(self, requests: list[Request], greedy: bool = True) -> dict:
+        policy = get_policy(self.admission)  # fresh state per run
+        if self.warmup and requests:
+            self._warm(int(requests[0].prompt.shape[0]))
+        t0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        for r in requests:
+            if r.arrived < 0:
+                r.arrived = now()  # enqueue stamp (0.0 for an upfront batch)
+        by_id = {r.rid: r for r in requests}
+        pending = deque(requests)  # not yet offered to the policy
+        ready: deque[Request] = deque()  # admitted, waiting for a slot
+        rejected: list[Request] = []
+        groups: list[_Group] = []
+        done_hist: dict[int, list[float]] = {}  # sojourns per SLO class
+        decode_tokens = 0
+        decode_calls = 0
+        # measured decode throughput (tokens/s), EMA over per-step rates
+        # timed around the decode calls only — a from-start average would
+        # fold jit compile and idle waits into "capacity" and mis-rate the
+        # threshold/token_bucket policies by an order of magnitude
+        tok_rate = [0.0]
+
+        def active_count() -> int:
+            return sum(len(g.rids) for g in groups)
+
+        def view(t: float) -> ClusterView:
+            live = [by_id[rid] for g in groups for rid in g.rids]
+            backlog = sum(r.max_new - len(r.tokens) for r in live)
+            backlog += sum(r.max_new for r in ready)
+            # before the first measurement, capacity is *unbounded*: an
+            # offer is a permanent decision, and the door must never shed
+            # work on a fabricated slot-count guess — pump() bounds how
+            # many requests are judged optimistically to one batch
+            cap = tok_rate[0] if tok_rate[0] > 0 else float("inf")
+            return ClusterView(
+                time=t,
+                live_capacity=cap,
+                total_capacity=cap,
+                free_slots=self.batch - active_count(),
+                queue_depth=active_count() + len(ready),
+                backlog_work=float(backlog),
+                deferred_depth=policy.n_deferred if policy else 0,
+                deferred_work=policy.deferred_work if policy else 0.0,
+                class_p99=trailing_class_p99(done_hist),
+            )
+
+        def as_req(r: Request) -> JobRequest:
+            return JobRequest(
+                job_id=r.rid,
+                arrive_t=r.arrived,
+                n_tasks=1,
+                total_work=float(r.max_new),
+                slo_class=r.slo_class,
+                deadline_s=r.deadline_s,
+            )
+
+        def resolve(r: Request, decision: str) -> None:
+            if decision == ADMIT:
+                ready.append(r)
+            else:
+                r.rejected = True
+                rejected.append(r)
+
+        offered = [0]
+
+        def pump(force: bool = False) -> None:
+            """Offer new arrivals, then drain whatever the policy releases —
+            the exact protocol run_workload speaks; no serve-private logic.
+
+            Until the first decode step has produced a *measured* capacity,
+            at most one batch of requests is offered (against the
+            optimistic unbounded view): enough to start decoding and get a
+            real measurement, without judging the whole queue on a guess.
+            ``force`` lifts the bound for the endgame drain — when nothing
+            will ever run again, the guess is all there is."""
+            if policy is None:
+                while pending:
+                    ready.append(pending.popleft())
                 return
-            r = queue.pop(0)
-            r.submitted = time.perf_counter() - t0
+            while pending:
+                if tok_rate[0] <= 0 and not force and offered[0] >= self.batch:
+                    break
+                r = pending.popleft()
+                offered[0] += 1
+                decision = policy.offer(as_req(r), view(now()))
+                if decision != DEFER:
+                    resolve(r, decision)
+            for req, decision in policy.poll(view(now())):
+                resolve(by_id[req.job_id], decision)
+
+        def on_done(r: Request) -> None:
+            sojourn = r.finished - r.arrived
+            done_hist.setdefault(r.slo_class, []).append(sojourn)
+            if policy is not None:
+                policy.on_job_done(now(), as_req(r), sojourn)
+
+        def admit(r: Request) -> None:
+            r.submitted = now()
             logits, cache = self.prefill(self.params, jnp.asarray(r.prompt[None]))
             tok = int(jnp.argmax(logits[0, -1]))
             r.tokens.append(tok)
-            r.first_token = time.perf_counter() - t0
-            active[slot] = r
-            caches[slot] = cache
-            last_tok[slot, 0] = tok
+            r.first_token = now()
+            pos = int(r.prompt.shape[0])
+            if self.batched:
+                for g in groups:
+                    if g.pos == pos and len(g.rids) < self.batch:
+                        g.cache = _cat(g.cache, cache)
+                        g.rids.append(r.rid)
+                        g.last.append(tok)
+                        return
+            groups.append(_Group(pos, [r.rid], cache, [tok]))
 
-        for s in range(self.batch):
-            admit(s)
+        def fill_slots() -> None:
+            while ready and active_count() < self.batch:
+                admit(ready.popleft())
 
-        while any(a is not None for a in active):
-            # batched decode: stack slot caches (they share structure)
-            for s, r in enumerate(active):
-                if r is None:
+        def merge_groups() -> None:
+            """Coalesce groups whose positions have come to coincide (a
+            group drained and a later admit landed on the same position) —
+            without this they'd pay separate dispatches forever."""
+            by_pos: dict[int, _Group] = {}
+            for g in list(groups):
+                head = by_pos.get(g.pos)
+                if head is None or len(head.rids) + len(g.rids) > self.batch:
+                    by_pos[g.pos] = g
                     continue
-                logits, caches[s] = self.decode(
-                    self.params, caches[s], jnp.asarray(last_tok[s : s + 1])
-                )
-                tok = int(jnp.argmax(logits[0, -1]))
-                r.tokens.append(tok)
-                last_tok[s, 0] = tok
-                decode_steps += 1
-                if len(r.tokens) >= r.max_new:
-                    r.finished = time.perf_counter() - t0
-                    admit(s)
+                head.cache = _cat(head.cache, g.cache)
+                head.rids += g.rids
+                head.last += g.last
+                groups.remove(g)
+
+        def step() -> None:
+            nonlocal decode_tokens, decode_calls
+            if self.batched and len(groups) > 1:
+                merge_groups()
+            t_in, toks_in = time.perf_counter(), decode_tokens
+            for g in list(groups):
+                toks = jnp.asarray(np.asarray(g.last, np.int32)[:, None])
+                logits, g.cache = self.decode(self.params, g.cache, toks)
+                decode_calls += 1
+                new = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                t_step = now()
+                keep: list[int] = []
+                for i, rid in enumerate(g.rids):
+                    r = by_id[rid]
+                    tok = int(new[i])
+                    r.tokens.append(tok)
+                    g.last[i] = tok
+                    decode_tokens += 1
+                    if len(r.tokens) >= r.max_new:
+                        r.finished = t_step
+                        on_done(r)
+                    else:
+                        keep.append(i)
+                g.pos += 1
+                if len(keep) < len(g.rids):
+                    if not keep:
+                        groups.remove(g)
+                    else:
+                        g.cache = _take(g.cache, keep)
+                        g.rids = [g.rids[i] for i in keep]
+                        g.last = [g.last[i] for i in keep]
+            inst = (decode_tokens - toks_in) / max(
+                time.perf_counter() - t_in, 1e-9
+            )
+            tok_rate[0] = inst if tok_rate[0] <= 0 else 0.8 * tok_rate[0] + 0.2 * inst
+            if policy is not None:
+                # the same capacity signal the simulator's churn chain
+                # emits: token_bucket re-rates its fill to measured tok/s
+                policy.on_capacity(now(), tok_rate[0])
+
+        pump()
+        fill_slots()
+        last_progress = time.perf_counter()
+        while True:
+            if not groups:
+                if ready:
+                    fill_slots()
+                    continue
+                if policy is not None and policy.n_deferred:
+                    # nothing running: wall-clock has to pay the token debt
+                    nxt = policy.next_event_t()
+                    wait = 0.01 if nxt is None else max(0.0, min(nxt - now(), 0.25))
+                    time.sleep(wait)
+                    pump()
+                    fill_slots()
+                    if groups or ready:
+                        last_progress = time.perf_counter()
+                    elif time.perf_counter() - last_progress > 60.0:
+                        break  # a policy that never releases: report, don't hang
+                    continue
+                if pending:
+                    # endgame: nothing running or deferred but requests were
+                    # never offered (the pre-measurement bound) — drain them
+                    pump(force=True)
+                    fill_slots()
+                    if groups or ready:
+                        continue
+                break
+            step()
+            last_progress = time.perf_counter()
+            pump()
+            fill_slots()
 
         wall = time.perf_counter() - t0
         done = [r for r in requests if r.finished >= 0]
         return {
             "completed": len(done),
+            "rejected": len(rejected),
+            "deferred_unserved": policy.n_deferred if policy else 0,
+            "admission": policy.name if policy else "none",
             "wall_s": wall,
-            "decode_steps": decode_steps,
+            "decode_steps": decode_tokens,
+            "decode_calls": decode_calls,
             "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
-            "mean_ttft_s": float(np.mean([r.first_token - r.submitted for r in done])) if done else -1,
-            "mean_latency_s": float(np.mean([r.finished - r.submitted for r in done])) if done else -1,
+            "mean_ttft_s": float(np.mean([r.first_token - r.arrived for r in done])) if done else -1,
+            "mean_latency_s": float(np.mean([r.finished - r.arrived for r in done])) if done else -1,
+            "mean_queue_wait_s": float(np.mean([r.queue_wait for r in done])) if done else -1,
         }
 
 
@@ -114,6 +389,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--admission", default="admit_all",
+                    help="policy name from core.admission.ADMISSION")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="per-slot decode (escape hatch; old behaviour)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -124,11 +403,16 @@ def main(argv=None) -> dict:
     reqs = [
         Request(i, corpus.grain_tokens(i, 1)[0], args.gen) for i in range(args.requests)
     ]
-    loop = ServeLoop(cfg, run, params, args.batch, args.prompt_len + args.gen + 1)
+    loop = ServeLoop(
+        cfg, run, params, args.batch, args.prompt_len + args.gen + 1,
+        admission=args.admission, batched=not args.no_batch,
+    )
     stats = loop.run_requests(reqs)
     print(
-        f"served {stats['completed']}/{args.requests} requests  "
-        f"{stats['tokens_per_s']:.1f} tok/s  ttft={stats['mean_ttft_s']*1e3:.0f}ms  "
+        f"served {stats['completed']}/{args.requests} requests "
+        f"(rejected {stats['rejected']}, admission={stats['admission']})  "
+        f"{stats['tokens_per_s']:.1f} tok/s in {stats['decode_calls']} decode calls  "
+        f"ttft={stats['mean_ttft_s']*1e3:.0f}ms  "
         f"latency={stats['mean_latency_s']*1e3:.0f}ms"
     )
     return stats

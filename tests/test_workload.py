@@ -26,7 +26,7 @@ from repro.core.workload import (
     generate_workload,
 )
 
-ALL_SCHEDULERS = ("fifo", "fair", "capacity")
+ALL_SCHEDULERS = ("fifo", "fair", "fair_capacity", "capacity")
 
 
 def _run_preset(name, scheduler, policy="late", seed=0, n_jobs=None):
@@ -94,7 +94,7 @@ def test_schedulers_identical_on_single_job_workload():
         workers = [SimWorker(loc, 1.0 if loc.pod == 0 else 0.4) for loc in topo.workers()]
         res = SimCluster(workers, topo).run_workload([job], scheduler=sched, policy="late")
         outs[sched] = dataclasses.replace(res, scheduler="-")
-    assert outs["fifo"] == outs["fair"] == outs["capacity"]
+    assert outs["fifo"] == outs["fair"] == outs["fair_capacity"] == outs["capacity"]
 
 
 def _canonical_two_pod_jobs(topo, locs, caps):

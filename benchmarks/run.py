@@ -28,6 +28,7 @@ def main(argv=None) -> None:
         bench_namespace,
         bench_placement,
         bench_replication,
+        bench_router,
         bench_speculation,
         bench_tuning,
         bench_workload,
@@ -46,6 +47,8 @@ def main(argv=None) -> None:
          lambda: bench_elastic.main(smoke=opts.smoke)),
         ("claim9: SLO-aware admission control under overload",
          lambda: bench_admission.main(smoke=opts.smoke)),
+        ("claim10: cross-replica routing + LATE re-dispatch",
+         lambda: bench_router.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

@@ -1,0 +1,86 @@
+"""Cross-replica serving: router policies side by side (PR 4).
+
+The paper's core finding — equal work shares to unequal nodes is what
+breaks heterogeneous Hadoop — reproduced and repaired one layer up, at the
+serving-replica level. Three fleets from core/workload.FLEET_PRESETS:
+
+  fleet_hetero    — mixed-generation replicas (1.0 / 0.7 / 0.4), no faults:
+                    the routing-policy gap in its purest form. round_robin
+                    queues a third of the stream on the 0.4x replica;
+                    capacity_weighted and shortest_backlog route in
+                    measured currency.
+  fleet_straggler — the claim-10 regime: the *fastest* replica degrades
+                    10x mid-run (t=60..300). Equal shares keep feeding it;
+                    capacity routing shrinks its share the moment the rate
+                    drop is reported, and LATE-style re-dispatch rescues
+                    the requests already stuck behind it (original attempt
+                    cancelled, both attempts recorded).
+  fleet_churny    — straggler flap + replica death/re-registration + SLO
+                    mix: the full churn chain against the router, with one
+                    admission policy (the PR-3 registry) fronting the
+                    whole fleet.
+
+Every run here is the deterministic simulator (core/workload.run_fleet);
+the same router names drive real ServeLoop replicas via
+  PYTHONPATH=src python -m repro.launch.fleet --router capacity_weighted
+
+    PYTHONPATH=src python examples/serve_fleet.py
+"""
+
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+ROUTERS = ("round_robin", "capacity_weighted", "shortest_backlog")
+
+
+def show(preset: str, seed: int = 0) -> None:
+    spec = FLEET_PRESETS[preset]
+    print(f"\n=== {preset}: {spec.description}")
+    print(f"    replicas={spec.replica_rates}, {spec.n_requests} requests, "
+          f"arrival={spec.arrival}, late_factor={spec.late_factor}")
+    print(f"{'router':18s} {'rd':>2s} {'p50_s':>7s} {'p99_s':>8s} "
+          f"{'ontime':>7s} {'moves':>5s} {'wasted':>6s}  served_by")
+    for router in ROUTERS:
+        for rd in (False, True):
+            res = run_fleet(preset, seed=seed, router=router, redispatch=rd)
+            assert res.completed + res.stranded == len(res.requests)
+            label = f"{router:18s} {'+' if rd else '-':>2s}"
+            print(f"{label} {res.latency_quantile(0.5):7.1f} "
+                  f"{res.latency_quantile(0.99):8.1f} "
+                  f"{res.on_time_work():7.1f} {res.n_redispatched:5d} "
+                  f"{res.wasted_work:6.1f}  {res.served_by}")
+
+
+def redispatch_anatomy(seed: int = 0) -> None:
+    """What one rescue looks like: the stuck request's two attempts."""
+    res = run_fleet("fleet_straggler", seed=seed,
+                    router="capacity_weighted", redispatch=True)
+    moved = [r for r in res.requests if r.n_redispatched > 0]
+    print(f"\n=== re-dispatch anatomy (fleet_straggler, seed {seed}): "
+          f"{len(moved)} request(s) rescued")
+    for r in moved:
+        print(f"  request {r.rid} (work {r.work:.1f}, deadline {r.deadline_s:.0f}s): "
+              f"latency {r.latency:.1f}s, on_time={r.on_time}")
+        for d in r.dispatches:
+            end = f"{d.end_t:7.1f}" if d.end_t >= 0 else "      -"
+            print(f"    replica {d.replica}: t={d.t:7.1f} .. {end}  {d.outcome}")
+
+
+def admission_fronted_fleet(seed: int = 0) -> None:
+    """One admission policy (PR 3's registry) at the fleet door: the
+    churny fleet under token_bucket, which re-rates its fill off the same
+    capacity signal the replica churn emits."""
+    print("\n=== one admission door for the whole fleet (fleet_churny)")
+    print(f"{'admission':13s} {'completed':>9s} {'rejected':>8s} "
+          f"{'deferred':>8s} {'p99_s':>8s}")
+    for adm in (None, "token_bucket", "slo_classes"):
+        res = run_fleet("fleet_churny", seed=seed,
+                        router="capacity_weighted", admission=adm)
+        print(f"{res.admission:13s} {res.completed:9d} {res.n_rejected:8d} "
+              f"{res.n_deferred:8d} {res.latency_quantile(0.99):8.1f}")
+
+
+if __name__ == "__main__":
+    for preset in ("fleet_hetero", "fleet_straggler", "fleet_churny"):
+        show(preset)
+    redispatch_anatomy()
+    admission_fronted_fleet()

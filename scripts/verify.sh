@@ -37,11 +37,13 @@ if [[ "${VERIFY_FULL:-0}" == "1" ]]; then
 fi
 
 echo "== [3/3] benchmark smoke path =="
-# claim 8 (elastic re-mesh under churn) and claim 9 (SLO-aware admission)
-# run standalone first so a recovery/admission regression is attributed
-# before the full sweep, then the whole sweep
+# claim 8 (elastic re-mesh under churn), claim 9 (SLO-aware admission) and
+# claim 10 (cross-replica routing + re-dispatch) run standalone first so a
+# recovery/admission/routing regression is attributed before the full
+# sweep, then the whole sweep
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_elastic.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_admission.py --smoke
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_router.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

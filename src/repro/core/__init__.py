@@ -12,9 +12,13 @@ tuning      — §IV.b.i task-count / block-size rules of thumb
 coordinator — jobtracker analogue: het-DP training step end to end
 scheduler   — inter-job slot schedulers (fifo | fair | fair_capacity |
               capacity-weighted)
-workload    — seeded multi-job scenario generator + canonical presets
+workload    — seeded multi-job scenario generator + canonical presets,
+              plus the serving fleet simulator (FleetSpec / run_fleet)
 admission   — SLO-aware admission control (admit/reject/defer at the door),
               shared by the simulator and launch/serve.py
+router      — cross-replica request routing (round_robin | capacity_weighted
+              | shortest_backlog) + LATE-style re-dispatch planning, shared
+              by run_fleet and launch/fleet.py
 """
 
 from repro.core.capacity import CapacityEstimator, NodeProfile, PodProfile  # noqa: F401
@@ -38,6 +42,14 @@ from repro.core.admission import (  # noqa: F401
     get_policy,
 )
 from repro.core.replication import ReplicaManager, StripingScheme  # noqa: F401
+from repro.core.router import (  # noqa: F401
+    ROUTER,
+    InflightView,
+    ReplicaView,
+    Router,
+    get_router,
+    plan_redispatch,
+)
 from repro.core.scheduler import SCHEDULERS, JobScheduler, JobView  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     POLICIES,
@@ -48,13 +60,18 @@ from repro.core.simulator import (  # noqa: F401
     WorkloadResult,
 )
 from repro.core.workload import (  # noqa: F401
+    FLEET_PRESETS,
     PRESETS,
     ClusterSpec,
+    FleetResult,
+    FleetSpec,
     WorkloadSpec,
     build_cluster,
     build_scenario,
     build_sim,
+    generate_fleet_requests,
     generate_workload,
+    run_fleet,
 )
 from repro.core.topology import Location, Topology  # noqa: F401
 from repro.core.tuning import TuningInput, tune  # noqa: F401

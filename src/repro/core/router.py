@@ -1,0 +1,338 @@
+"""Cross-replica request routing — one policy layer for simulator and fleet.
+
+The paper's core finding is that stock Hadoop degrades on heterogeneous
+clusters because it hands **equal work shares to unequal nodes** (§III).
+Our serving path reproduced that mistake one layer up: with a single
+``ServeLoop`` nothing routes *between* replicas of different measured
+capacity, and a degraded replica holds its requests forever. This module is
+the missing layer: a :class:`Router` picks a replica for each admitted
+request from a per-replica snapshot (:class:`ReplicaView`: measured
+capacity, backlog-seconds, stuck-request age), and
+:func:`plan_redispatch` is the LATE-style rescue [Zaharia et al., OSDI'08]
+— a request stuck past ``late_factor ×`` its estimated service time on a
+degraded replica is re-enqueued on the fastest *idle* replica, the original
+attempt cancelled, both attempts recorded by the caller.
+
+The same router objects drive both consumers (the admission-layer pattern
+of PR 3, applied to routing):
+
+* ``core/workload.run_fleet`` — N heterogeneous sim-replicas on a
+  deterministic event loop (the fast-tier test surface);
+* ``launch/fleet.FleetLoop`` — N real ``ServeLoop`` replicas interleaved on
+  the hardware path.
+
+Policies, and the paper §IV guideline each one operationalizes:
+
+``round_robin``
+    The stock baseline the paper critiques: equal request shares to unequal
+    replicas. A 0.4× replica receives the same stream as a 1.0× one, so its
+    queue grows 2.5× faster — the het-cluster failure mode, one layer up.
+``capacity_weighted``
+    §IV.b.ii ("fragments ∝ speed") lifted to request routing: replicas
+    receive requests in proportion to their *measured* capacity (the tok/s
+    EMA each replica already maintains), via smooth weighted round-robin —
+    deterministic, and exactly proportional over any window. A straggling
+    replica's reported rate drop immediately shrinks its share.
+``shortest_backlog``
+    §IV.a (decide in measured currency): join-shortest-backlog-**seconds**
+    — queue depth divided by measured rate, not slot count, so a short
+    queue on a slow replica is correctly seen as a long wait.
+
+Routers are stateful (round-robin cursors, weighting credit): every run
+must start from a fresh one — :func:`get_router` clones-and-resets
+instances, mirroring ``core.admission.get_policy``. All decisions are pure
+arithmetic over the views they are shown, so a replayed trace reproduces
+bit-identical routing (the property tests/test_router.py pins).
+"""
+
+from __future__ import annotations
+
+import copy
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Union
+
+from repro.core.admission import JobRequest
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class ReplicaView:
+    """What a router may see about one replica at decision time.
+
+    ``capacity`` is the *measured* work rate (tok/s EMA on the serving
+    path; the heartbeat-reported rate in the simulator) — the §IV.a
+    discipline that decisions are made in observed currency. A silent
+    (failed-but-unpronounced) replica keeps its stale last measurement;
+    ``alive`` flips only when the fleet pronounces it dead. ``backlog_s``
+    is therefore seconds-of-queue *at the observed rate* — what
+    ``shortest_backlog`` joins on. ``oldest_age_s`` is the age of the
+    oldest outstanding request dispatched to this replica (0.0 when
+    drained) — the per-replica summary of the stuck signal, available to
+    custom routers; the re-dispatch monitor itself judges per-request ages
+    via :class:`InflightView`.
+    """
+
+    replica_id: int
+    capacity: float  # measured work rate (tok/s EMA / observed sim rate)
+    nameplate: float  # registered full-strength rate
+    backlog_work: float  # Σ remaining work of requests queued + in service
+    queue_depth: int  # outstanding requests (queued + in service)
+    oldest_age_s: float  # age of the oldest outstanding dispatch
+    alive: bool = True  # not pronounced dead
+
+    @property
+    def backlog_s(self) -> float:
+        """Seconds of backlog at the measured rate."""
+        return self.backlog_work / max(self.capacity, _EPS)
+
+    @property
+    def idle(self) -> bool:
+        return self.queue_depth == 0 and self.backlog_work <= _EPS
+
+    @property
+    def degraded(self) -> bool:
+        """Observably below strength: pronounced dead, or measured capacity
+        under nameplate (a straggler's reported rate drop; a dead-but-
+        unpronounced replica looks healthy here — its requests' growing age
+        is what betrays it, which is why re-dispatch keys on both)."""
+        return (not self.alive) or self.capacity < self.nameplate * (1.0 - 1e-6)
+
+
+@dataclass(frozen=True)
+class InflightView:
+    """One outstanding dispatch, as the re-dispatch monitor sees it.
+
+    ``est_s`` is the service estimate made at dispatch time —
+    ``work / nameplate`` of the assigned replica, so a healthy slow replica
+    is *not* flagged for merely being slow (its estimate already priced
+    that in); only requests running past ``late_factor ×`` their own
+    estimate qualify. ``age_s`` counts from dispatch, so a request buried
+    behind a straggler's backlog qualifies without ever starting.
+    """
+
+    request_id: int
+    replica_id: int
+    age_s: float
+    est_s: float
+    remaining_work: float
+
+
+class Router:
+    """Pick a replica for an admitted request (see module docstring)."""
+
+    name = "base"
+
+    # -- per-run lifecycle ----------------------------------------------
+    def reset(self) -> None:
+        """Clear per-run runtime state (cursors, credit); tuning stays."""
+
+    def fresh(self) -> "Router":
+        """A reset copy with the same tuning — one per run, so a leftover
+        cursor from a previous run cannot leak into the next replay
+        (:func:`get_router` calls this for instances)."""
+        clone = copy.deepcopy(self)
+        clone.reset()
+        return clone
+
+    # -- per-request decision -------------------------------------------
+    def pick(
+        self, req: JobRequest, views: Sequence[ReplicaView]
+    ) -> Optional[int]:
+        """Replica id for ``req``, or ``None`` when no replica is routable
+        (every replica pronounced dead — the caller parks the request and
+        retries when one re-registers)."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{type(self).__name__} {self.name}>"
+
+
+def _routable(views: Sequence[ReplicaView]) -> list[ReplicaView]:
+    return [v for v in views if v.alive]
+
+
+class RoundRobinRouter(Router):
+    """Stock baseline: cycle over live replicas, blind to capacity — the
+    equal-shares-to-unequal-nodes mistake the paper critiques, one layer
+    up. A 0.4× replica receives the same request stream as a 1.0× one."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def reset(self) -> None:
+        self._next = 0
+
+    def pick(self, req, views):
+        live = _routable(views)
+        if not live:
+            return None
+        choice = live[self._next % len(live)].replica_id
+        self._next += 1
+        return choice
+
+
+class CapacityWeightedRouter(Router):
+    """Requests ∝ measured capacity, via smooth weighted round-robin.
+
+    Every decision credits each live replica by its current measured
+    capacity, picks the largest accumulated credit, and debits the winner
+    by the total — deterministic, and over any window each replica's share
+    of requests converges to its share of measured capacity (the §IV.b.ii
+    proportional rule in routing currency). Because the credit step reads
+    *current* views, a straggler's reported rate drop shrinks its share on
+    the very next decision; credit for vanished replicas is dropped so a
+    re-registered replica rejoins at parity rather than with a stale debt.
+    """
+
+    name = "capacity_weighted"
+
+    def __init__(self) -> None:
+        self._credit: dict[int, float] = {}
+
+    def reset(self) -> None:
+        self._credit = {}
+
+    def pick(self, req, views):
+        live = [v for v in _routable(views) if v.capacity > _EPS]
+        if not live:
+            # nothing measured yet (a real fleet before its first decode):
+            # no proportions to weight by — spread by least-loaded so the
+            # whole opening burst doesn't pile onto one replica
+            any_live = _routable(views)
+            if not any_live:
+                return None
+            return min(
+                any_live,
+                key=lambda v: (v.queue_depth, v.backlog_work, v.replica_id),
+            ).replica_id
+        ids = {v.replica_id for v in live}
+        self._credit = {r: c for r, c in self._credit.items() if r in ids}
+        total = sum(v.capacity for v in live)
+        for v in live:
+            self._credit[v.replica_id] = (
+                self._credit.get(v.replica_id, 0.0) + v.capacity
+            )
+        best = max(live, key=lambda v: (self._credit[v.replica_id], -v.replica_id))
+        self._credit[best.replica_id] -= total
+        return best.replica_id
+
+
+class ShortestBacklogRouter(Router):
+    """Join-shortest-backlog-seconds: the queue is measured in *time on
+    this replica* (backlog work / measured rate), not request count — a
+    3-deep queue on a 0.4× replica is longer than a 6-deep queue on a 1.0×
+    one. Ties go to the faster replica, then the lower id."""
+
+    name = "shortest_backlog"
+
+    def pick(self, req, views):
+        live = _routable(views)
+        if not live:
+            return None
+        best = min(live, key=lambda v: (v.backlog_s, -v.capacity, v.replica_id))
+        return best.replica_id
+
+
+def plan_redispatch(
+    inflight: Sequence[InflightView],
+    views: Sequence[ReplicaView],
+    late_factor: float = 2.0,
+) -> list[tuple[int, int, int]]:
+    """LATE-style rescue plan: ``(request_id, from_replica, to_replica)``.
+
+    A request qualifies when it is **stuck** — ``age_s`` past
+    ``late_factor ×`` its dispatch-time service estimate — *and* its
+    replica is observably :attr:`~ReplicaView.degraded` (pronounced dead,
+    or measured capacity under nameplate). Both conditions matter: age
+    alone would rescue requests that are merely queued on a busy healthy
+    fleet (wasting the cancelled progress), degradation alone would rescue
+    requests that are doing fine.
+
+    Targets are the **fastest idle live replicas** (LATE's "backups only on
+    fast nodes", with idleness standing in for the free-slot condition):
+    rescued work must never displace healthy work, so a pass plans at most
+    one move per idle replica and never moves a request onto another
+    degraded-but-idle replica. Candidates are ranked by estimated
+    time-to-end on their current replica, longest first (LATE's ordering),
+    so the worst-off request gets the fastest target. Deterministic: pure
+    arithmetic over the views, ties broken by request id.
+    """
+    by_id = {v.replica_id: v for v in views}
+    idle = sorted(
+        (v for v in views if v.alive and v.idle and not v.degraded),
+        key=lambda v: (-v.capacity, v.replica_id),
+    )
+    if not idle:
+        return []
+    stuck = [
+        f
+        for f in inflight
+        if f.age_s > late_factor * f.est_s + _EPS
+        and f.replica_id in by_id
+        and by_id[f.replica_id].degraded
+    ]
+    # longest estimated time-to-end on the current replica first; a dead
+    # replica's stale measured rate still orders the candidates sensibly
+    # (same denominator for everything stranded on it)
+    stuck.sort(
+        key=lambda f: (
+            -f.remaining_work / max(by_id[f.replica_id].capacity, _EPS),
+            f.request_id,
+        )
+    )
+    moves: list[tuple[int, int, int]] = []
+    taken: set[int] = set()
+    for f in stuck:
+        target = next(
+            (
+                v
+                for v in idle
+                if v.replica_id != f.replica_id and v.replica_id not in taken
+            ),
+            None,
+        )
+        if target is None:
+            break  # every idle replica claimed this pass; next probe retries
+        taken.add(target.replica_id)
+        moves.append((f.request_id, f.replica_id, target.replica_id))
+    return moves
+
+
+ROUTER: dict[str, Callable[[], Router]] = {
+    "round_robin": RoundRobinRouter,
+    "capacity_weighted": CapacityWeightedRouter,
+    "shortest_backlog": ShortestBacklogRouter,
+}
+
+
+def get_router(spec: Union[str, Router]) -> Router:
+    """Resolve a router name / instance to a **fresh** router object.
+
+    Routers are stateful (cursors, weighting credit), so an instance is
+    cloned-and-reset — its tuning carries over, its runtime state never
+    does. Both ``run_fleet`` and ``launch/fleet.FleetLoop`` construct
+    through here: the acceptance criterion that no consumer grows a
+    fleet-private routing path.
+    """
+    if isinstance(spec, Router):
+        return spec.fresh()
+    try:
+        return ROUTER[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown router {spec!r}; known: {sorted(ROUTER)}"
+        ) from None
+
+
+def service_estimate_s(work: float, nameplate_rate: float) -> float:
+    """Dispatch-time service estimate feeding :class:`InflightView.est_s`
+    — one definition for both consumers, so the stuck threshold validated
+    on the simulator is the threshold the serving fleet runs. Estimating
+    against the *nameplate* (not the live measurement) means a healthy slow
+    replica is never flagged for being slow, only for being slower than
+    itself."""
+    return work / max(nameplate_rate, _EPS)

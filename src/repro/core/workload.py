@@ -26,17 +26,46 @@ Layout:
 Jobs carry SLO classes (PR 3) when the spec sets ``slo_mix``: per-job
 (class, deadline) draws feed core/admission.py policies through
 ``run_workload(..., admission=...)``.
+
+PR 4 adds the serving-side mirror of all of the above, one layer up:
+  FleetSpec     — N replicas of mixed capacity + a seeded request stream
+                  (+ deterministic straggler/death injection)
+  run_fleet     — event loop driving the fleet through one shared admission
+                  policy (ADMISSION registry) and one Router (ROUTER
+                  registry, core/router.py) with LATE-style re-dispatch
+  FLEET_PRESETS — canonical fleets ("fleet_straggler" is the claim-10
+                  regime: the fastest replica degrades 10x mid-run)
 """
 
 from __future__ import annotations
 
+import heapq
+import math
 import random
 from dataclasses import dataclass, field, replace
-from typing import Optional
+from typing import Optional, Union
 
+from repro.core.admission import (
+    ADMIT,
+    DEFER,
+    AdmissionPolicy,
+    ClusterView,
+    JobRequest,
+    get_policy,
+    quantile as _quantile,
+    trailing_class_p99,
+)
 from repro.core.placement import Grain, plan_placement
-from repro.core.simulator import SimCluster, SimJob, SimWorker
-from repro.core.topology import Topology
+from repro.core.router import (
+    InflightView,
+    ReplicaView,
+    Router,
+    get_router,
+    plan_redispatch,
+    service_estimate_s,
+)
+from repro.core.simulator import ChurnEvent, SimCluster, SimJob, SimWorker
+from repro.core.topology import Location, Topology
 
 
 @dataclass(frozen=True)
@@ -332,3 +361,714 @@ def build_sim(
         dead_after_s=sc.cluster.dead_after_s,
     )
     return sim, jobs
+
+
+# ---------------------------------------------------------------------------
+# Cross-replica serving fleet (PR 4): N sim-replicas behind one admission
+# policy and one Router, with LATE-style re-dispatch of stuck requests.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """N serving replicas of mixed capacity plus a seeded request stream.
+
+    The serving-side analogue of ``ClusterSpec``/``WorkloadSpec`` in one
+    object: ``replica_rates`` model mixed hardware generations (the paper's
+    heterogeneous cloud fleet, one layer up), a request is a tiny job whose
+    work is its token budget, and fault injection is deterministic — a
+    mid-run straggler and/or a replica death/re-registration at fixed times
+    — so every routing/re-dispatch claim replays bit-identically.
+    """
+
+    replica_rates: tuple[float, ...] = (1.0, 0.7, 0.4)
+    n_requests: int = 48
+    arrival: str = "poisson"  # burst | uniform | poisson
+    mean_interarrival_s: float = 7.0
+    work_per_request: tuple[float, float] = (4.0, 16.0)  # token budgets
+    # per-request (weight, slo_class, deadline_s) draws; None = no SLOs
+    slo_mix: Optional[tuple[tuple[float, int, float], ...]] = None
+    # deterministic fault injection:
+    # straggler = (replica, slow_at, factor, slow_until | None = forever)
+    straggler: Optional[tuple[int, float, float, Optional[float]]] = None
+    replica_fail: Optional[tuple[int, float]] = None  # (replica, fail time)
+    replica_recover_s: Optional[float] = None  # re-registers this much later
+    # re-dispatch + liveness knobs
+    late_factor: float = 2.0  # stuck = age > late_factor × est service time
+    probe_s: float = 5.0  # re-dispatch monitor cadence
+    dead_after_s: float = 30.0  # silence → pronounced dead (routing stops)
+    description: str = ""
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replica_rates)
+
+
+def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
+    """Seeded request stream: arrivals, token budgets, optional SLO draws —
+    ``random.Random(seed)`` end to end, so the same (spec, seed) pair is a
+    bit-identical stream (the fleet-level mirror of
+    :func:`generate_workload`)."""
+    rng = random.Random(seed)
+    arrivals = _arrival_times(
+        WorkloadSpec(
+            n_jobs=spec.n_requests,
+            arrival=spec.arrival,
+            mean_interarrival_s=spec.mean_interarrival_s,
+        ),
+        rng,
+    )
+    slo_weights = (
+        [w for w, _, _ in spec.slo_mix] if spec.slo_mix is not None else None
+    )
+    lo, hi = spec.work_per_request
+    out: list[JobRequest] = []
+    for rid, arrive_t in enumerate(arrivals):
+        work = rng.uniform(lo, hi)
+        slo_class, deadline_s = 0, math.inf
+        if spec.slo_mix is not None:
+            _, slo_class, deadline_s = rng.choices(
+                spec.slo_mix, weights=slo_weights, k=1
+            )[0]
+        out.append(
+            JobRequest(
+                job_id=rid, arrive_t=arrive_t, n_tasks=1, total_work=work,
+                slo_class=slo_class, deadline_s=deadline_s,
+            )
+        )
+    return out
+
+
+@dataclass(frozen=True)
+class Dispatch:
+    """One attempt to serve a request on one replica. Re-dispatch cancels
+    the open attempt and opens a new one — both stay recorded."""
+
+    replica: int
+    t: float
+    end_t: float = -1.0
+    outcome: str = "open"  # done | cancelled | stranded
+
+
+@dataclass(frozen=True)
+class RequestResult:
+    """Per-request outcome of a fleet run (the serving-side ``JobResult``)."""
+
+    rid: int
+    arrive_t: float
+    work: float
+    slo_class: int
+    deadline_s: float
+    decision: str  # admitted | rejected | deferred (never released)
+    admit_t: float
+    finish_t: float
+    served_by: int  # replica that completed it (-1 if it never finished)
+    dispatches: tuple[Dispatch, ...]
+
+    @property
+    def latency(self) -> float:
+        """Arrival-to-finish sojourn (queueing + routing + every attempt)."""
+        return self.finish_t - self.arrive_t
+
+    @property
+    def on_time(self) -> bool:
+        return self.finish_t >= 0 and self.latency <= self.deadline_s + 1e-9
+
+    @property
+    def n_redispatched(self) -> int:
+        return sum(1 for d in self.dispatches if d.outcome == "cancelled")
+
+
+@dataclass
+class FleetResult:
+    """What a fleet run did: per-request outcomes plus the deterministic
+    trace (routing decisions, re-dispatches, replica churn, completions)
+    that the replay-determinism tests pin bit-identically."""
+
+    router: str
+    admission: str
+    redispatch: bool
+    late_factor: float
+    makespan: float  # last completion time
+    requests: list[RequestResult]
+    trace: list[ChurnEvent]
+    completed: int
+    n_rejected: int
+    n_deferred: int  # deferred at least once (admitted later or not)
+    n_redispatched: int  # re-dispatch moves executed
+    stranded: int  # admitted but never completed (degraded replica held them)
+    wasted_work: float  # progress discarded by cancellations/restarts
+    served_by: dict[int, int]  # replica → completions
+
+    def latencies(self, slo_class: Optional[int] = None) -> list[float]:
+        return sorted(
+            r.latency
+            for r in self.requests
+            if r.finish_t >= 0 and (slo_class is None or r.slo_class == slo_class)
+        )
+
+    def latency_quantile(self, q: float, slo_class: Optional[int] = None) -> float:
+        return _quantile(self.latencies(slo_class), q)
+
+    @property
+    def mean_latency(self) -> float:
+        lats = self.latencies()
+        return sum(lats) / len(lats) if lats else float("nan")
+
+    def on_time_work(self, slo_class: Optional[int] = None) -> float:
+        """Σ work of requests finishing within their own deadline — the
+        goodput currency benchmarks/bench_router.py gates on (same
+        definition as ``WorkloadResult.class_stats``'s ``on_time_work``)."""
+        return sum(
+            r.work
+            for r in self.requests
+            if r.on_time and (slo_class is None or r.slo_class == slo_class)
+        )
+
+
+FLEET_PRESETS: dict[str, FleetSpec] = {
+    # Routing-only regime: mixed-generation replicas, no faults. The
+    # capacity-proportional vs equal-shares gap in its purest form.
+    "fleet_hetero": FleetSpec(
+        replica_rates=(1.0, 0.7, 0.4), n_requests=48,
+        arrival="poisson", mean_interarrival_s=7.0,
+        slo_mix=((1.0, 0, 90.0),),
+        description="slow/fast replica mix, no faults: routing policy only",
+    ),
+    # The claim-10 regime: the fastest replica degrades to 0.1× mid-run
+    # (t=60..300) while the queue is contended. Equal-shares routing keeps
+    # feeding it a third of the stream; capacity-proportional routing
+    # shrinks its share the moment the rate drop is reported, and LATE-style
+    # re-dispatch rescues the requests already stuck behind it.
+    "fleet_straggler": FleetSpec(
+        replica_rates=(1.0, 0.7, 0.4), n_requests=64,
+        arrival="poisson", mean_interarrival_s=8.0,
+        straggler=(0, 60.0, 0.1, 300.0),
+        slo_mix=((1.0, 0, 90.0),),
+        description="fastest replica degrades 10x mid-run under load",
+    ),
+    # The churny_3pod_slo-style fleet: a straggler flaps on the fast
+    # replica while replica 1 goes silent mid-queue, is pronounced dead
+    # 30 s later, and re-registers — with two SLO classes in the stream.
+    # The determinism and conservation tests replay this preset.
+    "fleet_churny": FleetSpec(
+        replica_rates=(1.0, 0.7, 0.4), n_requests=48,
+        arrival="poisson", mean_interarrival_s=6.0,
+        straggler=(0, 40.0, 0.15, 160.0),
+        replica_fail=(1, 60.0), replica_recover_s=150.0,
+        slo_mix=((0.3, 0, 120.0), (0.7, 1, 600.0)),
+        description="straggler flap + replica death/re-registration + SLO mix",
+    ),
+}
+
+
+class _ReplicaState:
+    """Mutable per-replica engine state for :func:`run_fleet`."""
+
+    __slots__ = (
+        "worker", "queue", "serving", "done_work", "seg_start", "cur_rate",
+        "version", "observed", "pronounced",
+    )
+
+    def __init__(self, worker: SimWorker):
+        self.worker = worker
+        self.queue: list[int] = []  # rids waiting, FIFO
+        self.serving: Optional[int] = None
+        self.done_work = 0.0  # work done on the in-service request
+        self.seg_start = 0.0  # when the current rate segment began
+        self.cur_rate = worker.rate  # service rate of the current segment
+        self.version = 0  # invalidates stale svc_done events
+        self.observed = worker.rate  # last *reported* rate (the view signal)
+        self.pronounced = False
+
+
+class _ReqState:
+    """Mutable per-request engine state for :func:`run_fleet`."""
+
+    __slots__ = (
+        "req", "decision", "admit_t", "finish_t", "served_by", "dispatches",
+        "replica", "dispatch_t", "est_s",
+    )
+
+    def __init__(self, req: JobRequest):
+        self.req = req
+        self.decision = "pending"  # admitted | rejected | deferred | pending
+        self.admit_t = -1.0
+        self.finish_t = -1.0
+        self.served_by = -1
+        self.dispatches: list[Dispatch] = []
+        self.replica: Optional[int] = None  # current assignment
+        self.dispatch_t = -1.0
+        self.est_s = 0.0
+
+
+def run_fleet(
+    spec_or_name: Union[str, FleetSpec],
+    seed: int = 0,
+    router: Union[str, Router] = "capacity_weighted",
+    admission: Union[str, AdmissionPolicy, None] = None,
+    redispatch: bool = True,
+    late_factor: Optional[float] = None,
+) -> FleetResult:
+    """Replay a request stream through N heterogeneous sim-replicas.
+
+    The serving counterpart of :meth:`SimCluster.run_workload`, at replica
+    granularity: each replica is a :class:`SimWorker` serving its FIFO
+    queue serially at ``rate_at(t)`` token-budget-units per second; one
+    ``admission`` policy (the same ``ADMISSION`` registry the simulator and
+    ``launch/serve.py`` share) fronts the whole fleet; one ``router`` (the
+    ``ROUTER`` registry, shared with ``launch/fleet.py``) picks a replica
+    for every admitted request from :class:`~repro.core.router.ReplicaView`
+    snapshots.
+
+    Observability follows the PR-2 churn discipline: a straggler boundary
+    is *reported* (it re-rates the view capacity and the in-service
+    request); a failure is *silent* — the view keeps the stale rate until
+    the fleet pronounces the replica dead ``dead_after_s`` later, at which
+    point routing stops but the replica's requests stay stuck. Rescuing
+    them is re-dispatch's job: every ``probe_s`` the monitor asks
+    :func:`~repro.core.router.plan_redispatch` for requests stuck past
+    ``late_factor ×`` their dispatch-time estimate on a degraded replica,
+    cancels the original attempt (progress discarded into
+    ``wasted_work``), and re-enqueues on the fastest idle replica — both
+    attempts recorded. With ``redispatch=False`` a degraded replica holds
+    its requests forever (the motivating failure mode; they are reported
+    as ``stranded``).
+
+    Everything is pure arithmetic over a seeded stream, so the full
+    :class:`FleetResult` — routing decisions, re-dispatches, completions,
+    the trace — is bit-identical across replays of the same arguments.
+    """
+    spec = (
+        FLEET_PRESETS[spec_or_name]
+        if isinstance(spec_or_name, str)
+        else spec_or_name
+    )
+    late_f = spec.late_factor if late_factor is None else late_factor
+    reqs = generate_fleet_requests(spec, seed=seed)
+    rtr = get_router(router)
+    adm = get_policy(admission)
+
+    workers = [
+        SimWorker(Location(0, i), r) for i, r in enumerate(spec.replica_rates)
+    ]
+    if spec.straggler is not None:
+        i, at, factor, until = spec.straggler
+        workers[i].slow_at = at
+        workers[i].slow_factor = factor
+        workers[i].slow_until = until
+    if spec.replica_fail is not None:
+        i, fail_t = spec.replica_fail
+        workers[i].fail_at = fail_t
+        if spec.replica_recover_s is not None:
+            workers[i].recover_at = fail_t + spec.replica_recover_s
+
+    repl = [_ReplicaState(w) for w in workers]
+    rs = {r.job_id: _ReqState(r) for r in reqs}
+    trace: list[ChurnEvent] = []
+    parked: list[int] = []  # admitted but unroutable (no live replica)
+    deferred_ids: set[int] = set()
+    class_hist: dict[int, list[float]] = {}
+    total_nameplate = sum(w.rate for w in workers)
+    completed = [0]
+    n_rejected = [0]
+    n_deferred = [0]
+    n_moves = [0]
+    wasted = [0.0]
+    makespan = [0.0]
+    served_by = {i: 0 for i in range(len(workers))}
+
+    heap: list[tuple[float, int, str, object]] = []
+    seq = [0]
+
+    def push(t: float, kind: str, payload) -> None:
+        seq[0] += 1
+        heapq.heappush(heap, (t, seq[0], kind, payload))
+
+    # ---- replica service mechanics ------------------------------------
+    def done_est(i: int, t: float) -> float:
+        st = repl[i]
+        if st.serving is None:
+            return 0.0
+        work = rs[st.serving].req.total_work
+        return min(work, st.done_work + (t - st.seg_start) * st.cur_rate)
+
+    def outstanding_on(i: int) -> list[int]:
+        st = repl[i]
+        return ([st.serving] if st.serving is not None else []) + st.queue
+
+    def start_service(i: int, t: float) -> None:
+        st = repl[i]
+        if st.serving is not None or not st.queue or not st.worker.alive(t):
+            return
+        rid = st.queue.pop(0)
+        st.serving = rid
+        st.done_work = 0.0
+        st.seg_start = t
+        st.cur_rate = st.worker.rate_at(t)
+        st.version += 1
+        remaining = rs[rid].req.total_work
+        push(t + remaining / max(st.cur_rate, 1e-9), "svc_done", (i, st.version))
+
+    # ---- views ---------------------------------------------------------
+    def replica_views(t: float) -> list[ReplicaView]:
+        out = []
+        for i, st in enumerate(repl):
+            rids = outstanding_on(i)
+            backlog = sum(rs[r].req.total_work for r in st.queue)
+            if st.serving is not None:
+                backlog += rs[st.serving].req.total_work - done_est(i, t)
+            oldest = (
+                max(t - min(rs[r].dispatch_t for r in rids), 0.0)
+                if rids
+                else 0.0
+            )
+            out.append(
+                ReplicaView(
+                    replica_id=i,
+                    capacity=st.observed,
+                    nameplate=st.worker.rate,
+                    backlog_work=backlog,
+                    queue_depth=len(rids),
+                    oldest_age_s=oldest,
+                    alive=not st.pronounced,
+                )
+            )
+        return out
+
+    def cluster_view(t: float) -> ClusterView:
+        views = replica_views(t)
+        live_cap = sum(v.capacity for v in views if v.alive)
+        outstanding = [
+            r for r in rs.values()
+            if r.decision == "admitted" and r.finish_t < 0
+        ]
+        backlog = sum(v.backlog_work for v in views)
+        return ClusterView(
+            time=t,
+            live_capacity=live_cap,
+            total_capacity=total_nameplate,
+            free_slots=sum(1 for v in views if v.alive and v.idle),
+            queue_depth=len(outstanding),
+            backlog_work=backlog,
+            deferred_depth=adm.n_deferred if adm is not None else 0,
+            deferred_work=adm.deferred_work if adm is not None else 0.0,
+            class_p99=trailing_class_p99(class_hist),
+        )
+
+    def signal_capacity(t: float) -> None:
+        if adm is not None:
+            views = replica_views(t)
+            adm.on_capacity(t, sum(v.capacity for v in views if v.alive))
+
+    # ---- routing -------------------------------------------------------
+    next_probe = [math.inf]
+
+    def arm_probe(t: float) -> None:
+        if next_probe[0] <= t or math.isinf(next_probe[0]):
+            next_probe[0] = t + spec.probe_s
+            push(next_probe[0], "probe", None)
+
+    def dispatch(rid: int, dst: int, t: float) -> None:
+        r = rs[rid]
+        r.replica = dst
+        r.dispatch_t = t
+        r.est_s = service_estimate_s(r.req.total_work, workers[dst].rate)
+        r.dispatches.append(Dispatch(replica=dst, t=t))
+        repl[dst].queue.append(rid)
+        start_service(dst, t)
+        arm_probe(t)
+
+    def route(rid: int, t: float) -> None:
+        choice = rtr.pick(rs[rid].req, replica_views(t))
+        if choice is None:  # every replica pronounced dead: park + retry
+            parked.append(rid)
+            trace.append(ChurnEvent(t, "route_parked", {"request": rid}))
+            return
+        trace.append(
+            ChurnEvent(t, "route", {"request": rid, "replica": choice})
+        )
+        dispatch(rid, choice, t)
+
+    def retry_parked(t: float) -> None:
+        if parked and any(not st.pronounced for st in repl):
+            waiting, parked[:] = parked[:], []
+            for rid in waiting:
+                route(rid, t)
+
+    # ---- admission front door (shared ADMISSION registry) --------------
+    def admit(rid: int, t: float) -> None:
+        r = rs[rid]
+        r.decision = "admitted"
+        r.admit_t = t
+        if adm is not None:
+            trace.append(
+                ChurnEvent(t, "request_admitted", {
+                    "request": rid,
+                    "slo_class": r.req.slo_class,
+                    "waited_s": t - r.req.arrive_t,
+                })
+            )
+        route(rid, t)
+
+    def reject(rid: int, t: float) -> None:
+        rs[rid].decision = "rejected"
+        n_rejected[0] += 1
+        trace.append(
+            ChurnEvent(t, "request_rejected",
+                       {"request": rid, "slo_class": rs[rid].req.slo_class})
+        )
+
+    next_adm_check = [math.inf]
+
+    def drain_admission(t: float) -> None:
+        if adm is None or not deferred_ids:
+            return
+        for req, decision in adm.poll(cluster_view(t)):
+            deferred_ids.discard(req.job_id)
+            if decision == ADMIT:
+                admit(req.job_id, t)
+            else:
+                reject(req.job_id, t)
+        nxt = adm.next_event_t()
+        if nxt is not None and nxt > t and (
+            nxt < next_adm_check[0] - 1e-12 or next_adm_check[0] <= t
+        ):
+            next_adm_check[0] = nxt
+            push(nxt, "admission_check", None)
+
+    # ---- re-dispatch (LATE-style rescue) -------------------------------
+    def cancel(rid: int, t: float) -> None:
+        r = rs[rid]
+        i = r.replica
+        st = repl[i]
+        if st.serving == rid:
+            wasted[0] += done_est(i, t)
+            st.serving = None
+            st.version += 1
+            start_service(i, t)
+        else:
+            st.queue.remove(rid)
+        last = r.dispatches[-1]
+        r.dispatches[-1] = replace(last, end_t=t, outcome="cancelled")
+
+    def probe(t: float) -> None:
+        next_probe[0] = math.inf
+        if redispatch:
+            views = replica_views(t)
+            inflight = []
+            for i in range(len(repl)):
+                for rid in outstanding_on(i):
+                    r = rs[rid]
+                    remaining = r.req.total_work
+                    if repl[i].serving == rid:
+                        remaining -= done_est(i, t)
+                    inflight.append(
+                        InflightView(
+                            request_id=rid, replica_id=i,
+                            age_s=t - r.dispatch_t, est_s=r.est_s,
+                            remaining_work=remaining,
+                        )
+                    )
+            for rid, src, dst in plan_redispatch(inflight, views, late_f):
+                cancel(rid, t)
+                n_moves[0] += 1
+                trace.append(
+                    ChurnEvent(t, "redispatch", {
+                        "request": rid, "from": src, "to": dst,
+                        "age_s": t - rs[rid].dispatch_t,
+                    })
+                )
+                dispatch(rid, dst, t)
+        retry_parked(t)
+        outstanding = any(outstanding_on(i) for i in range(len(repl)))
+        can_progress = any(
+            w.alive(t) or (w.recover_at is not None and w.recover_at > t)
+            for w in workers
+        )
+        # re-arm only while probing can still change something: with
+        # re-dispatch off, a request stranded on a dead replica must not
+        # keep the monitor (and the run) alive forever
+        if ((redispatch and outstanding) or parked) and can_progress:
+            arm_probe(t)
+
+    # ---- event timers ---------------------------------------------------
+    for r in reqs:
+        push(r.arrive_t, "arrival", r.job_id)
+    for i, w in enumerate(workers):
+        if w.slow_at is not None:
+            push(w.slow_at, "rate_change", i)
+            if w.slow_until is not None and w.slow_until > w.slow_at:
+                push(w.slow_until, "rate_change", i)
+        if w.fail_at is not None:
+            push(w.fail_at, "replica_fail", i)
+            pronounce_t = w.fail_at + spec.dead_after_s
+            if w.recover_at is None or w.recover_at > pronounce_t:
+                push(pronounce_t, "pronounce", i)
+            if w.recover_at is not None:
+                push(max(w.recover_at, w.fail_at), "recover", i)
+
+    # ---- the event loop -------------------------------------------------
+    while heap and completed[0] + n_rejected[0] < len(reqs):
+        t, _, kind, payload = heapq.heappop(heap)
+        if kind == "arrival":
+            rid = payload
+            trace.append(ChurnEvent(t, "request_arrival", {"request": rid}))
+            if adm is None:
+                admit(rid, t)
+            else:
+                decision = adm.offer(rs[rid].req, cluster_view(t))
+                if decision == ADMIT:
+                    admit(rid, t)
+                elif decision == DEFER:
+                    n_deferred[0] += 1
+                    rs[rid].decision = "deferred"
+                    deferred_ids.add(rid)
+                    trace.append(
+                        ChurnEvent(t, "request_deferred", {
+                            "request": rid,
+                            "slo_class": rs[rid].req.slo_class,
+                        })
+                    )
+                else:
+                    reject(rid, t)
+        elif kind == "svc_done":
+            i, version = payload
+            st = repl[i]
+            if st.version != version or st.serving is None:
+                continue  # re-rated, cancelled, or failed since scheduled
+            rid = st.serving
+            st.serving = None
+            st.version += 1
+            r = rs[rid]
+            r.finish_t = t
+            r.served_by = i
+            r.dispatches[-1] = replace(r.dispatches[-1], end_t=t, outcome="done")
+            completed[0] += 1
+            served_by[i] += 1
+            makespan[0] = max(makespan[0], t)
+            sojourn = t - r.req.arrive_t
+            class_hist.setdefault(r.req.slo_class, []).append(sojourn)
+            trace.append(
+                ChurnEvent(t, "request_done", {
+                    "request": rid, "replica": i, "latency_s": sojourn,
+                })
+            )
+            if adm is not None:
+                adm.on_job_done(t, r.req, sojourn)
+            start_service(i, t)
+        elif kind == "rate_change":
+            i = payload
+            st = repl[i]
+            w = st.worker
+            if not w.alive(t) or st.pronounced:
+                continue  # silent replica: boundary is unobservable
+            new_rate = w.rate_at(t)
+            slowed = new_rate < w.rate
+            st.observed = new_rate
+            trace.append(
+                ChurnEvent(t, "straggler_on" if slowed else "straggler_off",
+                           {"replica": i, "factor": new_rate / w.rate})
+            )
+            signal_capacity(t)
+            if st.serving is not None:
+                st.done_work = done_est(i, t)
+                st.seg_start = t
+                st.cur_rate = max(new_rate, 1e-9)
+                st.version += 1
+                remaining = rs[st.serving].req.total_work - st.done_work
+                push(t + remaining / st.cur_rate, "svc_done", (i, st.version))
+        elif kind == "replica_fail":
+            i = payload
+            st = repl[i]
+            trace.append(ChurnEvent(t, "replica_fail", {"replica": i}))
+            if st.serving is not None:
+                # progress freezes with the replica; the request stays
+                # assigned (stuck) until re-dispatch or recovery
+                st.done_work = done_est(i, t)
+                st.seg_start = t
+                st.cur_rate = 0.0
+            st.version += 1  # invalidate any scheduled completion
+        elif kind == "pronounce":
+            i = payload
+            st = repl[i]
+            if not st.worker.alive(t) and not st.pronounced:
+                st.pronounced = True
+                trace.append(ChurnEvent(t, "replica_dead", {"replica": i}))
+                signal_capacity(t)
+        elif kind == "recover":
+            i = payload
+            st = repl[i]
+            was_pronounced = st.pronounced
+            st.pronounced = False
+            st.observed = st.worker.rate_at(t)
+            trace.append(
+                ChurnEvent(
+                    t,
+                    "re_registered" if was_pronounced else "replica_recover",
+                    {"replica": i},
+                )
+            )
+            if st.observed < st.worker.rate:
+                trace.append(
+                    ChurnEvent(t, "straggler_on", {
+                        "replica": i,
+                        "factor": st.observed / st.worker.rate,
+                    })
+                )
+            if st.serving is not None:
+                # serving state died with the replica: restart from scratch
+                wasted[0] += st.done_work
+                rid = st.serving
+                st.serving = None
+                st.queue.insert(0, rid)
+            st.version += 1
+            start_service(i, t)
+            signal_capacity(t)
+            retry_parked(t)
+        elif kind == "probe":
+            probe(t)
+        elif kind == "admission_check":
+            pass  # drain below does the work
+        drain_admission(t)
+
+    # ---- wrap up --------------------------------------------------------
+    stranded = 0
+    results = []
+    for rid in sorted(rs):
+        r = rs[rid]
+        dispatches = list(r.dispatches)
+        if r.finish_t < 0 and dispatches and dispatches[-1].outcome == "open":
+            dispatches[-1] = replace(dispatches[-1], outcome="stranded")
+        if r.decision == "admitted" and r.finish_t < 0:
+            stranded += 1
+        results.append(
+            RequestResult(
+                rid=rid,
+                arrive_t=r.req.arrive_t,
+                work=r.req.total_work,
+                slo_class=r.req.slo_class,
+                deadline_s=r.req.deadline_s,
+                decision=r.decision,
+                admit_t=r.admit_t,
+                finish_t=r.finish_t,
+                served_by=r.served_by,
+                dispatches=tuple(dispatches),
+            )
+        )
+    return FleetResult(
+        router=rtr.name,
+        admission=adm.name if adm is not None else "none",
+        redispatch=redispatch,
+        late_factor=late_f,
+        makespan=makespan[0],
+        requests=results,
+        trace=trace,
+        completed=completed[0],
+        n_rejected=n_rejected[0],
+        n_deferred=n_deferred[0],
+        n_redispatched=n_moves[0],
+        stranded=stranded,
+        wasted_work=wasted[0],
+        served_by=served_by,
+    )

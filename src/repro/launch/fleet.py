@@ -1,0 +1,419 @@
+"""Cross-replica serving: N ``ServeLoop`` replicas behind one router.
+
+The hardware-path counterpart of ``core/workload.run_fleet``: a
+:class:`FleetLoop` fronts N replicas with **one** admission policy (the
+``ADMISSION`` registry PR 3 established — the fleet door admits, replicas
+never re-judge) and routes every admitted request through a
+:class:`~repro.core.router.Router` resolved from the **same** ``ROUTER``
+registry the simulator uses — there is no fleet-private routing path, which
+is the acceptance criterion that lets a policy validated on the
+deterministic fleet presets drop into real serving unchanged.
+
+Replicas are interleaved cooperatively on one host: each scheduler pass
+ticks every busy replica once (one decode cycle), so wall-clock is shared
+the way a real multi-replica deployment shares traffic. Views are built
+from each replica's **measured** tok/s EMA (``ServeLoop.tok_rate``) — the
+paper's §IV.a discipline of deciding in observed currency — with the
+session peak standing in for a nameplate (real replicas register no spec
+sheet; ``headroom`` sets how far below peak counts as *degraded* rather
+than noise).
+
+LATE-style re-dispatch runs on the same monitor cadence as the simulator:
+a request stuck past ``late_factor ×`` its dispatch-time estimate on a
+degraded replica is cancelled there (:meth:`ServeLoop.cancel`, generated
+tokens discarded) and re-enqueued on the fastest idle replica; both
+attempts are counted in the stats.
+
+The replica interface is duck-typed (``start/tick/enqueue/cancel/
+tok_rate/peak_rate/backlog_tokens/outstanding_rids/idle/stats``), so the
+fast tier drives :class:`FleetLoop` with stub replicas — every routing and
+re-dispatch behavior is testable without a JAX compile.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.fleet --arch qwen3-1.7b-smoke \
+      --replicas 3 --requests 12 --router capacity_weighted
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Sequence, Union
+
+from repro.core.admission import (
+    ADMIT,
+    DEFER,
+    AdmissionPolicy,
+    ClusterView,
+    get_policy,
+    trailing_class_p99,
+)
+from repro.core.router import (
+    InflightView,
+    ReplicaView,
+    Router,
+    get_router,
+    plan_redispatch,
+    service_estimate_s,
+)
+from repro.launch.serve import Request, ServeLoop
+
+
+class FleetLoop:
+    """N serving replicas, one admission door, one shared-registry router."""
+
+    def __init__(
+        self,
+        replicas: Sequence,  # ServeLoop-compatible (see module docstring)
+        router: Union[str, Router] = "capacity_weighted",
+        admission: Union[str, AdmissionPolicy, None] = "admit_all",
+        redispatch: bool = True,
+        late_factor: float = 3.0,
+        probe_s: float = 0.25,
+        headroom: float = 0.85,
+    ):
+        if not replicas:
+            raise ValueError("a fleet needs at least one replica")
+        self.replicas = list(replicas)
+        self.router = router
+        self.admission = admission
+        self.redispatch = redispatch
+        self.late_factor = late_factor
+        self.probe_s = probe_s
+        self.headroom = headroom
+
+    # -- views ------------------------------------------------------------
+
+    def _views(self, t: float) -> list[ReplicaView]:
+        out = []
+        for i, rep in enumerate(self.replicas):
+            rids = rep.outstanding_rids()
+            # peak EMA stands in for nameplate, derated by `headroom` so
+            # ordinary measurement noise never reads as degradation — only
+            # a sustained rate drop (a real straggler) crosses the margin
+            nameplate = rep.peak_rate * self.headroom
+            oldest = (
+                max(
+                    (t - self._dispatch_t[r] for r in rids if r in self._dispatch_t),
+                    default=0.0,
+                )
+                if rids
+                else 0.0
+            )
+            out.append(
+                ReplicaView(
+                    replica_id=i,
+                    capacity=rep.tok_rate,
+                    nameplate=nameplate,
+                    backlog_work=rep.backlog_tokens(),
+                    queue_depth=len(rids),
+                    oldest_age_s=oldest,
+                    alive=True,  # in-process replicas do not silently die
+                )
+            )
+        return out
+
+    def _cluster_view(self, t: float, policy) -> ClusterView:
+        views = self._views(t)
+        cap = sum(v.capacity for v in views)
+        cap = cap if cap > 0 else float("inf")  # pre-measurement: optimistic
+        return ClusterView(
+            time=t,
+            live_capacity=cap,
+            total_capacity=cap,
+            free_slots=sum(1 for v in views if v.idle),
+            queue_depth=sum(v.queue_depth for v in views),
+            backlog_work=sum(v.backlog_work for v in views),
+            deferred_depth=policy.n_deferred if policy else 0,
+            deferred_work=policy.deferred_work if policy else 0.0,
+            class_p99=trailing_class_p99(self._done_hist),
+        )
+
+    # -- the fleet loop ----------------------------------------------------
+
+    def run_requests(self, requests: list[Request]) -> dict:
+        rtr = get_router(self.router)  # fresh cursors/credit per run
+        policy = get_policy(self.admission)
+        by_id = {r.rid: r for r in requests}
+        self._dispatch_t: dict[int, float] = {}
+        self._est_s: dict[int, float] = {}
+        self._where: dict[int, int] = {}
+        self._done_hist: dict[int, list[float]] = {}
+        n_moves = 0
+        cancelled_tokens = 0
+        rejected: list[Request] = []
+        routed_of: dict[int, int] = {}  # first-dispatch counts per replica
+
+        prompt_len = int(requests[0].prompt.shape[0]) if requests else 0
+        # warm every replica BEFORE opening the clock (compile time stays
+        # outside the measured window), then hand all sessions one shared
+        # origin: arrival stamps (fleet door) and finish stamps (replica
+        # sessions) must subtract on the same timeline, or every sojourn
+        # inflates by later replicas' warm-up
+        for rep in self.replicas:
+            if prompt_len and hasattr(rep, "warm"):
+                rep.warm(prompt_len)
+        t0 = time.perf_counter()
+        for rep in self.replicas:
+            rep.start([], prompt_len=prompt_len, t0=t0)
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        for r in requests:
+            if r.arrived < 0:
+                r.arrived = now()
+
+        pending = list(requests)  # not yet offered to the fleet door
+
+        def dispatch(r: Request, dst: int, t: float) -> None:
+            self._dispatch_t[r.rid] = t
+            self._where[r.rid] = dst
+            rep = self.replicas[dst]
+            # estimate against the replica's learned nameplate; before any
+            # measurement exists the estimate is unknowable and the stuck
+            # judgement simply skips the request (est stays None)
+            base = rep.peak_rate * self.headroom
+            self._est_s[r.rid] = (
+                service_estimate_s(float(r.max_new), base) if base > 0 else None
+            )
+            rep.enqueue(r)
+
+        def route(r: Request, t: float) -> None:
+            choice = rtr.pick(ServeLoop.as_job_request(r), self._views(t))
+            choice = 0 if choice is None else choice  # all-dead cannot occur
+            routed_of[choice] = routed_of.get(choice, 0) + 1
+            dispatch(r, choice, t)
+
+        def resolve(r: Request, decision: str, t: float) -> None:
+            if decision == ADMIT:
+                route(r, t)
+            else:
+                r.rejected = True
+                rejected.append(r)
+
+        offered = [0]
+        # until any replica has a *measured* rate, judge at most one fleet
+        # batch against the optimistic unbounded view (ServeLoop's PR-3
+        # rule, fleet-wide): enough to start decoding everywhere without
+        # shedding the whole queue on a guess
+        offer_bound = sum(getattr(rep, "batch", 1) for rep in self.replicas)
+
+        def measured() -> bool:
+            return any(rep.tok_rate > 0 for rep in self.replicas)
+
+        def pump(t: float, force: bool = False) -> None:
+            """The fleet front door: one admission policy for N replicas —
+            the exact protocol ServeLoop speaks single-replica."""
+            if policy is None:
+                while pending:
+                    route(pending.pop(0), t)
+                return
+            while pending:
+                if not measured() and not force and offered[0] >= offer_bound:
+                    break
+                r = pending.pop(0)
+                offered[0] += 1
+                decision = policy.offer(
+                    ServeLoop.as_job_request(r), self._cluster_view(t, policy)
+                )
+                if decision != DEFER:
+                    resolve(r, decision, t)
+            for req, decision in policy.poll(self._cluster_view(t, policy)):
+                resolve(by_id[req.job_id], decision, t)
+
+        fleet_peak = [0.0]  # best nameplate seen anywhere, for backfill
+
+        def probe(t: float) -> None:
+            nonlocal n_moves, cancelled_tokens
+            views = self._views(t)
+            fleet_peak[0] = max(
+                fleet_peak[0],
+                max(rep.peak_rate for rep in self.replicas) * self.headroom,
+            )
+            inflight = []
+            for i, rep in enumerate(self.replicas):
+                for rid in rep.outstanding_rids():
+                    if rid not in self._dispatch_t:
+                        continue
+                    r = by_id[rid]
+                    est = self._est_s.get(rid)
+                    if est is None:
+                        # dispatched before any measurement existed: backfill
+                        # from the replica's learned nameplate (fleet-best
+                        # when the replica never measured — e.g. it stalled
+                        # before its first decode completed)
+                        base = rep.peak_rate * self.headroom or fleet_peak[0]
+                        if base <= 0:
+                            continue  # nothing measured fleet-wide yet
+                        est = service_estimate_s(float(r.max_new), base)
+                        self._est_s[rid] = est
+                    inflight.append(
+                        InflightView(
+                            request_id=rid,
+                            replica_id=i,
+                            age_s=t - self._dispatch_t[rid],
+                            est_s=est,
+                            remaining_work=float(r.max_new - len(r.tokens)),
+                        )
+                    )
+            for rid, src, dst in plan_redispatch(inflight, views, self.late_factor):
+                r = by_id[rid]
+                if not self.replicas[src].cancel(rid):
+                    continue  # it finished in the race: nothing to move
+                # the original attempt's progress is discarded (new prefill
+                # on the target) — the re-dispatch cost, reported below
+                cancelled_tokens += len(r.tokens)
+                r.tokens.clear()
+                r.first_token = -1.0
+                r.finished = -1.0
+                n_moves += 1
+                dispatch(r, dst, t)
+
+        pump(now())
+        last_probe = now()
+        last_progress = time.perf_counter()
+        while True:
+            progressed = False
+            for rep in self.replicas:
+                if not rep.idle and rep.tick() == "step":
+                    progressed = True
+            t = now()
+            # completions feed the fleet-level latency history + policy
+            for r in requests:
+                if r.finished >= 0 and r.rid in self._where:
+                    self._done_hist.setdefault(r.slo_class, []).append(
+                        r.finished - r.arrived
+                    )
+                    if policy is not None:
+                        policy.on_job_done(
+                            t, ServeLoop.as_job_request(r), r.finished - r.arrived
+                        )
+                    del self._where[r.rid]
+            pump(t)
+            if self.redispatch and t - last_probe >= self.probe_s:
+                probe(t)
+                last_probe = t
+            outstanding = any(not rep.idle for rep in self.replicas)
+            deferred = policy.n_deferred if policy is not None else 0
+            if not outstanding and not deferred and pending:
+                # endgame: requests never offered (pre-measurement bound)
+                # and nothing will ever run again — the guess is all there is
+                pump(now(), force=True)
+                continue
+            if not outstanding and not pending and not deferred:
+                break
+            if progressed:
+                last_progress = time.perf_counter()
+            elif deferred and not outstanding:
+                nxt = policy.next_event_t()
+                wait = 0.01 if nxt is None else max(0.0, min(nxt - now(), 0.25))
+                time.sleep(wait)
+                if time.perf_counter() - last_progress > 60.0:
+                    break  # a policy that never releases: report, don't hang
+
+        wall = time.perf_counter() - t0
+        done = [r for r in requests if r.finished >= 0]
+        per_replica = [rep.stats() for rep in self.replicas]
+        return {
+            "completed": len(done),
+            "rejected": len(rejected),
+            "deferred_unserved": policy.n_deferred if policy else 0,
+            "admission": policy.name if policy else "none",
+            "router": rtr.name,
+            "redispatched": n_moves,
+            "cancelled_tokens": cancelled_tokens,
+            "routed_per_replica": [
+                routed_of.get(i, 0) for i in range(len(self.replicas))
+            ],
+            "completed_per_replica": [s["completed"] for s in per_replica],
+            "tok_rate_per_replica": [rep.tok_rate for rep in self.replicas],
+            "wall_s": wall,
+            "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
+            "mean_latency_s": (
+                float(sum(r.finished - r.arrived for r in done) / len(done))
+                if done
+                else -1
+            ),
+        }
+
+
+def build_fleet(
+    cfg,
+    run,
+    params,
+    n_replicas: int,
+    batch: int,
+    max_len: int,
+    router: Union[str, Router] = "capacity_weighted",
+    admission: Union[str, AdmissionPolicy, None] = "admit_all",
+    batched: bool = True,
+    **kw,
+) -> FleetLoop:
+    """N identical ``ServeLoop`` replicas behind one :class:`FleetLoop`.
+
+    Replica-level admission is ``None`` by construction: the fleet door is
+    the only place a request is judged (the same no-private-path rule the
+    admission layer enforces single-replica)."""
+    replicas = [
+        ServeLoop(
+            cfg, run, params, batch=batch, max_len=max_len,
+            admission=None, batched=batched,
+        )
+        for _ in range(n_replicas)
+    ]
+    return FleetLoop(replicas, router=router, admission=admission, **kw)
+
+
+def main(argv=None) -> dict:
+    import jax
+    import numpy as np  # noqa: F401  (Request prompts are np arrays)
+
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.data.dataset import SyntheticCorpus
+    from repro.models import model as M
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b-smoke")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--router", default="capacity_weighted",
+                    help="policy name from core.router.ROUTER")
+    ap.add_argument("--admission", default="admit_all",
+                    help="policy name from core.admission.ADMISSION")
+    ap.add_argument("--no-redispatch", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    run = RunConfig(remat="none", attention_impl="xla",
+                    ssd_chunk=min(256, args.prompt_len))
+    params = M.init_model(jax.random.PRNGKey(args.seed), cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, args.prompt_len, args.seed)
+    reqs = [
+        Request(i, corpus.grain_tokens(i, 1)[0], args.gen)
+        for i in range(args.requests)
+    ]
+    fleet = build_fleet(
+        cfg, run, params, args.replicas, args.batch,
+        args.prompt_len + args.gen + 1,
+        router=args.router, admission=args.admission,
+        redispatch=not args.no_redispatch,
+    )
+    stats = fleet.run_requests(reqs)
+    print(
+        f"fleet served {stats['completed']}/{args.requests} requests over "
+        f"{args.replicas} replicas (router={stats['router']}, "
+        f"routed={stats['routed_per_replica']}, "
+        f"redispatched={stats['redispatched']})  "
+        f"{stats['tokens_per_s']:.1f} tok/s fleet-wide"
+    )
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,7 @@ import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +115,16 @@ def _take(cache, idx: list[int]):
 
 
 class ServeLoop:
-    """Single-replica continuous batching behind a shared admission policy."""
+    """Single-replica continuous batching behind a shared admission policy.
+
+    PR 4 splits the monolithic ``run_requests`` into an incremental session
+    API so ``launch/fleet.py`` can interleave N replicas on one host:
+    :meth:`start` opens a session, :meth:`tick` advances it by one
+    scheduling/decode cycle, :meth:`stats` closes it; :meth:`enqueue` /
+    :meth:`cancel` are the fleet hooks (route a request in, pull a stuck
+    one out for LATE-style re-dispatch). ``run_requests`` is now a thin
+    start/tick/stats wrapper with unchanged semantics.
+    """
 
     def __init__(
         self,
@@ -156,229 +165,357 @@ class ServeLoop:
                 c = _cat(c, cache)
             self.decode(self.params, c, jnp.zeros((b, 1), jnp.int32))
 
-    def run_requests(self, requests: list[Request], greedy: bool = True) -> dict:
-        policy = get_policy(self.admission)  # fresh state per run
-        if self.warmup and requests:
-            self._warm(int(requests[0].prompt.shape[0]))
-        t0 = time.perf_counter()
+    def warm(self, prompt_len: int) -> None:
+        """Public pre-compile hook for shared-clock callers: a fleet warms
+        every replica *before* opening the shared measurement clock, so
+        compile time stays outside the measured window (the PR-3 rule,
+        fleet-wide)."""
+        if self.warmup:
+            self._warm(prompt_len)
 
-        def now() -> float:
-            return time.perf_counter() - t0
+    # -- session lifecycle ----------------------------------------------
 
-        for r in requests:
+    def start(
+        self,
+        requests: list[Request],
+        prompt_len: Optional[int] = None,
+        t0: Optional[float] = None,
+    ) -> None:
+        """Open a serving session over ``requests`` (may be empty when a
+        fleet front-end will :meth:`enqueue` routed requests later —
+        ``prompt_len`` then sizes the compile warm-up). ``t0`` is a shared
+        ``perf_counter`` origin: a fleet passes one clock to every replica
+        so arrival stamps (fleet door) and finish stamps (replica) subtract
+        on the same timeline — a shared-clock caller owns the warm-up
+        (:meth:`warm` before opening the clock); standalone sessions warm
+        here and open their own origin afterwards."""
+        self._policy = get_policy(self.admission)  # fresh state per run
+        warm_len = prompt_len or (
+            int(requests[0].prompt.shape[0]) if requests else 0
+        )
+        if self.warmup and warm_len and t0 is None:
+            self._warm(warm_len)
+        self._t0 = time.perf_counter() if t0 is None else t0
+        self._requests: list[Request] = list(requests)
+        for r in self._requests:
             if r.arrived < 0:
-                r.arrived = now()  # enqueue stamp (0.0 for an upfront batch)
-        by_id = {r.rid: r for r in requests}
-        pending = deque(requests)  # not yet offered to the policy
-        ready: deque[Request] = deque()  # admitted, waiting for a slot
-        rejected: list[Request] = []
-        groups: list[_Group] = []
-        done_hist: dict[int, list[float]] = {}  # sojourns per SLO class
-        decode_tokens = 0
-        decode_calls = 0
+                r.arrived = self.now()  # enqueue stamp (0.0 upfront)
+        self._by_id = {r.rid: r for r in self._requests}
+        self._pending = deque(self._requests)  # not yet offered to policy
+        self._ready: deque[Request] = deque()  # admitted, awaiting a slot
+        self._rejected: list[Request] = []
+        self._groups: list[_Group] = []
+        self._done_hist: dict[int, list[float]] = {}  # sojourns per class
+        self._decode_tokens = 0
+        self._decode_calls = 0
+        self._cancelled = 0
+        self._offered = 0
         # measured decode throughput (tokens/s), EMA over per-step rates
         # timed around the decode calls only — a from-start average would
         # fold jit compile and idle waits into "capacity" and mis-rate the
         # threshold/token_bucket policies by an order of magnitude
-        tok_rate = [0.0]
+        self._tok_rate = 0.0
+        self._peak_rate = 0.0
+        self._pump()
+        self._fill_slots()
 
-        def active_count() -> int:
-            return sum(len(g.rids) for g in groups)
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
 
-        def view(t: float) -> ClusterView:
-            live = [by_id[rid] for g in groups for rid in g.rids]
-            backlog = sum(r.max_new - len(r.tokens) for r in live)
-            backlog += sum(r.max_new for r in ready)
-            # before the first measurement, capacity is *unbounded*: an
-            # offer is a permanent decision, and the door must never shed
-            # work on a fabricated slot-count guess — pump() bounds how
-            # many requests are judged optimistically to one batch
-            cap = tok_rate[0] if tok_rate[0] > 0 else float("inf")
-            return ClusterView(
-                time=t,
-                live_capacity=cap,
-                total_capacity=cap,
-                free_slots=self.batch - active_count(),
-                queue_depth=active_count() + len(ready),
-                backlog_work=float(backlog),
-                deferred_depth=policy.n_deferred if policy else 0,
-                deferred_work=policy.deferred_work if policy else 0.0,
-                class_p99=trailing_class_p99(done_hist),
-            )
+    @property
+    def tok_rate(self) -> float:
+        """Measured decode throughput EMA — the capacity this replica
+        reports to a fleet router (the §IV.a measured-rate currency)."""
+        return self._tok_rate
 
-        def as_req(r: Request) -> JobRequest:
-            return JobRequest(
-                job_id=r.rid,
-                arrive_t=r.arrived,
-                n_tasks=1,
-                total_work=float(r.max_new),
-                slo_class=r.slo_class,
-                deadline_s=r.deadline_s,
-            )
+    @property
+    def peak_rate(self) -> float:
+        """Fastest EMA observed this session: the fleet's stand-in for a
+        nameplate rate (real replicas register no spec sheet)."""
+        return self._peak_rate
 
-        def resolve(r: Request, decision: str) -> None:
-            if decision == ADMIT:
-                ready.append(r)
-            else:
-                r.rejected = True
-                rejected.append(r)
+    def _active_count(self) -> int:
+        return sum(len(g.rids) for g in self._groups)
 
-        offered = [0]
+    def outstanding_rids(self) -> list[int]:
+        """Requests decoding or admitted-and-waiting, decode order first —
+        what a fleet re-dispatch monitor watches for stuck entries."""
+        return [rid for g in self._groups for rid in g.rids] + [
+            r.rid for r in self._ready
+        ]
 
-        def pump(force: bool = False) -> None:
-            """Offer new arrivals, then drain whatever the policy releases —
-            the exact protocol run_workload speaks; no serve-private logic.
+    def backlog_tokens(self) -> float:
+        """Remaining token budget across decoding + ready requests — the
+        backlog the fleet's ``shortest_backlog`` router joins on."""
+        live = [self._by_id[rid] for g in self._groups for rid in g.rids]
+        return float(
+            sum(r.max_new - len(r.tokens) for r in live)
+            + sum(r.max_new for r in self._ready)
+        )
 
-            Until the first decode step has produced a *measured* capacity,
-            at most one batch of requests is offered (against the
-            optimistic unbounded view): enough to start decoding and get a
-            real measurement, without judging the whole queue on a guess.
-            ``force`` lifts the bound for the endgame drain — when nothing
-            will ever run again, the guess is all there is."""
-            if policy is None:
-                while pending:
-                    ready.append(pending.popleft())
-                return
-            while pending:
-                if tok_rate[0] <= 0 and not force and offered[0] >= self.batch:
-                    break
-                r = pending.popleft()
-                offered[0] += 1
-                decision = policy.offer(as_req(r), view(now()))
-                if decision != DEFER:
-                    resolve(r, decision)
-            for req, decision in policy.poll(view(now())):
-                resolve(by_id[req.job_id], decision)
+    @property
+    def idle(self) -> bool:
+        return not self._groups and not self._ready
 
-        def on_done(r: Request) -> None:
-            sojourn = r.finished - r.arrived
-            done_hist.setdefault(r.slo_class, []).append(sojourn)
-            if policy is not None:
-                policy.on_job_done(now(), as_req(r), sojourn)
+    # -- fleet hooks -----------------------------------------------------
 
-        def admit(r: Request) -> None:
-            r.submitted = now()
-            logits, cache = self.prefill(self.params, jnp.asarray(r.prompt[None]))
-            tok = int(jnp.argmax(logits[0, -1]))
-            r.tokens.append(tok)
-            r.first_token = now()
-            pos = int(r.prompt.shape[0])
-            if self.batched:
-                for g in groups:
-                    if g.pos == pos and len(g.rids) < self.batch:
-                        g.cache = _cat(g.cache, cache)
-                        g.rids.append(r.rid)
-                        g.last.append(tok)
-                        return
-            groups.append(_Group(pos, [r.rid], cache, [tok]))
+    def enqueue(self, r: Request) -> None:
+        """Route an already-admitted request onto this replica (the fleet
+        front door did the admission; no second policy pass here)."""
+        if r.arrived < 0:
+            r.arrived = self.now()
+        if r.rid not in self._by_id:
+            self._requests.append(r)
+        self._by_id[r.rid] = r
+        self._ready.append(r)
 
-        def fill_slots() -> None:
-            while ready and active_count() < self.batch:
-                admit(ready.popleft())
-
-        def merge_groups() -> None:
-            """Coalesce groups whose positions have come to coincide (a
-            group drained and a later admit landed on the same position) —
-            without this they'd pay separate dispatches forever."""
-            by_pos: dict[int, _Group] = {}
-            for g in list(groups):
-                head = by_pos.get(g.pos)
-                if head is None or len(head.rids) + len(g.rids) > self.batch:
-                    by_pos[g.pos] = g
-                    continue
-                head.cache = _cat(head.cache, g.cache)
-                head.rids += g.rids
-                head.last += g.last
-                groups.remove(g)
-
-        def step() -> None:
-            nonlocal decode_tokens, decode_calls
-            if self.batched and len(groups) > 1:
-                merge_groups()
-            t_in, toks_in = time.perf_counter(), decode_tokens
-            for g in list(groups):
-                toks = jnp.asarray(np.asarray(g.last, np.int32)[:, None])
-                logits, g.cache = self.decode(self.params, g.cache, toks)
-                decode_calls += 1
-                new = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-                t_step = now()
-                keep: list[int] = []
-                for i, rid in enumerate(g.rids):
-                    r = by_id[rid]
-                    tok = int(new[i])
-                    r.tokens.append(tok)
-                    g.last[i] = tok
-                    decode_tokens += 1
-                    if len(r.tokens) >= r.max_new:
-                        r.finished = t_step
-                        on_done(r)
-                    else:
-                        keep.append(i)
-                g.pos += 1
-                if len(keep) < len(g.rids):
+    def cancel(self, rid: int) -> bool:
+        """Pull a request out of this replica (LATE-style re-dispatch
+        cancels the original attempt). Generated tokens are discarded by
+        the caller before re-enqueueing elsewhere; returns False when the
+        request is not outstanding here (it finished first — the race the
+        router property test pins). The request leaves this session's
+        books entirely: whichever replica it finishes on is the only one
+        that counts it in :meth:`stats`."""
+        found = False
+        for r in list(self._ready):
+            if r.rid == rid:
+                self._ready.remove(r)
+                found = True
+                break
+        if not found:
+            for g in self._groups:
+                if rid in g.rids:
+                    keep = [i for i, x in enumerate(g.rids) if x != rid]
                     if not keep:
-                        groups.remove(g)
+                        self._groups.remove(g)
                     else:
                         g.cache = _take(g.cache, keep)
                         g.rids = [g.rids[i] for i in keep]
                         g.last = [g.last[i] for i in keep]
-            inst = (decode_tokens - toks_in) / max(
-                time.perf_counter() - t_in, 1e-9
-            )
-            tok_rate[0] = inst if tok_rate[0] <= 0 else 0.8 * tok_rate[0] + 0.2 * inst
-            if policy is not None:
-                # the same capacity signal the simulator's churn chain
-                # emits: token_bucket re-rates its fill to measured tok/s
-                policy.on_capacity(now(), tok_rate[0])
+                    found = True
+                    break
+        if found:
+            self._requests = [x for x in self._requests if x.rid != rid]
+            self._by_id.pop(rid, None)
+            self._cancelled += 1
+        return found
 
-        pump()
-        fill_slots()
-        last_progress = time.perf_counter()
-        while True:
-            if not groups:
-                if ready:
-                    fill_slots()
-                    continue
-                if policy is not None and policy.n_deferred:
-                    # nothing running: wall-clock has to pay the token debt
-                    nxt = policy.next_event_t()
-                    wait = 0.01 if nxt is None else max(0.0, min(nxt - now(), 0.25))
-                    time.sleep(wait)
-                    pump()
-                    fill_slots()
-                    if groups or ready:
-                        last_progress = time.perf_counter()
-                    elif time.perf_counter() - last_progress > 60.0:
-                        break  # a policy that never releases: report, don't hang
-                    continue
-                if pending:
-                    # endgame: nothing running or deferred but requests were
-                    # never offered (the pre-measurement bound) — drain them
-                    pump(force=True)
-                    fill_slots()
-                    if groups or ready:
-                        continue
+    # -- admission protocol (same registry as run_workload) --------------
+
+    def _view(self, t: float) -> ClusterView:
+        # before the first measurement, capacity is *unbounded*: an offer
+        # is a permanent decision, and the door must never shed work on a
+        # fabricated slot-count guess — _pump() bounds how many requests
+        # are judged optimistically to one batch
+        cap = self._tok_rate if self._tok_rate > 0 else float("inf")
+        return ClusterView(
+            time=t,
+            live_capacity=cap,
+            total_capacity=cap,
+            free_slots=self.batch - self._active_count(),
+            queue_depth=self._active_count() + len(self._ready),
+            backlog_work=self.backlog_tokens(),
+            deferred_depth=self._policy.n_deferred if self._policy else 0,
+            deferred_work=self._policy.deferred_work if self._policy else 0.0,
+            class_p99=trailing_class_p99(self._done_hist),
+        )
+
+    @staticmethod
+    def as_job_request(r: Request) -> JobRequest:
+        return JobRequest(
+            job_id=r.rid,
+            arrive_t=r.arrived,
+            n_tasks=1,
+            total_work=float(r.max_new),
+            slo_class=r.slo_class,
+            deadline_s=r.deadline_s,
+        )
+
+    def _resolve(self, r: Request, decision: str) -> None:
+        if decision == ADMIT:
+            self._ready.append(r)
+        else:
+            r.rejected = True
+            self._rejected.append(r)
+
+    def _pump(self, force: bool = False) -> None:
+        """Offer new arrivals, then drain whatever the policy releases —
+        the exact protocol run_workload speaks; no serve-private logic.
+
+        Until the first decode step has produced a *measured* capacity,
+        at most one batch of requests is offered (against the
+        optimistic unbounded view): enough to start decoding and get a
+        real measurement, without judging the whole queue on a guess.
+        ``force`` lifts the bound for the endgame drain — when nothing
+        will ever run again, the guess is all there is."""
+        if self._policy is None:
+            while self._pending:
+                self._ready.append(self._pending.popleft())
+            return
+        while self._pending:
+            if self._tok_rate <= 0 and not force and self._offered >= self.batch:
                 break
-            step()
-            last_progress = time.perf_counter()
-            pump()
-            fill_slots()
+            r = self._pending.popleft()
+            self._offered += 1
+            decision = self._policy.offer(self.as_job_request(r), self._view(self.now()))
+            if decision != DEFER:
+                self._resolve(r, decision)
+        for req, decision in self._policy.poll(self._view(self.now())):
+            self._resolve(self._by_id[req.job_id], decision)
 
-        wall = time.perf_counter() - t0
-        done = [r for r in requests if r.finished >= 0]
+    def _on_done(self, r: Request) -> None:
+        sojourn = r.finished - r.arrived
+        self._done_hist.setdefault(r.slo_class, []).append(sojourn)
+        if self._policy is not None:
+            self._policy.on_job_done(self.now(), self.as_job_request(r), sojourn)
+
+    # -- decode mechanics -------------------------------------------------
+
+    def _admit(self, r: Request) -> None:
+        r.submitted = self.now()
+        logits, cache = self.prefill(self.params, jnp.asarray(r.prompt[None]))
+        tok = int(jnp.argmax(logits[0, -1]))
+        r.tokens.append(tok)
+        r.first_token = self.now()
+        pos = int(r.prompt.shape[0])
+        if self.batched:
+            for g in self._groups:
+                if g.pos == pos and len(g.rids) < self.batch:
+                    g.cache = _cat(g.cache, cache)
+                    g.rids.append(r.rid)
+                    g.last.append(tok)
+                    return
+        self._groups.append(_Group(pos, [r.rid], cache, [tok]))
+
+    def _fill_slots(self) -> None:
+        while self._ready and self._active_count() < self.batch:
+            self._admit(self._ready.popleft())
+
+    def _merge_groups(self) -> None:
+        """Coalesce groups whose positions have come to coincide (a
+        group drained and a later admit landed on the same position) —
+        without this they'd pay separate dispatches forever."""
+        by_pos: dict[int, _Group] = {}
+        for g in list(self._groups):
+            head = by_pos.get(g.pos)
+            if head is None or len(head.rids) + len(g.rids) > self.batch:
+                by_pos[g.pos] = g
+                continue
+            head.cache = _cat(head.cache, g.cache)
+            head.rids += g.rids
+            head.last += g.last
+            self._groups.remove(g)
+
+    def _step(self) -> None:
+        if self.batched and len(self._groups) > 1:
+            self._merge_groups()
+        t_in, toks_in = time.perf_counter(), self._decode_tokens
+        for g in list(self._groups):
+            toks = jnp.asarray(np.asarray(g.last, np.int32)[:, None])
+            logits, g.cache = self.decode(self.params, g.cache, toks)
+            self._decode_calls += 1
+            new = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+            t_step = self.now()
+            keep: list[int] = []
+            for i, rid in enumerate(g.rids):
+                r = self._by_id[rid]
+                tok = int(new[i])
+                r.tokens.append(tok)
+                g.last[i] = tok
+                self._decode_tokens += 1
+                if len(r.tokens) >= r.max_new:
+                    r.finished = t_step
+                    self._on_done(r)
+                else:
+                    keep.append(i)
+            g.pos += 1
+            if len(keep) < len(g.rids):
+                if not keep:
+                    self._groups.remove(g)
+                else:
+                    g.cache = _take(g.cache, keep)
+                    g.rids = [g.rids[i] for i in keep]
+                    g.last = [g.last[i] for i in keep]
+        inst = (self._decode_tokens - toks_in) / max(
+            time.perf_counter() - t_in, 1e-9
+        )
+        self._tok_rate = (
+            inst if self._tok_rate <= 0 else 0.8 * self._tok_rate + 0.2 * inst
+        )
+        self._peak_rate = max(self._peak_rate, self._tok_rate)
+        if self._policy is not None:
+            # the same capacity signal the simulator's churn chain
+            # emits: token_bucket re-rates its fill to measured tok/s
+            self._policy.on_capacity(self.now(), self._tok_rate)
+
+    # -- the session stepper ----------------------------------------------
+
+    def tick(self) -> str:
+        """Advance one scheduling/decode cycle.
+
+        Returns ``"step"`` (made progress), ``"wait"`` (deferred requests
+        exist but the policy released nothing — the caller owns the
+        wall-clock and decides whether to sleep), or ``"done"``."""
+        if not self._groups:
+            if self._ready:
+                self._fill_slots()
+                return "step"
+            if self._policy is not None and self._policy.n_deferred:
+                self._pump()
+                self._fill_slots()
+                return "step" if (self._groups or self._ready) else "wait"
+            if self._pending:
+                # endgame: nothing running or deferred but requests were
+                # never offered (the pre-measurement bound) — drain them
+                self._pump(force=True)
+                self._fill_slots()
+                if self._groups or self._ready:
+                    return "step"
+            return "done"
+        self._step()
+        self._pump()
+        self._fill_slots()
+        return "step"
+
+    def stats(self) -> dict:
+        wall = time.perf_counter() - self._t0
+        done = [r for r in self._requests if r.finished >= 0]
+        policy = self._policy
         return {
             "completed": len(done),
-            "rejected": len(rejected),
+            "rejected": len(self._rejected),
             "deferred_unserved": policy.n_deferred if policy else 0,
             "admission": policy.name if policy else "none",
             "wall_s": wall,
-            "decode_steps": decode_tokens,
-            "decode_calls": decode_calls,
+            "decode_steps": self._decode_tokens,
+            "decode_calls": self._decode_calls,
+            "cancelled": self._cancelled,
             "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
             "mean_ttft_s": float(np.mean([r.first_token - r.arrived for r in done])) if done else -1,
             "mean_latency_s": float(np.mean([r.finished - r.arrived for r in done])) if done else -1,
             "mean_queue_wait_s": float(np.mean([r.queue_wait for r in done])) if done else -1,
         }
+
+    def run_requests(self, requests: list[Request], greedy: bool = True) -> dict:
+        """Standalone session: start → tick to completion → stats.
+        Semantics identical to the pre-PR-4 monolithic loop."""
+        self.start(requests)
+        last_progress = time.perf_counter()
+        while True:
+            status = self.tick()
+            if status == "done":
+                break
+            if status == "wait":
+                # nothing running: wall-clock has to pay the token debt
+                nxt = self._policy.next_event_t()
+                wait = 0.01 if nxt is None else max(0.0, min(nxt - self.now(), 0.25))
+                time.sleep(wait)
+                if time.perf_counter() - last_progress > 60.0:
+                    break  # a policy that never releases: report, don't hang
+            else:
+                last_progress = time.perf_counter()
+        return self.stats()
 
 
 def main(argv=None) -> dict:

@@ -1,0 +1,496 @@
+"""Cross-replica routing + LATE re-dispatch (PR 4): router policy units,
+re-dispatch planning, fleet-engine integration invariants (conservation
+under re-dispatch races and replica death, rejected-never-dispatched),
+bit-identical replay on the churny fleet preset, and the shared-registry
+criterion that launch/fleet.py has no fleet-private routing path.
+"""
+
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.router import (
+    ROUTER,
+    CapacityWeightedRouter,
+    InflightView,
+    ReplicaView,
+    RoundRobinRouter,
+    ShortestBacklogRouter,
+    get_router,
+    plan_redispatch,
+    service_estimate_s,
+)
+from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+
+ALL_ROUTERS = ("round_robin", "capacity_weighted", "shortest_backlog")
+
+
+def _view(rid=0, cap=1.0, nameplate=None, backlog=0.0, depth=0, age=0.0,
+          alive=True):
+    return ReplicaView(
+        replica_id=rid, capacity=cap,
+        nameplate=cap if nameplate is None else nameplate,
+        backlog_work=backlog, queue_depth=depth, oldest_age_s=age, alive=alive,
+    )
+
+
+def _req(rid=0, work=10.0):
+    from repro.core.admission import JobRequest
+
+    return JobRequest(job_id=rid, arrive_t=0.0, n_tasks=1, total_work=work)
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_registry_complete_and_fresh_semantics():
+    assert set(ROUTER) == set(ALL_ROUTERS)
+    for name, factory in ROUTER.items():
+        assert factory().name == name
+    assert isinstance(get_router("round_robin"), RoundRobinRouter)
+    # instances are cloned-and-reset: runtime state (cursor) never leaks
+    inst = RoundRobinRouter()
+    inst.pick(_req(), [_view(0), _view(1)])
+    got = get_router(inst)
+    assert got is not inst
+    assert got.pick(_req(), [_view(0), _view(1)]) == 0  # cursor reset
+    with pytest.raises(ValueError):
+        get_router("nope")
+
+
+# ------------------------------------------------------- policy units
+
+
+def test_round_robin_cycles_and_skips_dead():
+    r = get_router("round_robin")
+    views = [_view(0), _view(1), _view(2)]
+    assert [r.pick(_req(), views) for _ in range(4)] == [0, 1, 2, 0]
+    dead1 = [_view(0), _view(1, alive=False), _view(2)]
+    picks = [r.pick(_req(), dead1) for _ in range(4)]
+    assert 1 not in picks
+    assert r.pick(_req(), [_view(0, alive=False)]) is None
+
+
+def test_capacity_weighted_shares_are_proportional():
+    """Smooth weighted round-robin: over any window whose length is a
+    multiple of the weight total, shares are *exactly* proportional to
+    measured capacity — the §IV.b.ii rule in routing currency."""
+    r = get_router("capacity_weighted")
+    views = [_view(0, cap=3.0), _view(1, cap=2.0), _view(2, cap=1.0)]
+    picks = [r.pick(_req(), views) for _ in range(600)]
+    assert picks.count(0) == 300 and picks.count(1) == 200 and picks.count(2) == 100
+    # and the stream is smooth, not batched: the fastest replica never
+    # receives more than two consecutive requests at 3:2:1
+    runs = max(
+        sum(1 for _ in g) for _, g in __import__("itertools").groupby(picks)
+    )
+    assert runs <= 2
+
+
+def test_capacity_weighted_rerates_immediately_on_capacity_drop():
+    r = get_router("capacity_weighted")
+    healthy = [_view(0, cap=1.0), _view(1, cap=1.0)]
+    for _ in range(10):
+        r.pick(_req(), healthy)
+    # replica 0 degrades 10x: its share collapses on the very next window
+    degraded = [_view(0, cap=0.1, nameplate=1.0), _view(1, cap=1.0)]
+    picks = [r.pick(_req(), degraded) for _ in range(22)]
+    assert picks.count(0) == 2  # 0.1/1.1 of 22
+    assert picks.count(1) == 20
+
+
+def test_capacity_weighted_unmeasured_fleet_spreads_by_load():
+    """Before any replica has a measured rate (a real fleet pre-first-
+    decode) there are no proportions: fall back to least-loaded so the
+    opening burst doesn't pile onto one replica."""
+    r = get_router("capacity_weighted")
+    views = [
+        _view(0, cap=0.0, depth=2, backlog=20.0),
+        _view(1, cap=0.0, depth=0, backlog=0.0),
+        _view(2, cap=0.0, depth=1, backlog=10.0),
+    ]
+    assert r.pick(_req(), views) == 1
+
+
+def test_shortest_backlog_joins_seconds_not_depth():
+    """A 3-deep queue on a 0.4x replica is *longer in time* than a 6-deep
+    queue on a 1.0x replica — the join must be in backlog-seconds."""
+    r = get_router("shortest_backlog")
+    views = [
+        _view(0, cap=1.0, backlog=60.0, depth=6),  # 60 s of queue
+        _view(1, cap=0.4, backlog=30.0, depth=3),  # 75 s of queue
+    ]
+    assert r.pick(_req(), views) == 0
+    # dead replicas are never joined, however short their stale backlog
+    views = [_view(0, cap=1.0, backlog=0.0, alive=False),
+             _view(1, cap=0.4, backlog=30.0)]
+    assert r.pick(_req(), views) == 1
+
+
+# ------------------------------------------------- re-dispatch planning
+
+
+def _stuck(rid=0, on=0, age=100.0, est=10.0, remaining=10.0):
+    return InflightView(request_id=rid, replica_id=on, age_s=age, est_s=est,
+                        remaining_work=remaining)
+
+
+def test_redispatch_requires_stuck_and_degraded():
+    idle_fast = _view(1, cap=1.0)
+    straggler = _view(0, cap=0.1, nameplate=1.0, backlog=10.0, depth=1)
+    healthy_busy = _view(0, cap=1.0, backlog=10.0, depth=1)
+    # stuck on a degraded replica: rescued
+    assert plan_redispatch([_stuck(age=50.0, est=10.0)],
+                           [straggler, idle_fast], 2.0) == [(0, 0, 1)]
+    # young on a degraded replica: left alone (its estimate still holds)
+    assert plan_redispatch([_stuck(age=15.0, est=10.0)],
+                           [straggler, idle_fast], 2.0) == []
+    # stuck-by-age on a *healthy* replica: left alone (merely queued —
+    # cancelling it would waste progress for no capacity reason)
+    assert plan_redispatch([_stuck(age=50.0, est=10.0)],
+                           [healthy_busy, idle_fast], 2.0) == []
+    # a pronounced-dead replica is degraded however its stale rate looks
+    dead = _view(0, cap=1.0, nameplate=1.0, alive=False, depth=1, backlog=10.0)
+    assert plan_redispatch([_stuck(age=50.0, est=10.0)],
+                           [dead, idle_fast], 2.0) == [(0, 0, 1)]
+
+
+def test_redispatch_targets_fastest_idle_one_move_each():
+    views = [
+        _view(0, cap=0.05, nameplate=1.0, depth=3, backlog=30.0),  # straggler
+        _view(1, cap=0.7),                      # idle, mid-speed
+        _view(2, cap=1.0),                      # idle, fastest
+        _view(3, cap=1.0, depth=1, backlog=5.0),  # busy: not a target
+        _view(4, cap=0.1, nameplate=1.0),       # idle but degraded: never
+    ]
+    stuck = [
+        _stuck(rid=10, on=0, age=100.0, est=10.0, remaining=4.0),
+        _stuck(rid=11, on=0, age=100.0, est=10.0, remaining=16.0),
+        _stuck(rid=12, on=0, age=100.0, est=10.0, remaining=8.0),
+    ]
+    moves = plan_redispatch(stuck, views, 2.0)
+    # two idle healthy targets -> two moves; longest time-to-end first gets
+    # the fastest target; the third stuck request waits for the next probe
+    assert moves == [(11, 0, 2), (12, 0, 1)]
+    # no idle target -> no moves (rescue never displaces healthy work)
+    busy = [_view(1, cap=1.0, depth=1, backlog=5.0),
+            _view(0, cap=0.05, nameplate=1.0, depth=3, backlog=30.0)]
+    assert plan_redispatch(stuck, busy, 2.0) == []
+
+
+def test_service_estimate_prices_nameplate_not_live_rate():
+    # a healthy 0.4x replica serving at its own speed is never "stuck":
+    # age == work/0.4 == its estimate exactly
+    est = service_estimate_s(10.0, 0.4)
+    assert est == pytest.approx(25.0)
+
+
+# ------------------------------------- fleet engine integration invariants
+
+
+def test_straggler_rescue_beats_equal_shares_on_claim10_preset():
+    """Single-seed sanity of the claim bench_router.py gates on seed-means:
+    capacity-proportional routing + re-dispatch beats round_robin on both
+    p99 and on-time goodput when the fastest replica degrades mid-run."""
+    rr = run_fleet("fleet_straggler", seed=0, router="round_robin",
+                   redispatch=False)
+    cw = run_fleet("fleet_straggler", seed=0, router="capacity_weighted",
+                   redispatch=True)
+    assert rr.completed == cw.completed == len(rr.requests)
+    assert cw.latency_quantile(0.99) < rr.latency_quantile(0.99)
+    assert cw.on_time_work() > rr.on_time_work()
+    assert cw.n_redispatched > 0
+    # the degraded replica serves a smaller share under capacity routing
+    assert cw.served_by[0] <= rr.served_by[0]
+    # both attempts of every rescued request are recorded
+    moved = [r for r in cw.requests if r.n_redispatched > 0]
+    assert moved
+    for r in moved:
+        assert [d.outcome for d in r.dispatches[:-1]] == ["cancelled"] * (
+            len(r.dispatches) - 1
+        )
+        assert r.dispatches[-1].outcome == "done"
+        assert r.dispatches[-1].replica == r.served_by
+    assert cw.wasted_work > 0.0  # cancelled progress is charged, not hidden
+
+
+def _dead_replica_spec() -> FleetSpec:
+    """Fastest replica dies for good mid-queue: the motivating failure mode
+    (a degraded replica holds its requests forever) made permanent."""
+    return FleetSpec(
+        replica_rates=(1.0, 0.7, 0.4), n_requests=24,
+        arrival="poisson", mean_interarrival_s=4.0,
+        replica_fail=(0, 30.0), replica_recover_s=None,
+        dead_after_s=15.0, late_factor=2.0, probe_s=2.0,
+    )
+
+
+def test_dead_replica_strands_without_redispatch_and_rescues_with():
+    spec = _dead_replica_spec()
+    off = run_fleet(spec, seed=0, router="round_robin", redispatch=False)
+    assert off.stranded > 0
+    assert off.completed == len(off.requests) - off.stranded
+    stranded = [r for r in off.requests if r.finish_t < 0]
+    assert all(r.dispatches[-1].outcome == "stranded" for r in stranded)
+    on = run_fleet(spec, seed=0, router="round_robin", redispatch=True)
+    assert on.stranded == 0 and on.completed == len(on.requests)
+    assert on.n_redispatched > 0
+    kinds = [e.kind for e in on.trace]
+    assert "replica_fail" in kinds and "replica_dead" in kinds
+    # once pronounced, the router never routes to the dead replica again
+    t_dead = next(e.time for e in on.trace if e.kind == "replica_dead")
+    late_routes = [
+        e for e in on.trace
+        if e.kind == "route" and e.time > t_dead and e.detail["replica"] == 0
+    ]
+    assert late_routes == []
+
+
+@given(st.integers(0, 10_000), st.sampled_from(ALL_ROUTERS))
+@settings(max_examples=10, deadline=None)
+def test_conservation_under_redispatch_and_replica_death(seed, router):
+    """Every admitted request completes exactly once across the fleet —
+    no duplicate completions, no stranded requests — even with re-dispatch
+    racing completions across a replica death/re-registration cycle."""
+    res = run_fleet("fleet_churny", seed=seed, router=router, redispatch=True)
+    assert res.completed == len(res.requests)  # no admission: all admitted
+    assert res.stranded == 0
+    for r in res.requests:
+        assert r.finish_t >= r.arrive_t
+        done = [d for d in r.dispatches if d.outcome == "done"]
+        assert len(done) == 1  # exactly once, on exactly one replica
+        assert done[0].replica == r.served_by
+        assert all(d.outcome == "cancelled" for d in r.dispatches[:-1])
+    done_events = [e for e in res.trace if e.kind == "request_done"]
+    assert len(done_events) == res.completed
+    assert len({e.detail["request"] for e in done_events}) == res.completed
+    # completions tally per replica
+    assert sum(res.served_by.values()) == res.completed
+
+
+@pytest.mark.parametrize("router", ALL_ROUTERS)
+def test_bit_identical_replay_on_churny_fleet(router):
+    """The determinism pin, mirroring test_elastic_churn's replay tests:
+    two replays of the same seed on the churny fleet preset must agree on
+    every routing decision, re-dispatch, and completion — dataclass
+    equality over the full FleetResult, trace included."""
+    a = run_fleet("fleet_churny", seed=1, router=router,
+                  admission="token_bucket", redispatch=True)
+    b = run_fleet("fleet_churny", seed=1, router=router,
+                  admission="token_bucket", redispatch=True)
+    assert a == b
+    # the replay actually exercised the churn chain
+    kinds = {e.kind for e in a.trace}
+    assert {"replica_fail", "replica_dead", "re_registered",
+            "straggler_on"} <= kinds
+
+
+def test_admission_fronts_the_whole_fleet():
+    """One policy at the fleet door (the shared ADMISSION registry):
+    deferrals show up in the trace and in sojourns; rejected requests are
+    never routed, let alone dispatched."""
+    res = run_fleet("fleet_churny", seed=0, router="shortest_backlog",
+                    admission="token_bucket")
+    assert res.admission == "token_bucket"
+    assert res.n_deferred > 0
+    kinds = [e.kind for e in res.trace]
+    assert "request_deferred" in kinds and "request_admitted" in kinds
+    waited = [e.detail["waited_s"] for e in res.trace
+              if e.kind == "request_admitted"]
+    assert max(waited) > 0.0
+    # an overloaded fleet with a threshold door actually sheds
+    hot = FleetSpec(replica_rates=(1.0, 0.4), n_requests=48,
+                    arrival="poisson", mean_interarrival_s=1.0,
+                    work_per_request=(8.0, 24.0))
+    shed = run_fleet(hot, seed=0, router="shortest_backlog",
+                     admission="threshold")
+    assert shed.n_rejected > 0
+    for r in shed.requests:
+        if r.decision == "rejected":
+            assert r.dispatches == () and r.finish_t < 0
+    assert shed.completed == len(shed.requests) - shed.n_rejected
+    assert shed.stranded == 0
+
+
+# ------------------------------------------- launch/fleet shared registry
+
+
+class _StubReplica:
+    """Minimal ServeLoop-compatible replica for driving FleetLoop in the
+    fast tier: serves `speed` tokens per request per tick, no JAX."""
+
+    def __init__(self, speed: int, batch: int = 2):
+        self.speed, self.batch = speed, batch
+
+    def start(self, requests, prompt_len=None, t0=None):
+        self.ready = list(requests)
+        self.active = []
+        self.done = []
+        self.tok_rate = 0.0
+        self.peak_rate = 0.0
+
+    def enqueue(self, r):
+        self.ready.append(r)
+
+    def cancel(self, rid):
+        for q in (self.ready, self.active):
+            for r in list(q):
+                if r.rid == rid:
+                    q.remove(r)
+                    return True
+        return False
+
+    def outstanding_rids(self):
+        return [r.rid for r in self.active + self.ready]
+
+    def backlog_tokens(self):
+        return float(
+            sum(r.max_new - len(r.tokens) for r in self.active)
+            + sum(r.max_new for r in self.ready)
+        )
+
+    @property
+    def idle(self):
+        return not self.active and not self.ready
+
+    def tick(self):
+        while self.ready and len(self.active) < self.batch:
+            r = self.ready.pop(0)
+            r.submitted = 0.0
+            self.active.append(r)
+        if not self.active:
+            return "done"
+        for r in list(self.active):
+            for _ in range(self.speed):
+                r.tokens.append(1)
+                if len(r.tokens) >= r.max_new:
+                    r.finished = time.perf_counter()
+                    self.active.remove(r)
+                    self.done.append(r)
+                    break
+        self.tok_rate = float(self.speed)
+        self.peak_rate = max(self.peak_rate, self.tok_rate)
+        return "step"
+
+    def stats(self):
+        return {"completed": len(self.done)}
+
+
+class _StallingReplica(_StubReplica):
+    """Produces one healthy tick, then its measured rate collapses and it
+    stops finishing anything — the degraded replica of the module docstring."""
+
+    def __init__(self):
+        super().__init__(2)
+        self.n = 0
+
+    def tick(self):
+        self.n += 1
+        if self.n > 1:
+            self.tok_rate = 0.05  # EMA collapse: observably degraded
+            return "step"
+        return super().tick()
+
+
+def _mk_requests(n, gen=8):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    return [Request(i, np.zeros(4, np.int32), gen) for i in range(n)]
+
+
+def test_fleet_loop_resolves_policies_from_shared_registries():
+    """launch/fleet.FleetLoop resolves its router through core.router's
+    registry and its admission through core.admission's — the acceptance
+    criterion that the hardware path has no fleet-private routing."""
+    from repro.core.admission import SloClassesPolicy, get_policy
+    from repro.launch.fleet import FleetLoop
+
+    loop = FleetLoop([_StubReplica(2)], router="capacity_weighted",
+                     admission="slo_classes")
+    assert isinstance(get_router(loop.router), CapacityWeightedRouter)
+    assert isinstance(get_policy(loop.admission), SloClassesPolicy)
+    pre = ShortestBacklogRouter()
+    loop2 = FleetLoop([_StubReplica(2)], router=pre)
+    resolved = get_router(loop2.router)
+    assert isinstance(resolved, ShortestBacklogRouter)
+    assert resolved is not pre  # fresh per run, tuning carried
+    with pytest.raises(ValueError):
+        FleetLoop([], router="round_robin")
+
+
+def test_fleet_loop_routes_and_rescues_with_stub_replicas():
+    """End-to-end FleetLoop behavior without a JAX compile: requests are
+    spread across replicas by the router, and requests stuck on a stalled
+    replica are cancelled there and completed elsewhere — exactly once."""
+    from repro.launch.fleet import FleetLoop
+
+    stats = FleetLoop(
+        [_StubReplica(4), _StubReplica(2), _StubReplica(1)],
+        router="capacity_weighted", admission="admit_all",
+        redispatch=True, probe_s=0.0,
+    ).run_requests(_mk_requests(12))
+    assert stats["completed"] == 12 and stats["rejected"] == 0
+    assert all(n > 0 for n in stats["routed_per_replica"])  # spread, not piled
+    healthy = _StubReplica(2)
+    stats = FleetLoop(
+        [healthy, _StallingReplica()],
+        router="round_robin", admission=None,
+        redispatch=True, probe_s=0.0, late_factor=0.5,
+    ).run_requests(_mk_requests(8))
+    assert stats["completed"] == 8
+    assert stats["redispatched"] > 0
+    assert stats["completed_per_replica"] == [8, 0]  # rescued to the healthy one
+    assert sum(stats["completed_per_replica"]) == stats["completed"]
+
+
+def test_serve_loop_cancel_removes_request_from_session_books():
+    """A cancelled (re-dispatched) request must leave the source replica's
+    session entirely — otherwise both the source and the target count the
+    same completion in stats() and sum(completed_per_replica) overshoots.
+    (start() with no requests and warmup=False never touches JAX, so this
+    rides the fast tier.)"""
+    from repro.launch.serve import ServeLoop
+
+    loop = ServeLoop(None, None, None, batch=2, max_len=8,
+                     admission=None, warmup=False)
+    loop.start([])
+    r = _mk_requests(1)[0]
+    loop.enqueue(r)
+    assert loop.outstanding_rids() == [r.rid]
+    assert loop.cancel(r.rid) is True
+    assert loop.outstanding_rids() == [] and loop.idle
+    assert loop.cancel(r.rid) is False  # already gone: the finish race
+    # the finished-elsewhere request no longer appears in this session
+    r.finished = 1.0
+    assert loop.stats()["completed"] == 0
+    assert loop.stats()["cancelled"] == 1
+    # ping-pong back is clean: a re-enqueue re-enters the books exactly once
+    loop.enqueue(r)
+    assert loop.outstanding_rids() == [r.rid]
+
+
+# ------------------------------------------------------------- tooling
+
+
+def test_fast_tier_timing_guard():
+    """The router suite rides the fast tier: a representative claim-10
+    slice (3 routers x 2 seeds on the straggler preset) must stay well
+    under the ~2 min tier budget — catches a fleet event-loop blow-up
+    (e.g. probe storms going quadratic) before CI times out."""
+    t0 = time.perf_counter()
+    for router in ALL_ROUTERS:
+        for seed in (0, 1):
+            run_fleet("fleet_straggler", seed=seed, router=router)
+    assert time.perf_counter() - t0 < 30.0
+
+
+def test_fleet_presets_complete():
+    assert {"fleet_hetero", "fleet_straggler", "fleet_churny"} <= set(
+        FLEET_PRESETS
+    )
+    for name, spec in FLEET_PRESETS.items():
+        assert spec.n_replicas >= 2, name
+        assert spec.n_requests > 0, name

@@ -23,6 +23,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_admission,
+        bench_autoscale,
         bench_elastic,
         bench_heartbeat,
         bench_namespace,
@@ -49,6 +50,8 @@ def main(argv=None) -> None:
          lambda: bench_admission.main(smoke=opts.smoke)),
         ("claim10: cross-replica routing + LATE re-dispatch",
          lambda: bench_router.main(smoke=opts.smoke)),
+        ("claim11: replica autoscaling on the measured-capacity signal",
+         lambda: bench_autoscale.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

@@ -1,0 +1,103 @@
+"""Replica autoscaling: the fixed-pool dilemma and both ways out (PR 5).
+
+The paper's resource-waste argument, one layer up: a serving fleet sized
+statically is wrong in both directions the moment load varies. Two load
+shapes from core/workload.FLEET_PRESETS:
+
+  fleet_bursty  — four tight 16-request bursts, four minutes of silence
+                  between them (the claim-11 regime). A mean-sized pool
+                  rides the burst tail; a peak-sized pool pays
+                  replica-seconds to idle through every gap.
+  fleet_diurnal — a sinusoidal arrival rate (peak ~9x trough) over a
+                  10-minute period: the shrink side of the policy has to
+                  track the trough without flapping.
+
+Against each, the AUTOSCALE registry's policies (core/autoscale.py):
+
+  fixed             — the baseline: the pool you provisioned is the pool
+                      you run (identical to autoscale=None).
+  backlog_threshold — grow on sustained backlog-seconds per unit of live
+                      measured capacity, drain-and-retire on sustained
+                      near-idle; cooldowns + min/max bounds.
+  deadline_aware    — size to keep the estimated class-0 sojourn inside
+                      the deadline budget learned from the requests
+                      themselves (the D-SPACE4Cloud framing), reusing
+                      admission's trailing per-class p99 window.
+
+Every run is the deterministic fleet engine (core/workload.run_fleet):
+spawns pay a 15 s warmup before they are routable, queued requests
+rebalance onto freshly-warm capacity, and retiring replicas drain first —
+all visible in the churn trace printed for one run at the end. The same
+policy names drive real ServeLoop replicas via
+  PYTHONPATH=src python -m repro.launch.fleet --autoscale backlog_threshold
+
+    PYTHONPATH=src python examples/autoscale_fleet.py
+"""
+
+from dataclasses import replace
+
+from repro.core.autoscale import BacklogThresholdScaler, DeadlineAwareScaler
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+
+def configs(base_rates):
+    n = len(base_rates)
+    return (
+        ("fixed (mean-sized)", base_rates, None),
+        ("fixed (peak-sized)", (1.0,) * 5, None),
+        ("backlog_threshold", base_rates,
+         BacklogThresholdScaler(min_replicas=n, max_replicas=6)),
+        ("deadline_aware", base_rates,
+         DeadlineAwareScaler(min_replicas=n, max_replicas=6)),
+    )
+
+
+def show(preset: str, seed: int = 0):
+    spec = FLEET_PRESETS[preset]
+    print(f"\n=== {preset}: {spec.description}")
+    print(f"    base pool {spec.replica_rates}, {spec.n_requests} requests, "
+          f"warmup {spec.warmup_s:.0f}s, scale check every "
+          f"{spec.scale_check_s:.0f}s")
+    print(f"{'policy':20s} {'p50_s':>6s} {'p99_s':>6s} {'replica_s':>9s} "
+          f"{'spawn':>5s} {'retire':>6s} {'peak':>4s}  served_by")
+    for label, rates, asc in configs(spec.replica_rates):
+        res = run_fleet(replace(spec, replica_rates=rates), seed=seed,
+                        autoscale=asc)
+        assert res.completed == len(res.requests)
+        print(f"{label:20s} {res.latency_quantile(0.5):6.1f} "
+              f"{res.latency_quantile(0.99):6.1f} "
+              f"{res.replica_seconds:9.1f} {res.n_spawned:5d} "
+              f"{res.n_retired:6d} {res.pool_peak:4d}  {res.served_by}")
+
+
+def anatomy(seed: int = 0):
+    """One burst's worth of scaling events, end to end."""
+    res = run_fleet("fleet_bursty", seed=seed,
+                    autoscale=BacklogThresholdScaler(min_replicas=2,
+                                                     max_replicas=6))
+    print("\n=== anatomy of the first scaling cycle (fleet_bursty, "
+          f"seed {seed}) ===")
+    kinds = {"scale_up", "replica_warm", "rebalance", "scale_down",
+             "replica_retired"}
+    shown = 0
+    for e in res.trace:
+        if e.kind in kinds:
+            detail = ", ".join(f"{k}={v}" for k, v in e.detail.items())
+            print(f"  t={e.time:7.1f}s  {e.kind:16s} {detail}")
+            shown += 1
+            if shown >= 12:
+                print("  ...")
+                break
+    print(f"  => {res.n_spawned} spawns, {res.n_retired} retirements, "
+          f"pool peaked at {res.pool_peak}, "
+          f"{sum(1 for e in res.trace if e.kind == 'rebalance')} queued "
+          f"requests rebalanced onto fresh capacity")
+
+
+if __name__ == "__main__":
+    show("fleet_bursty")
+    show("fleet_diurnal")
+    anatomy()
+    print("\n(the claim-11 gate: backlog_threshold must hold p99 at or "
+          "under fixed-mean's\n while consuming at most fixed-peak's "
+          "replica-seconds — benchmarks/bench_autoscale.py)")

@@ -12,7 +12,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== [1/3] test deps (best-effort) =="
+echo "== [1/4] test deps (best-effort) =="
 if python -m pip install -q hypothesis pytest-timeout 2>/dev/null; then
     echo "installed hypothesis + pytest-timeout"
 else
@@ -26,24 +26,31 @@ if python -c "import pytest_timeout" 2>/dev/null; then
     TIMEOUT_ARGS="--timeout=120"
 fi
 
-echo "== [2/3] fast tier (pytest.ini deselects @slow) =="
+echo "== [2/4] fast tier (pytest.ini deselects @slow) =="
 # shellcheck disable=SC2086
 python -m pytest -x -q $TIMEOUT_ARGS
 
 if [[ "${VERIFY_FULL:-0}" == "1" ]]; then
-    echo "== [2b/3] slow tier (JAX-compile-heavy) =="
+    echo "== [2b/4] slow tier (JAX-compile-heavy) =="
     # shellcheck disable=SC2086
     python -m pytest -q -m slow $TIMEOUT_ARGS
 fi
 
-echo "== [3/3] benchmark smoke path =="
-# claim 8 (elastic re-mesh under churn), claim 9 (SLO-aware admission) and
-# claim 10 (cross-replica routing + re-dispatch) run standalone first so a
-# recovery/admission/routing regression is attributed before the full
-# sweep, then the whole sweep
+echo "== [3/4] docs-sync (claims index + architecture guide vs the code) =="
+# also part of the fast tier above; run standalone so a docs regression is
+# named as such, not buried in a suite failure (README/docs/claims.md must
+# track benchmarks/run.py — see tests/test_docs.py)
+python -m pytest -q tests/test_docs.py
+
+echo "== [4/4] benchmark smoke path =="
+# claim 8 (elastic re-mesh under churn), claim 9 (SLO-aware admission),
+# claim 10 (cross-replica routing + re-dispatch) and claim 11 (replica
+# autoscaling) run standalone first so a recovery/admission/routing/scaling
+# regression is attributed before the full sweep, then the whole sweep
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_elastic.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_admission.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_router.py --smoke
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_autoscale.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

@@ -57,6 +57,17 @@ Protocol (both consumers follow it):
 Every policy is pure arithmetic over the event sequence it is shown, so a
 replayed trace (same jobs, same churn) reproduces bit-identical decisions —
 the property tests/test_admission.py pins.
+
+Registry contract (``ADMISSION`` / :func:`get_policy` — one of the four
+policy registries documented in docs/architecture.md, alongside
+``SCHEDULERS``, ``ROUTER``, and ``AUTOSCALE``): policies are stateful
+(deferred queues, token levels, clocks), so :func:`get_policy`
+clones-and-resets instances per run — tuning carries over, runtime state
+never does — and ``None`` means "no door" (every arrival admitted with
+zero overhead). The per-class latency window this module maintains
+(:func:`trailing_class_p99`) also feeds the autoscaler's
+``deadline_aware`` policy (core/autoscale.py) — one latency definition
+for the whole chain.
 """
 
 from __future__ import annotations

@@ -1,0 +1,499 @@
+"""Replica autoscaling — one policy layer for simulator and serving fleet.
+
+PR 2–4 built the dynamic chain the paper says heterogeneous clusters need
+(elastic re-mesh → admission → routing), but the serving fleet itself was
+still a *fixed-size* resource: a burst had to be absorbed by the replicas
+provisioned at start, and an idle trough kept paying for all of them.
+D-SPACE4Cloud (arXiv:1605.07083) frames right-sizing cluster capacity
+against deadlines as *the* central cloud-design problem, and Ivanov et
+al.'s virtualized-Hadoop evaluation shows capacity must be **measured, not
+assumed** — exactly the signal our :class:`~repro.core.router.ReplicaView`
+snapshots already carry for the router. This module closes the loop: an
+:class:`Autoscaler` decides **grow / shrink / hold** for the replica pool
+from the same measured-capacity + backlog-seconds views the router
+consumes, behind an ``AUTOSCALE`` registry with the exact lifecycle
+contract of ``ADMISSION`` (core/admission.py) and ``ROUTER``
+(core/router.py).
+
+The same policy objects drive both consumers (the shared-registry rule —
+see docs/architecture.md, "no private paths"):
+
+* ``core/workload.run_fleet(..., autoscale=...)`` — the deterministic
+  fleet engine grows/shrinks its sim-replica pool (spawn = cold replica
+  with a ``warmup_s`` lag before it becomes routable; retire = drain, then
+  remove), emitting ``scale_up`` / ``replica_warm`` / ``scale_down`` /
+  ``replica_retired`` churn events so the router and re-dispatch see
+  scaling as ordinary capacity change;
+* ``launch/fleet.FleetLoop`` — the real serving fleet spawns replicas via
+  ``replica_factory`` (``add_replica``: the cold start *is* the warmup
+  lag) and drains them (``drain_replica``) off the same decisions.
+
+Policies, and the design rule each one operationalizes:
+
+``fixed``
+    The baseline every claim is measured against: the pool you provisioned
+    is the pool you run. Sized for mean load it blows the burst tail;
+    sized for peak it pays replica-seconds for idle troughs — claim 11
+    (benchmarks/bench_autoscale.py) quantifies both ends.
+``backlog_threshold``
+    Reactive scaling in measured currency (§IV.a): grow on *sustained*
+    backlog-seconds-per-live-capacity above a bound, drain-and-retire the
+    slowest replica on sustained near-idle. Sustain windows reject
+    transient blips; cooldowns prevent oscillation; min/max bound the
+    pool. All thresholds are in seconds-of-work on the live measured rate,
+    so a straggler's reported rate drop *raises* effective backlog and can
+    trigger a grow — degradation is a capacity event, not an anomaly
+    (§IV.c).
+``deadline_aware``
+    The D-SPACE4Cloud framing: hold the *strict class's* estimated sojourn
+    inside its deadline budget. The budget is learned from the class-0
+    requests themselves (min deadline seen, mirroring
+    ``slo_classes``' ``_budget_seen``) or pinned by the caller; the signal
+    is fleet backlog-seconds (the sojourn a new arrival would inherit)
+    plus the trailing per-class p99 window admission control already
+    maintains (:func:`~repro.core.admission.trailing_class_p99`). Grow
+    when the estimate leaves the budget's target band, shrink only when it
+    is comfortably inside.
+
+Protocol (both consumers follow it):
+
+* ``decide(view)`` — called on a fixed cadence with a :class:`PoolView`;
+  returns a :class:`ScaleDecision` (``GROW`` | ``SHRINK`` | ``HOLD``,
+  plus an optional shrink victim). The caller executes it: policies never
+  touch the pool.
+* ``note_request(req)`` — arrival feed, so budget-learning policies see
+  deadlines without a private path to the workload.
+* Policies are stateful (sustain clocks, cooldowns, learned budgets):
+  :func:`get_autoscaler` clones-and-resets instances per run, mirroring
+  ``get_policy`` / ``get_router``. Decisions are pure arithmetic over the
+  views shown, so replays are bit-identical (tests/test_autoscale.py
+  pins).
+"""
+
+from __future__ import annotations
+
+import copy
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Optional, Sequence, Union
+
+from repro.core.admission import JobRequest
+from repro.core.router import ReplicaView
+
+GROW = "grow"
+SHRINK = "shrink"
+HOLD = "hold"
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class PoolView:
+    """What an autoscaler may see about the replica pool at decision time.
+
+    ``replicas`` are the same :class:`~repro.core.router.ReplicaView`
+    snapshots the router consumes — measured capacity, backlog-work,
+    queue depth — for every replica that is online (routable *or*
+    draining; a draining replica carries ``alive=False``, exactly as the
+    router sees it). ``n_warming`` counts spawned replicas still inside
+    their warmup lag: they are committed capacity, so sizing decisions
+    must include them or the pool overshoots during every cold start.
+    ``class_p99`` is the trailing per-class sojourn window admission
+    control maintains (:func:`~repro.core.admission.trailing_class_p99`)
+    — the observed-latency signal ``deadline_aware`` sizes against.
+    """
+
+    time: float
+    replicas: tuple[ReplicaView, ...]
+    n_warming: int = 0
+    class_p99: Mapping[int, float] = field(default_factory=dict)
+
+    @property
+    def routable(self) -> list[ReplicaView]:
+        """Replicas a router would currently consider (alive, not draining)."""
+        return [v for v in self.replicas if v.alive]
+
+    @property
+    def pool_size(self) -> int:
+        """Committed serving capacity in replicas: routable + warming.
+        Draining/pronounced replicas are on their way out and don't count."""
+        return len(self.routable) + self.n_warming
+
+    @property
+    def live_capacity(self) -> float:
+        return sum(v.capacity for v in self.routable)
+
+    @property
+    def backlog_work(self) -> float:
+        """All outstanding work, including what draining replicas still
+        hold — it occupies the fleet either way."""
+        return sum(v.backlog_work for v in self.replicas)
+
+    @property
+    def backlog_s(self) -> float:
+        """Seconds of fleet backlog at the live measured rate — the same
+        currency admission's ``threshold`` gates on and the router's
+        ``shortest_backlog`` joins on."""
+        return self.backlog_work / max(self.live_capacity, _EPS)
+
+
+@dataclass(frozen=True)
+class ScaleDecision:
+    """One autoscaler verdict. ``replica_id`` names the shrink victim
+    (``None`` lets the caller pick its default: slowest measured, newest
+    on ties); ``reason`` is recorded in the churn trace so a scaling event
+    can be attributed when reading a replay."""
+
+    action: str  # GROW | SHRINK | HOLD
+    replica_id: Optional[int] = None
+    reason: str = ""
+
+
+class Autoscaler:
+    """Decide grow / shrink / hold for the replica pool (see module
+    docstring for the registry contract)."""
+
+    name = "base"
+
+    # -- per-run lifecycle ----------------------------------------------
+    def reset(self) -> None:
+        """Clear per-run runtime state (sustain clocks, cooldowns, learned
+        budgets); tuning stays."""
+
+    def fresh(self) -> "Autoscaler":
+        """A reset copy with the same tuning — one per run, so a leftover
+        cooldown clock from a previous run cannot suppress (or trigger)
+        scaling in the next replay (:func:`get_autoscaler` calls this for
+        instances)."""
+        clone = copy.deepcopy(self)
+        clone.reset()
+        return clone
+
+    # -- feeds ------------------------------------------------------------
+    def note_request(self, req: JobRequest) -> None:
+        """Arrival feed (deadline/budget learning); default no-op."""
+
+    # -- the decision -----------------------------------------------------
+    def decide(self, view: PoolView) -> ScaleDecision:
+        raise NotImplementedError
+
+    def veto(self, decision: ScaleDecision) -> None:
+        """The engine could not execute the immediately-preceding decision
+        (no replica factory; the victim was the last routable replica).
+        Default no-op; stateful policies roll back the cooldown/sustain
+        state they committed when returning it — otherwise a phantom
+        action suppresses real scaling for a whole cooldown window."""
+
+    def note_action_done(self, t: float) -> None:
+        """The engine finished *executing* the last decision at ``t``. In
+        the simulator that is the decision instant, but a real spawn
+        compiles synchronously (launch/fleet.add_replica) and can outlast
+        the cooldown — the clock must restart from completion, or the
+        backlog that piled up during the stall immediately re-triggers
+        another fleet-freezing spawn. Default no-op."""
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{type(self).__name__} {self.name}>"
+
+
+def default_shrink_victim(view: PoolView) -> Optional[int]:
+    """The one drain-target rule every consumer shares: the slowest
+    measured routable replica; ties go to the *newest* (highest id), so an
+    elastic pool sheds its spawned replicas before the provisioned base.
+    Policies use it to name a victim; the engines
+    (``run_fleet``/``FleetLoop``) fall back to it when a policy names
+    none (or an invalid one) — one rule, three call sites, zero drift."""
+    cands = view.routable
+    if not cands:
+        return None
+    return min(cands, key=lambda v: (v.capacity, -v.replica_id)).replica_id
+
+
+class FixedPool(Autoscaler):
+    """Baseline: the pool never changes. ``run_fleet(autoscale=None)`` and
+    ``autoscale="fixed"`` are behaviorally identical; the named form exists
+    so sweeps can treat "no scaling" as one more policy."""
+
+    name = "fixed"
+
+    def decide(self, view):
+        return ScaleDecision(HOLD, reason="fixed pool")
+
+
+class BacklogThresholdScaler(Autoscaler):
+    """Grow on sustained backlog-seconds, drain-and-retire on sustained
+    near-idle — with cooldowns and min/max pool bounds.
+
+    The signal is :attr:`PoolView.backlog_s`: seconds of outstanding work
+    per unit of *live measured* capacity, the fleet-level analogue of the
+    backlog currency admission's ``threshold`` policy gates on. Crossing
+    ``grow_backlog_s`` must persist for ``sustain_s`` before a spawn (a
+    single burst arrival is not a trend), and any action starts a
+    ``cooldown_s`` clock during which the policy holds — a spawned
+    replica's warmup lag means acting again before the last action landed
+    would size the pool on stale evidence. Shrink symmetrically requires
+    ``backlog_s`` under ``shrink_backlog_s`` for ``sustain_s``; the victim
+    is the slowest measured replica (newest on ties, so the provisioned
+    base outlives the elastic overflow).
+    """
+
+    name = "backlog_threshold"
+
+    def __init__(
+        self,
+        grow_backlog_s: float = 30.0,
+        shrink_backlog_s: float = 4.0,
+        sustain_s: float = 10.0,
+        cooldown_s: float = 30.0,
+        min_replicas: int = 1,
+        max_replicas: int = 8,
+    ) -> None:
+        self.grow_backlog_s = grow_backlog_s
+        self.shrink_backlog_s = shrink_backlog_s
+        self.sustain_s = sustain_s
+        self.cooldown_s = cooldown_s
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.reset()
+
+    def reset(self) -> None:
+        self._above_since: Optional[float] = None
+        self._below_since: Optional[float] = None
+        self._last_action_t: float = -math.inf
+        self._undo = None  # state to restore if the engine vetoes
+
+    def _cooled(self, t: float) -> bool:
+        return t - self._last_action_t >= self.cooldown_s - _EPS
+
+    def veto(self, decision):
+        if self._undo is not None:
+            (self._last_action_t, self._above_since,
+             self._below_since) = self._undo
+            self._undo = None
+
+    def note_action_done(self, t):
+        self._last_action_t = max(self._last_action_t, t)
+        self._undo = None  # the action landed: no longer vetoable
+
+    def decide(self, view):
+        t = view.time
+        self._undo = None  # a veto only applies to the decision below
+        if not view.routable or view.live_capacity <= _EPS:
+            # nothing measured (a real fleet before its first decode):
+            # backlog-seconds is undefined, so no evidence to act on
+            return ScaleDecision(HOLD, reason="no measured capacity")
+        b = view.backlog_s
+        if b > self.grow_backlog_s:
+            self._below_since = None
+            if self._above_since is None:
+                self._above_since = t
+            if (
+                t - self._above_since >= self.sustain_s - _EPS
+                and self._cooled(t)
+                and view.pool_size < self.max_replicas
+            ):
+                self._undo = (self._last_action_t, self._above_since,
+                              self._below_since)
+                self._last_action_t = t
+                self._above_since = None
+                return ScaleDecision(
+                    GROW, reason=f"backlog {b:.1f}s > {self.grow_backlog_s:.0f}s"
+                )
+        elif b < self.shrink_backlog_s:
+            self._above_since = None
+            if self._below_since is None:
+                self._below_since = t
+            if (
+                t - self._below_since >= self.sustain_s - _EPS
+                and self._cooled(t)
+                and view.pool_size > self.min_replicas
+            ):
+                victim = default_shrink_victim(view)
+                if victim is not None:
+                    self._undo = (self._last_action_t, self._above_since,
+                                  self._below_since)
+                    self._last_action_t = t
+                    self._below_since = None
+                    return ScaleDecision(
+                        SHRINK, replica_id=victim,
+                        reason=f"backlog {b:.1f}s < {self.shrink_backlog_s:.0f}s",
+                    )
+        else:
+            # inside the dead band: neither trend is building
+            self._above_since = None
+            self._below_since = None
+        return ScaleDecision(HOLD)
+
+
+class DeadlineAwareScaler(Autoscaler):
+    """Size the pool to keep the strict class's estimated sojourn inside
+    its deadline budget (the D-SPACE4Cloud deadline-driven framing).
+
+    The budget is ``budget_s`` when pinned, else the minimum class-0
+    deadline seen on the arrival feed (``note_request``), exactly how
+    ``slo_classes`` admission learns its budgets. Two signals feed the
+    verdict, both ones the serving chain already maintains:
+
+    * **forward-looking** — :attr:`PoolView.backlog_s`, the queueing delay
+      a class-0 arrival would inherit right now;
+    * **observed** — the trailing class-0 p99 from the admission window
+      (:attr:`PoolView.class_p99`), which catches sojourn blow-ups the
+      backlog estimate misses (e.g. a straggler serving slowly without a
+      deep queue).
+
+    Grow when the backlog estimate exceeds ``target_frac × budget`` — or
+    when the observed p99 has blown the budget outright *while work is
+    still queued* — sustained for ``sustain_s``. The while-loaded guard
+    matters: the p99 window only advances when completions land, so in an
+    idle trough it is stale history, not a signal; shrink therefore keys
+    purely on the forward-looking backlog sitting under
+    ``relax_frac × budget`` for ``sustain_s``. Cooldown and min/max
+    bounds as in :class:`BacklogThresholdScaler`. With no budget known
+    (no class-0 deadline ever seen and none pinned) the policy holds:
+    sizing against an unknown SLO would be a guess.
+    """
+
+    name = "deadline_aware"
+
+    def __init__(
+        self,
+        budget_s: Optional[float] = None,
+        target_frac: float = 0.4,
+        relax_frac: float = 0.1,
+        sustain_s: float = 10.0,
+        cooldown_s: float = 30.0,
+        min_replicas: int = 1,
+        max_replicas: int = 8,
+    ) -> None:
+        self.budget_s = budget_s
+        self.target_frac = target_frac
+        self.relax_frac = relax_frac
+        self.sustain_s = sustain_s
+        self.cooldown_s = cooldown_s
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.reset()
+
+    def reset(self) -> None:
+        self._learned: float = math.inf
+        self._over_since: Optional[float] = None
+        self._under_since: Optional[float] = None
+        self._last_action_t: float = -math.inf
+        self._undo = None  # state to restore if the engine vetoes
+
+    def veto(self, decision):
+        if self._undo is not None:
+            (self._last_action_t, self._over_since,
+             self._under_since) = self._undo
+            self._undo = None
+
+    def note_action_done(self, t):
+        self._last_action_t = max(self._last_action_t, t)
+        self._undo = None  # the action landed: no longer vetoable
+
+    def note_request(self, req: JobRequest) -> None:
+        if req.slo_class == 0:
+            self._learned = min(self._learned, req.deadline_s)
+
+    def _budget(self) -> float:
+        return self.budget_s if self.budget_s is not None else self._learned
+
+    def decide(self, view):
+        t = view.time
+        self._undo = None  # a veto only applies to the decision below
+        budget = self._budget()
+        if not math.isfinite(budget):
+            return ScaleDecision(HOLD, reason="no class-0 budget known")
+        if not view.routable or view.live_capacity <= _EPS:
+            return ScaleDecision(HOLD, reason="no measured capacity")
+        p99 = view.class_p99.get(0, 0.0)
+        p99_over = (
+            not math.isnan(p99)
+            and p99 > budget
+            and view.backlog_work > _EPS  # stale-window guard: loaded only
+        )
+        est = view.backlog_s
+        cooled = t - self._last_action_t >= self.cooldown_s - _EPS
+        if est > self.target_frac * budget or p99_over:
+            self._under_since = None
+            if self._over_since is None:
+                self._over_since = t
+            if (
+                t - self._over_since >= self.sustain_s - _EPS
+                and cooled
+                and view.pool_size < self.max_replicas
+            ):
+                self._undo = (self._last_action_t, self._over_since,
+                              self._under_since)
+                self._last_action_t = t
+                self._over_since = None
+                # attribute the grow to the signal that actually tripped
+                # it — a replay auditor reads this out of the churn trace
+                if est > self.target_frac * budget:
+                    reason = (
+                        f"est class-0 sojourn {est:.1f}s > "
+                        f"{self.target_frac:.0%} of {budget:.0f}s budget"
+                    )
+                else:
+                    reason = (
+                        f"class-0 trailing p99 {p99:.1f}s > {budget:.0f}s "
+                        "budget with work queued"
+                    )
+                return ScaleDecision(GROW, reason=reason)
+        elif view.backlog_s < self.relax_frac * budget:
+            self._over_since = None
+            if self._under_since is None:
+                self._under_since = t
+            if (
+                t - self._under_since >= self.sustain_s - _EPS
+                and cooled
+                and view.pool_size > self.min_replicas
+            ):
+                victim = default_shrink_victim(view)
+                if victim is not None:
+                    self._undo = (self._last_action_t, self._over_since,
+                                  self._under_since)
+                    self._last_action_t = t
+                    self._under_since = None
+                    return ScaleDecision(
+                        SHRINK, replica_id=victim,
+                        reason=(
+                            f"backlog {view.backlog_s:.1f}s < "
+                            f"{self.relax_frac:.0%} of {budget:.0f}s budget"
+                        ),
+                    )
+        else:
+            self._over_since = None
+            self._under_since = None
+        return ScaleDecision(HOLD)
+
+
+AUTOSCALE: dict[str, Callable[[], Autoscaler]] = {
+    "fixed": FixedPool,
+    "backlog_threshold": BacklogThresholdScaler,
+    "deadline_aware": DeadlineAwareScaler,
+}
+
+
+def get_autoscaler(
+    spec: Union[str, Autoscaler, None],
+) -> Optional[Autoscaler]:
+    """Resolve a policy name / instance / None to a **fresh** autoscaler.
+
+    ``None`` means a fixed fleet with zero scaling overhead (no decision
+    cadence at all) — the pre-PR-5 behavior, bit-identical. Instances are
+    cloned-and-reset (:meth:`Autoscaler.fresh`): tuning carries over,
+    runtime state (sustain clocks, cooldowns, learned budgets) never does.
+    Both ``run_fleet`` and ``launch/fleet.FleetLoop`` construct through
+    here — the same no-private-path rule as ``get_policy``/``get_router``.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, Autoscaler):
+        return spec.fresh()
+    try:
+        return AUTOSCALE[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown autoscaler {spec!r}; known: {sorted(AUTOSCALE)}"
+        ) from None

@@ -38,9 +38,14 @@ Policies, and the paper §IV guideline each one operationalizes:
     — queue depth divided by measured rate, not slot count, so a short
     queue on a slow replica is correctly seen as a long wait.
 
-Routers are stateful (round-robin cursors, weighting credit): every run
-must start from a fresh one — :func:`get_router` clones-and-resets
-instances, mirroring ``core.admission.get_policy``. All decisions are pure
+Registry contract (``ROUTER`` / :func:`get_router` — one of the four
+policy registries documented in docs/architecture.md, alongside
+``ADMISSION``, ``SCHEDULERS``, and ``AUTOSCALE``): routers are stateful
+(round-robin cursors, weighting credit), so every run must start from a
+fresh one — :func:`get_router` clones-and-resets instances, mirroring
+``core.admission.get_policy``. A router sees only :class:`ReplicaView`
+snapshots and returns a replica id (or ``None`` when nothing is
+routable); it never touches engine state. All decisions are pure
 arithmetic over the views they are shown, so a replayed trace reproduces
 bit-identical routing (the property tests/test_router.py pins).
 """

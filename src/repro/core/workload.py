@@ -35,6 +35,20 @@ PR 4 adds the serving-side mirror of all of the above, one layer up:
                   registry, core/router.py) with LATE-style re-dispatch
   FLEET_PRESETS — canonical fleets ("fleet_straggler" is the claim-10
                   regime: the fastest replica degrades 10x mid-run)
+
+PR 5 makes the fleet itself elastic: ``run_fleet(autoscale=...)`` attaches
+an ``AUTOSCALE`` policy (core/autoscale.py: fixed | backlog_threshold |
+deadline_aware) that grows/shrinks the replica pool from the same
+measured-capacity + backlog-seconds views the router consumes. Spawn is a
+cold replica with a ``warmup_s`` lag before it becomes routable; retire is
+drain-then-remove; both surface in the churn trace (``scale_up`` /
+``replica_warm`` / ``scale_down`` / ``replica_retired``) so routing,
+re-dispatch, and admission see scaling as ordinary capacity change.
+``fleet_bursty`` (tight bursts, long idle gaps) is the claim-11 regime
+(benchmarks/bench_autoscale.py); ``fleet_diurnal`` is the slow sinusoid.
+``FleetResult.replica_seconds`` is the cost currency autoscaling is judged
+in. The registry contract for all four policy layers is documented in
+docs/architecture.md.
 """
 
 from __future__ import annotations
@@ -54,6 +68,14 @@ from repro.core.admission import (
     get_policy,
     quantile as _quantile,
     trailing_class_p99,
+)
+from repro.core.autoscale import (
+    GROW,
+    SHRINK,
+    Autoscaler,
+    PoolView,
+    default_shrink_victim,
+    get_autoscaler,
 )
 from repro.core.placement import Grain, plan_placement
 from repro.core.router import (
@@ -383,9 +405,18 @@ class FleetSpec:
 
     replica_rates: tuple[float, ...] = (1.0, 0.7, 0.4)
     n_requests: int = 48
-    arrival: str = "poisson"  # burst | uniform | poisson
+    arrival: str = "poisson"  # burst | uniform | poisson | bursty | diurnal
     mean_interarrival_s: float = 7.0
     work_per_request: tuple[float, float] = (4.0, 16.0)  # token budgets
+    # "bursty" arrivals: tight clumps of `burst_len` requests (intra-burst
+    # spacing = mean_interarrival_s) separated by `burst_gap_s` of silence
+    # — the autoscaling regime (claim 11)
+    burst_len: int = 16
+    burst_gap_s: float = 240.0
+    # "diurnal" arrivals: poisson whose rate swings sinusoidally, peak:trough
+    # = (1+amp):(1-amp) around 1/mean_interarrival_s over one period
+    period_s: float = 600.0
+    diurnal_amp: float = 0.8
     # per-request (weight, slo_class, deadline_s) draws; None = no SLOs
     slo_mix: Optional[tuple[tuple[float, int, float], ...]] = None
     # deterministic fault injection:
@@ -397,6 +428,11 @@ class FleetSpec:
     late_factor: float = 2.0  # stuck = age > late_factor × est service time
     probe_s: float = 5.0  # re-dispatch monitor cadence
     dead_after_s: float = 30.0  # silence → pronounced dead (routing stops)
+    # autoscaling pool knobs (PR 5): consumed only when run_fleet is given
+    # an AUTOSCALE policy
+    spawn_rate: float = 1.0  # capacity of a newly spawned replica
+    warmup_s: float = 15.0  # cold-start lag: spawn decision → routable
+    scale_check_s: float = 5.0  # autoscaler decision cadence
     description: str = ""
 
     @property
@@ -410,14 +446,41 @@ def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
     bit-identical stream (the fleet-level mirror of
     :func:`generate_workload`)."""
     rng = random.Random(seed)
-    arrivals = _arrival_times(
-        WorkloadSpec(
-            n_jobs=spec.n_requests,
-            arrival=spec.arrival,
-            mean_interarrival_s=spec.mean_interarrival_s,
-        ),
-        rng,
-    )
+    if spec.arrival == "bursty":
+        # clumps of burst_len requests, burst_gap_s apart: each burst
+        # arrives with tight exponential spacing from its epoch — the
+        # overload/idle alternation autoscaling exists for (claim 11)
+        arrivals = []
+        t = 0.0
+        for rid in range(spec.n_requests):
+            b, k = divmod(rid, max(spec.burst_len, 1))
+            if k == 0:
+                t = b * spec.burst_gap_s
+            else:
+                t += rng.expovariate(1.0 / spec.mean_interarrival_s)
+            arrivals.append(t)
+    elif spec.arrival == "diurnal":
+        # inhomogeneous poisson: the instantaneous arrival rate swings
+        # sinusoidally around 1/mean over one period (peak:trough
+        # = (1+amp):(1-amp)) — the slow load cycle a shrink policy must
+        # track without flapping
+        arrivals, t = [], 0.0
+        for _ in range(spec.n_requests):
+            arrivals.append(t)
+            swing = 1.0 + spec.diurnal_amp * math.sin(
+                2.0 * math.pi * t / spec.period_s
+            )
+            mean = spec.mean_interarrival_s / max(swing, 1e-6)
+            t += rng.expovariate(1.0 / mean)
+    else:
+        arrivals = _arrival_times(
+            WorkloadSpec(
+                n_jobs=spec.n_requests,
+                arrival=spec.arrival,
+                mean_interarrival_s=spec.mean_interarrival_s,
+            ),
+            rng,
+        )
     slo_weights = (
         [w for w, _, _ in spec.slo_mix] if spec.slo_mix is not None else None
     )
@@ -499,6 +562,13 @@ class FleetResult:
     stranded: int  # admitted but never completed (degraded replica held them)
     wasted_work: float  # progress discarded by cancellations/restarts
     served_by: dict[int, int]  # replica → completions
+    # autoscaling outcome (PR 5); with autoscale=None the pool is static,
+    # so spawned/retired are 0 and replica_seconds = n_replicas × makespan
+    autoscaler: str = "none"
+    n_spawned: int = 0  # replicas added by scale_up decisions
+    n_retired: int = 0  # replicas drained and removed by scale_down
+    pool_peak: int = 0  # max simultaneously-online replicas
+    replica_seconds: float = 0.0  # Σ per-replica online time (cost currency)
 
     def latencies(self, slo_class: Optional[int] = None) -> list[float]:
         return sorted(
@@ -559,18 +629,55 @@ FLEET_PRESETS: dict[str, FleetSpec] = {
         slo_mix=((0.3, 0, 120.0), (0.7, 1, 600.0)),
         description="straggler flap + replica death/re-registration + SLO mix",
     ),
+    # The claim-11 regime (benchmarks/bench_autoscale.py): four tight
+    # 16-request bursts separated by four minutes of silence. A pool sized
+    # for the mean (2×1.0) blows the burst tail; a pool sized for the peak
+    # idles between bursts, paying replica-seconds for nothing.
+    # backlog_threshold autoscaling grows into each burst (15 s cold-start
+    # lag) and drains back down in the gaps.
+    "fleet_bursty": FleetSpec(
+        replica_rates=(1.0, 1.0), n_requests=64,
+        arrival="bursty", mean_interarrival_s=1.0,
+        burst_len=16, burst_gap_s=240.0,
+        work_per_request=(4.0, 16.0),
+        slo_mix=((1.0, 0, 120.0),),
+        spawn_rate=1.0, warmup_s=15.0, scale_check_s=5.0,
+        description="4 tight bursts, 240s idle gaps: the autoscaling regime",
+    ),
+    # The slow cycle: a sinusoidal arrival rate (peak ~9x trough) over a
+    # 10-minute period. The shrink side of the policy does the work here —
+    # tracking the trough without flapping, then re-growing into the crest.
+    "fleet_diurnal": FleetSpec(
+        replica_rates=(1.0, 1.0), n_requests=96,
+        arrival="diurnal", mean_interarrival_s=6.0,
+        period_s=600.0, diurnal_amp=0.8,
+        work_per_request=(4.0, 16.0),
+        slo_mix=((1.0, 0, 150.0),),
+        spawn_rate=1.0, warmup_s=15.0, scale_check_s=5.0,
+        description="sinusoidal offered load over a 10-minute period",
+    ),
 }
 
 
 class _ReplicaState:
-    """Mutable per-replica engine state for :func:`run_fleet`."""
+    """Mutable per-replica engine state for :func:`run_fleet`.
+
+    The pool-lifecycle flags (PR 5) track the autoscaling state machine:
+    a spawned replica is ``online=False`` until its warmup lag elapses
+    (``replica_warm``), a ``scale_down`` sets ``draining`` (routing stops:
+    its view reports ``alive=False``, but it keeps serving its queue), and
+    an empty drained replica retires (``retired``; it leaves the views and
+    stops accruing replica-seconds).
+    """
 
     __slots__ = (
         "worker", "queue", "serving", "done_work", "seg_start", "cur_rate",
         "version", "observed", "pronounced",
+        "online", "draining", "retired", "online_t", "offline_t",
     )
 
-    def __init__(self, worker: SimWorker):
+    def __init__(self, worker: SimWorker, online: bool = True,
+                 online_t: float = 0.0):
         self.worker = worker
         self.queue: list[int] = []  # rids waiting, FIFO
         self.serving: Optional[int] = None
@@ -580,6 +687,11 @@ class _ReplicaState:
         self.version = 0  # invalidates stale svc_done events
         self.observed = worker.rate  # last *reported* rate (the view signal)
         self.pronounced = False
+        self.online = online  # in the pool and past warmup
+        self.draining = False  # scale_down received: no new routes
+        self.retired = False  # drained dry and removed
+        self.online_t = online_t  # when billing started (spawn decision)
+        self.offline_t = math.inf  # when it retired (billing stops)
 
 
 class _ReqState:
@@ -609,6 +721,7 @@ def run_fleet(
     admission: Union[str, AdmissionPolicy, None] = None,
     redispatch: bool = True,
     late_factor: Optional[float] = None,
+    autoscale: Union[str, Autoscaler, None] = None,
 ) -> FleetResult:
     """Replay a request stream through N heterogeneous sim-replicas.
 
@@ -635,9 +748,25 @@ def run_fleet(
     its requests forever (the motivating failure mode; they are reported
     as ``stranded``).
 
+    With ``autoscale`` set (a name or instance from the ``AUTOSCALE``
+    registry, core/autoscale.py) the replica pool itself becomes elastic:
+    every ``scale_check_s`` the policy sees a
+    :class:`~repro.core.autoscale.PoolView` built from the same replica
+    views the router reads and may grow (spawn a ``spawn_rate`` replica
+    that becomes routable after ``warmup_s`` — the cold-start lag) or
+    shrink (the victim drains: routing stops immediately, it finishes its
+    queue, then retires). Scaling surfaces in the churn trace
+    (``scale_up`` / ``replica_warm`` / ``scale_down`` /
+    ``replica_retired``) and feeds the same capacity signal admission
+    re-rates on, so the rest of the chain sees it as ordinary churn.
+    ``FleetResult.replica_seconds`` bills each replica from its spawn
+    decision (warmup included — cold starts are not free) to its
+    retirement or the end of the run.
+
     Everything is pure arithmetic over a seeded stream, so the full
     :class:`FleetResult` — routing decisions, re-dispatches, completions,
-    the trace — is bit-identical across replays of the same arguments.
+    the trace — is bit-identical across replays of the same arguments,
+    autoscaling included.
     """
     spec = (
         FLEET_PRESETS[spec_or_name]
@@ -648,6 +777,7 @@ def run_fleet(
     reqs = generate_fleet_requests(spec, seed=seed)
     rtr = get_router(router)
     adm = get_policy(admission)
+    asc = get_autoscaler(autoscale)
 
     workers = [
         SimWorker(Location(0, i), r) for i, r in enumerate(spec.replica_rates)
@@ -669,7 +799,6 @@ def run_fleet(
     parked: list[int] = []  # admitted but unroutable (no live replica)
     deferred_ids: set[int] = set()
     class_hist: dict[int, list[float]] = {}
-    total_nameplate = sum(w.rate for w in workers)
     completed = [0]
     n_rejected = [0]
     n_deferred = [0]
@@ -677,6 +806,15 @@ def run_fleet(
     wasted = [0.0]
     makespan = [0.0]
     served_by = {i: 0 for i in range(len(workers))}
+    n_spawned = [0]
+    n_retired = [0]
+    pool_peak = [len(workers)]
+    last_arrival_t = max((r.arrive_t for r in reqs), default=0.0)
+
+    def total_nameplate() -> float:
+        return sum(
+            st.worker.rate for st in repl if st.online and not st.retired
+        )
 
     heap: list[tuple[float, int, str, object]] = []
     seq = [0]
@@ -711,13 +849,20 @@ def run_fleet(
         push(t + remaining / max(st.cur_rate, 1e-9), "svc_done", (i, st.version))
 
     # ---- views ---------------------------------------------------------
+    def backlog_work_of(i: int, t: float) -> float:
+        st = repl[i]
+        backlog = sum(rs[r].req.total_work for r in st.queue)
+        if st.serving is not None:
+            backlog += rs[st.serving].req.total_work - done_est(i, t)
+        return backlog
+
     def replica_views(t: float) -> list[ReplicaView]:
         out = []
         for i, st in enumerate(repl):
+            if not st.online or st.retired:
+                continue  # warming or retired: not part of the fleet yet
             rids = outstanding_on(i)
-            backlog = sum(rs[r].req.total_work for r in st.queue)
-            if st.serving is not None:
-                backlog += rs[st.serving].req.total_work - done_est(i, t)
+            backlog = backlog_work_of(i, t)
             oldest = (
                 max(t - min(rs[r].dispatch_t for r in rids), 0.0)
                 if rids
@@ -731,7 +876,10 @@ def run_fleet(
                     backlog_work=backlog,
                     queue_depth=len(rids),
                     oldest_age_s=oldest,
-                    alive=not st.pronounced,
+                    # draining reads as not-alive: the router stops picking
+                    # it (and re-dispatch may rescue off it) while it
+                    # finishes its own queue
+                    alive=not st.pronounced and not st.draining,
                 )
             )
         return out
@@ -747,7 +895,7 @@ def run_fleet(
         return ClusterView(
             time=t,
             live_capacity=live_cap,
-            total_capacity=total_nameplate,
+            total_capacity=total_nameplate(),
             free_slots=sum(1 for v in views if v.alive and v.idle),
             queue_depth=len(outstanding),
             backlog_work=backlog,
@@ -791,7 +939,11 @@ def run_fleet(
         dispatch(rid, choice, t)
 
     def retry_parked(t: float) -> None:
-        if parked and any(not st.pronounced for st in repl):
+        if parked and any(
+            st.online and not st.retired and not st.pronounced
+            and not st.draining
+            for st in repl
+        ):
             waiting, parked[:] = parked[:], []
             for rid in waiting:
                 route(rid, t)
@@ -851,6 +1003,8 @@ def run_fleet(
             st.queue.remove(rid)
         last = r.dispatches[-1]
         r.dispatches[-1] = replace(last, end_t=t, outcome="cancelled")
+        if st.draining:  # a rescue can drain a degraded replica dry
+            maybe_retire(i, t)
 
     def probe(t: float) -> None:
         next_probe[0] = math.inf
@@ -892,6 +1046,160 @@ def run_fleet(
         if ((redispatch and outstanding) or parked) and can_progress:
             arm_probe(t)
 
+    # ---- pool lifecycle (PR 5 autoscaling) ------------------------------
+    def pool_view(t: float) -> PoolView:
+        return PoolView(
+            time=t,
+            replicas=tuple(replica_views(t)),
+            n_warming=sum(
+                1 for st in repl if not st.online and not st.retired
+            ),
+            class_p99=trailing_class_p99(class_hist),
+        )
+
+    def maybe_retire(i: int, t: float) -> None:
+        st = repl[i]
+        if st.draining and not st.retired and not outstanding_on(i):
+            st.retired = True
+            st.online = False
+            st.offline_t = t
+            n_retired[0] += 1
+            trace.append(ChurnEvent(t, "replica_retired", {"replica": i}))
+            signal_capacity(t)
+
+    def spawn(t: float, reason: str) -> None:
+        i = len(repl)
+        w = SimWorker(Location(0, i), spec.spawn_rate)
+        workers.append(w)
+        # billed from the decision (online_t=t): the warmup lag is paid
+        # capacity, which is exactly why scaling policies need cooldowns
+        st = _ReplicaState(w, online=False, online_t=t)
+        repl.append(st)
+        served_by[i] = 0
+        n_spawned[0] += 1
+        warm_at = t + spec.warmup_s
+        trace.append(
+            ChurnEvent(t, "scale_up", {
+                "replica": i, "warm_at": warm_at, "reason": reason,
+            })
+        )
+        push(warm_at, "replica_warm", i)
+
+    def rebalance_to(i: int, t: float) -> None:
+        """Pull *queued* (unstarted) requests from the deepest
+        backlog-seconds queues onto a freshly-warm replica.
+
+        Dispatch happens at admission, so by the time a spawned replica
+        warms, a burst's requests are already sitting in the old replicas'
+        queues — and LATE re-dispatch will not touch them (their replicas
+        are busy, not degraded). Moving a queued request costs nothing (no
+        progress exists to discard; the old attempt is recorded cancelled
+        at zero work), and each move happens only while it strictly
+        shortens that request's wait — so new capacity is absorbed by the
+        backlog that motivated the spawn, not just by future arrivals.
+        """
+        me = repl[i]
+        while True:
+            donor, donor_bs = None, 0.0
+            for j, stj in enumerate(repl):
+                if j == i or not stj.online or stj.retired or not stj.queue:
+                    continue
+                bs = backlog_work_of(j, t) / max(stj.observed, 1e-9)
+                if bs > donor_bs:
+                    donor, donor_bs = j, bs
+            if donor is None:
+                break
+            rid = repl[donor].queue[-1]  # last in FIFO: longest current wait
+            w = rs[rid].req.total_work
+            my_rate = max(me.observed, 1e-9)
+            finish_here = (backlog_work_of(i, t) + w) / my_rate
+            if finish_here >= donor_bs:
+                break  # the move no longer helps anyone: queues are even
+            repl[donor].queue.remove(rid)
+            r = rs[rid]
+            r.dispatches[-1] = replace(
+                r.dispatches[-1], end_t=t, outcome="cancelled"
+            )
+            trace.append(
+                ChurnEvent(t, "rebalance", {
+                    "request": rid, "from": donor, "to": i,
+                })
+            )
+            dispatch(rid, i, t)
+            if repl[donor].draining:
+                maybe_retire(donor, t)
+
+    def drain(i: int, t: float, reason: str) -> None:
+        repl[i].draining = True
+        trace.append(
+            ChurnEvent(t, "scale_down", {"replica": i, "reason": reason})
+        )
+        signal_capacity(t)  # its capacity left the routable fleet
+        maybe_retire(i, t)  # an idle victim retires on the spot
+
+    def shrink_target(t: float, want: Optional[int]) -> Optional[int]:
+        """Validate the policy's victim, else fall back to the shared
+        :func:`~repro.core.autoscale.default_shrink_victim` rule (slowest
+        observed, newest on ties). Never drains the last routable replica
+        — whatever the policy asked, an admitted request must always have
+        somewhere to land, or the whole stream parks forever."""
+        views = replica_views(t)
+        routable = [v.replica_id for v in views if v.alive]
+        if len(routable) <= 1:
+            return None
+        if want in routable:
+            return want
+        return default_shrink_victim(PoolView(time=t, replicas=tuple(views)))
+
+    next_scale = [math.inf]
+
+    def arm_scale(t: float) -> None:
+        # dedupe like arm_probe: a recover must not start a second chain
+        # next to a live one (that would silently double the cadence).
+        # Strictly `<`: a check still pending at this same instant counts
+        # as armed — the recover fires before it in same-t event order
+        if next_scale[0] < t or math.isinf(next_scale[0]):
+            next_scale[0] = t + spec.scale_check_s
+            push(next_scale[0], "scale_check", None)
+
+    def scale_tick(t: float) -> None:
+        next_scale[0] = math.inf
+        d = asc.decide(pool_view(t))
+        if d.action == GROW:
+            spawn(t, d.reason)
+            asc.note_action_done(t)  # instantaneous in sim-time
+        elif d.action == SHRINK:
+            victim = shrink_target(t, d.replica_id)
+            if victim is not None:
+                drain(victim, t, d.reason)
+                asc.note_action_done(t)
+            else:
+                asc.veto(d)  # roll back the cooldown: nothing happened
+        # re-arm while a decision could still matter: arrivals ahead, live
+        # work outstanding, or waiting requests (parked / behind the door)
+        # that some replica could still serve. The last clause needs the
+        # probe's can-progress guard: with every replica dead for good the
+        # policies can never act (no measured capacity → HOLD), so parked
+        # work must not keep the scale-check chain — and the run — alive.
+        live_work = any(
+            st.online and not st.retired and st.worker.alive(t)
+            and outstanding_on(i)
+            for i, st in enumerate(repl)
+        )
+        can_progress = any(
+            not st.retired and (
+                st.worker.alive(t)
+                or (
+                    st.worker.recover_at is not None
+                    and st.worker.recover_at > t
+                )
+            )
+            for st in repl
+        )
+        waiting = parked or (adm is not None and adm.n_deferred > 0)
+        if t < last_arrival_t or live_work or (waiting and can_progress):
+            arm_scale(t)
+
     # ---- event timers ---------------------------------------------------
     for r in reqs:
         push(r.arrive_t, "arrival", r.job_id)
@@ -907,6 +1215,9 @@ def run_fleet(
                 push(pronounce_t, "pronounce", i)
             if w.recover_at is not None:
                 push(max(w.recover_at, w.fail_at), "recover", i)
+    if asc is not None:
+        next_scale[0] = 0.0
+        push(0.0, "scale_check", None)
 
     # ---- the event loop -------------------------------------------------
     while heap and completed[0] + n_rejected[0] < len(reqs):
@@ -914,6 +1225,8 @@ def run_fleet(
         if kind == "arrival":
             rid = payload
             trace.append(ChurnEvent(t, "request_arrival", {"request": rid}))
+            if asc is not None:
+                asc.note_request(rs[rid].req)  # deadline/budget learning
             if adm is None:
                 admit(rid, t)
             else:
@@ -957,6 +1270,7 @@ def run_fleet(
             if adm is not None:
                 adm.on_job_done(t, r.req, sojourn)
             start_service(i, t)
+            maybe_retire(i, t)  # a draining replica retires once drained dry
         elif kind == "rate_change":
             i = payload
             st = repl[i]
@@ -1026,6 +1340,28 @@ def run_fleet(
             start_service(i, t)
             signal_capacity(t)
             retry_parked(t)
+            if asc is not None:
+                # a re-registration may revive a run whose scale-check
+                # chain ended while the pool was dead: resume the cadence
+                # (deduped — a live chain is left alone)
+                arm_scale(t)
+        elif kind == "replica_warm":
+            i = payload
+            st = repl[i]
+            if not st.retired:  # warmup landed: the replica joins the fleet
+                st.online = True
+                st.observed = st.worker.rate
+                trace.append(ChurnEvent(t, "replica_warm", {"replica": i}))
+                pool_peak[0] = max(
+                    pool_peak[0],
+                    sum(1 for s in repl if s.online and not s.retired),
+                )
+                signal_capacity(t)
+                retry_parked(t)
+                rebalance_to(i, t)
+        elif kind == "scale_check":
+            if asc is not None:
+                scale_tick(t)
         elif kind == "probe":
             probe(t)
         elif kind == "admission_check":
@@ -1056,6 +1392,14 @@ def run_fleet(
                 dispatches=tuple(dispatches),
             )
         )
+    # replica-seconds: each replica is billed from its spawn decision
+    # (warmup included) until it retires or the last completion lands —
+    # the cost side of the claim-11 trade (a peak-sized fixed pool pays
+    # this for every idle trough)
+    end_t = makespan[0]
+    replica_seconds = sum(
+        max(0.0, min(st.offline_t, end_t) - st.online_t) for st in repl
+    )
     return FleetResult(
         router=rtr.name,
         admission=adm.name if adm is not None else "none",
@@ -1071,4 +1415,9 @@ def run_fleet(
         stranded=stranded,
         wasted_work=wasted[0],
         served_by=served_by,
+        autoscaler=asc.name if asc is not None else "none",
+        n_spawned=n_spawned[0],
+        n_retired=n_retired[0],
+        pool_peak=pool_peak[0],
+        replica_seconds=replica_seconds,
     )

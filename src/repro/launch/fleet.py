@@ -24,10 +24,20 @@ degraded replica is cancelled there (:meth:`ServeLoop.cancel`, generated
 tokens discarded) and re-enqueued on the fastest idle replica; both
 attempts are counted in the stats.
 
+The pool is elastic (PR 5): an ``AUTOSCALE`` policy (core/autoscale.py —
+the same registry the simulator's ``run_fleet`` resolves, see
+docs/architecture.md) is consulted on a ``scale_check_s`` cadence with a
+:class:`~repro.core.autoscale.PoolView` built from the router's own
+replica views. Grow calls :meth:`FleetLoop.add_replica` — the
+``replica_factory`` builds a cold replica and its compile/warmup happens
+right there, which *is* the warmup lag the simulator models; shrink calls
+:meth:`FleetLoop.drain_replica` — the victim leaves the routable views
+immediately (``alive=False``), finishes its queue, and retires once idle.
+
 The replica interface is duck-typed (``start/tick/enqueue/cancel/
 tok_rate/peak_rate/backlog_tokens/outstanding_rids/idle/stats``), so the
-fast tier drives :class:`FleetLoop` with stub replicas — every routing and
-re-dispatch behavior is testable without a JAX compile.
+fast tier drives :class:`FleetLoop` with stub replicas — every routing,
+re-dispatch, and autoscaling behavior is testable without a JAX compile.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.fleet --arch qwen3-1.7b-smoke \
@@ -47,6 +57,14 @@ from repro.core.admission import (
     ClusterView,
     get_policy,
     trailing_class_p99,
+)
+from repro.core.autoscale import (
+    GROW,
+    SHRINK,
+    Autoscaler,
+    PoolView,
+    default_shrink_victim,
+    get_autoscaler,
 )
 from repro.core.router import (
     InflightView,
@@ -71,6 +89,9 @@ class FleetLoop:
         late_factor: float = 3.0,
         probe_s: float = 0.25,
         headroom: float = 0.85,
+        autoscale: Union[str, Autoscaler, None] = None,
+        replica_factory=None,  # () -> ServeLoop-compatible, for grow
+        scale_check_s: float = 0.5,
     ):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
@@ -81,12 +102,65 @@ class FleetLoop:
         self.late_factor = late_factor
         self.probe_s = probe_s
         self.headroom = headroom
+        self.autoscale = autoscale
+        self.replica_factory = replica_factory
+        self.scale_check_s = scale_check_s
+        self._draining: set[int] = set()
+        self._retired: set[int] = set()
+        self._running = False
+        self._prompt_len = 0
+        self._t0 = 0.0
+
+    # -- pool lifecycle (PR 5 autoscaling) --------------------------------
+
+    def add_replica(self):
+        """Spawn a replica via ``replica_factory`` and register it.
+
+        Called mid-run by the autoscaler's GROW decision (or by the owner
+        before a run). The cold start — compile + warmup — happens here,
+        synchronously: on the hardware path that *is* the warmup lag the
+        simulator's ``warmup_s`` models — and while it runs, no replica
+        ticks, so every in-flight request pauses with it (the single-host
+        cooperative-interleaving trade; a multi-host deployment would
+        spawn out-of-band). The run loop compensates: the policy's
+        cooldown restarts from *completion* (``note_action_done``) and the
+        next scale check is a full cadence after the stall, so a compile
+        longer than ``cooldown_s`` cannot cascade into repeated
+        fleet-freezing spawns. Returns the new replica index.
+        """
+        if self.replica_factory is None:
+            raise ValueError("add_replica needs a replica_factory")
+        rep = self.replica_factory()
+        i = len(self.replicas)
+        self.replicas.append(rep)
+        if self._running:
+            if self._prompt_len and hasattr(rep, "warm"):
+                rep.warm(self._prompt_len)
+            rep.start([], prompt_len=self._prompt_len, t0=self._t0)
+        return i
+
+    def drain_replica(self, i: int) -> bool:
+        """Stop routing to replica ``i``; it finishes its queue, then
+        retires (SHRINK decision). Returns False for an index that cannot
+        drain (already draining/retired, or out of range)."""
+        if not (0 <= i < len(self.replicas)):
+            return False
+        if i in self._draining or i in self._retired:
+            return False
+        self._draining.add(i)
+        return True
+
+    def _live_indices(self) -> list[int]:
+        return [
+            i for i in range(len(self.replicas)) if i not in self._retired
+        ]
 
     # -- views ------------------------------------------------------------
 
     def _views(self, t: float) -> list[ReplicaView]:
         out = []
-        for i, rep in enumerate(self.replicas):
+        for i in self._live_indices():
+            rep = self.replicas[i]
             rids = rep.outstanding_rids()
             # peak EMA stands in for nameplate, derated by `headroom` so
             # ordinary measurement noise never reads as degradation — only
@@ -108,7 +182,9 @@ class FleetLoop:
                     backlog_work=rep.backlog_tokens(),
                     queue_depth=len(rids),
                     oldest_age_s=oldest,
-                    alive=True,  # in-process replicas do not silently die
+                    # in-process replicas do not silently die; not-alive
+                    # here means *draining* (scale-down in progress)
+                    alive=i not in self._draining,
                 )
             )
         return out
@@ -134,13 +210,19 @@ class FleetLoop:
     def run_requests(self, requests: list[Request]) -> dict:
         rtr = get_router(self.router)  # fresh cursors/credit per run
         policy = get_policy(self.admission)
+        asc = get_autoscaler(self.autoscale)  # fresh clocks/budgets per run
         by_id = {r.rid: r for r in requests}
         self._dispatch_t: dict[int, float] = {}
         self._est_s: dict[int, float] = {}
         self._where: dict[int, int] = {}
         self._done_hist: dict[int, list[float]] = {}
+        self._draining = set()
+        self._retired = set()
         n_moves = 0
         cancelled_tokens = 0
+        n_spawned = 0
+        n_drained = 0
+        n_rebalanced = 0
         rejected: list[Request] = []
         routed_of: dict[int, int] = {}  # first-dispatch counts per replica
 
@@ -156,6 +238,10 @@ class FleetLoop:
         t0 = time.perf_counter()
         for rep in self.replicas:
             rep.start([], prompt_len=prompt_len, t0=t0)
+        # mid-run spawns (add_replica) warm + start against the same origin
+        self._running = True
+        self._prompt_len = prompt_len
+        self._t0 = t0
 
         def now() -> float:
             return time.perf_counter() - t0
@@ -180,8 +266,17 @@ class FleetLoop:
             rep.enqueue(r)
 
         def route(r: Request, t: float) -> None:
+            if asc is not None:
+                asc.note_request(ServeLoop.as_job_request(r))
             choice = rtr.pick(ServeLoop.as_job_request(r), self._views(t))
-            choice = 0 if choice is None else choice  # all-dead cannot occur
+            if choice is None:
+                # every replica draining (all-dead cannot occur in-process):
+                # fall back to the least-backlogged live one — it still
+                # serves its queue while it drains
+                choice = min(
+                    self._live_indices(),
+                    key=lambda i: self.replicas[i].backlog_tokens(),
+                )
             routed_of[choice] = routed_of.get(choice, 0) + 1
             dispatch(r, choice, t)
 
@@ -232,7 +327,8 @@ class FleetLoop:
                 max(rep.peak_rate for rep in self.replicas) * self.headroom,
             )
             inflight = []
-            for i, rep in enumerate(self.replicas):
+            for i in self._live_indices():
+                rep = self.replicas[i]
                 for rid in rep.outstanding_rids():
                     if rid not in self._dispatch_t:
                         continue
@@ -270,15 +366,108 @@ class FleetLoop:
                 n_moves += 1
                 dispatch(r, dst, t)
 
+        def rebalance_to(dst: int, t: float) -> None:
+            """Pull queued (not-yet-decoding) requests from the deepest
+            backlog-seconds queues onto a freshly spawned replica — the
+            serving-path mirror of run_fleet's warm-time rebalance.
+            Dispatch happens at admission, so without this a replica
+            spawned mid-burst would only ever see *future* arrivals.
+            Moving a ready request costs nothing (no tokens generated);
+            replicas that don't expose ``queued_rids`` are skipped."""
+            nonlocal n_rebalanced
+            me = self.replicas[dst]
+            est_rate = me.tok_rate or max(
+                (self.replicas[j].tok_rate for j in self._live_indices()),
+                default=0.0,
+            )
+            if est_rate <= 0:
+                return
+            while True:
+                donor, donor_bs = None, 0.0
+                for j in self._live_indices():
+                    oj = self.replicas[j]
+                    if j == dst or oj.tok_rate <= 0:
+                        continue
+                    queued = getattr(oj, "queued_rids", None)
+                    if queued is None or not queued():
+                        continue
+                    bs = oj.backlog_tokens() / oj.tok_rate
+                    if bs > donor_bs:
+                        donor, donor_bs = j, bs
+                if donor is None:
+                    break
+                rid = self.replicas[donor].queued_rids()[-1]
+                r = by_id[rid]
+                # move only while the request finishes sooner on the fresh
+                # replica than its current queue position promises
+                if (me.backlog_tokens() + float(r.max_new)) / est_rate >= donor_bs:
+                    break
+                if not self.replicas[donor].cancel(rid):
+                    continue  # finished in the race
+                n_rebalanced += 1
+                dispatch(r, dst, t)
+
+        def scale(t: float) -> None:
+            """One autoscaler consultation — the same PoolView protocol the
+            simulator speaks, then add_replica/drain_replica executes it."""
+            nonlocal n_spawned, n_drained
+            views = self._views(t)
+            d = asc.decide(
+                PoolView(
+                    time=t,
+                    replicas=tuple(views),
+                    n_warming=0,  # add_replica warms synchronously
+                    class_p99=trailing_class_p99(self._done_hist),
+                )
+            )
+            if d.action == GROW:
+                if self.replica_factory is None:
+                    # a drain-only controller: the grow cannot happen, and
+                    # the policy must not burn a cooldown believing it did
+                    asc.veto(d)
+                    return
+                i = self.add_replica()
+                n_spawned += 1
+                # the spawn's compile/warmup just ran synchronously: the
+                # cooldown restarts from completion, or a compile longer
+                # than cooldown_s cascades into back-to-back fleet freezes
+                t_done = now()
+                asc.note_action_done(t_done)
+                rebalance_to(i, t_done)
+            elif d.action == SHRINK:
+                # never drain the last routable replica, whatever the
+                # policy asked: admitted requests need somewhere to land
+                routable = [v.replica_id for v in views if v.alive]
+                if len(routable) <= 1:
+                    asc.veto(d)
+                    return
+                victim = d.replica_id
+                if victim not in routable:
+                    victim = default_shrink_victim(
+                        PoolView(time=t, replicas=tuple(views))
+                    )
+                if victim is None or not self.drain_replica(victim):
+                    asc.veto(d)
+                    return
+                n_drained += 1
+
         pump(now())
         last_probe = now()
+        last_scale = now()
         last_progress = time.perf_counter()
         while True:
             progressed = False
-            for rep in self.replicas:
+            for i in self._live_indices():
+                rep = self.replicas[i]
                 if not rep.idle and rep.tick() == "step":
                     progressed = True
             t = now()
+            # a drained-dry replica retires: out of the views, out of the
+            # tick loop (its completed stats stay on the books)
+            for i in list(self._draining):
+                if self.replicas[i].idle:
+                    self._draining.discard(i)
+                    self._retired.add(i)
             # completions feed the fleet-level latency history + policy
             for r in requests:
                 if r.finished >= 0 and r.rid in self._where:
@@ -294,7 +483,13 @@ class FleetLoop:
             if self.redispatch and t - last_probe >= self.probe_s:
                 probe(t)
                 last_probe = t
-            outstanding = any(not rep.idle for rep in self.replicas)
+            if asc is not None and t - last_scale >= self.scale_check_s:
+                scale(t)
+                last_scale = now()  # post-compile: a slow spawn already ate
+                # the cadence, don't re-check (and re-freeze) immediately
+            outstanding = any(
+                not self.replicas[i].idle for i in self._live_indices()
+            )
             deferred = policy.n_deferred if policy is not None else 0
             if not outstanding and not deferred and pending:
                 # endgame: requests never offered (pre-measurement bound)
@@ -312,10 +507,16 @@ class FleetLoop:
                 if time.perf_counter() - last_progress > 60.0:
                     break  # a policy that never releases: report, don't hang
 
+        self._running = False
         wall = time.perf_counter() - t0
         done = [r for r in requests if r.finished >= 0]
         per_replica = [rep.stats() for rep in self.replicas]
         return {
+            "autoscaler": asc.name if asc else "none",
+            "spawned": n_spawned,
+            "drained": n_drained,
+            "rebalanced": n_rebalanced,
+            "pool_final": len(self._live_indices()),
             "completed": len(done),
             "rejected": len(rejected),
             "deferred_unserved": policy.n_deferred if policy else 0,
@@ -348,21 +549,29 @@ def build_fleet(
     router: Union[str, Router] = "capacity_weighted",
     admission: Union[str, AdmissionPolicy, None] = "admit_all",
     batched: bool = True,
+    autoscale: Union[str, Autoscaler, None] = None,
     **kw,
 ) -> FleetLoop:
     """N identical ``ServeLoop`` replicas behind one :class:`FleetLoop`.
 
     Replica-level admission is ``None`` by construction: the fleet door is
     the only place a request is judged (the same no-private-path rule the
-    admission layer enforces single-replica)."""
-    replicas = [
-        ServeLoop(
+    admission layer enforces single-replica). The ``replica_factory``
+    builds the same ``ServeLoop`` shape on demand, so a GROW decision
+    spawns an identical replica (its compile/warmup is the cold-start
+    lag)."""
+
+    def factory():
+        return ServeLoop(
             cfg, run, params, batch=batch, max_len=max_len,
             admission=None, batched=batched,
         )
-        for _ in range(n_replicas)
-    ]
-    return FleetLoop(replicas, router=router, admission=admission, **kw)
+
+    replicas = [factory() for _ in range(n_replicas)]
+    return FleetLoop(
+        replicas, router=router, admission=admission,
+        autoscale=autoscale, replica_factory=factory, **kw,
+    )
 
 
 def main(argv=None) -> dict:
@@ -386,6 +595,9 @@ def main(argv=None) -> dict:
                     help="policy name from core.router.ROUTER")
     ap.add_argument("--admission", default="admit_all",
                     help="policy name from core.admission.ADMISSION")
+    ap.add_argument("--autoscale", default=None,
+                    help="policy name from core.autoscale.AUTOSCALE "
+                         "(default: fixed pool)")
     ap.add_argument("--no-redispatch", action="store_true")
     args = ap.parse_args(argv)
 
@@ -402,6 +614,7 @@ def main(argv=None) -> dict:
         cfg, run, params, args.replicas, args.batch,
         args.prompt_len + args.gen + 1,
         router=args.router, admission=args.admission,
+        autoscale=args.autoscale,
         redispatch=not args.no_redispatch,
     )
     stats = fleet.run_requests(reqs)

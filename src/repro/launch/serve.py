@@ -244,6 +244,13 @@ class ServeLoop:
             r.rid for r in self._ready
         ]
 
+    def queued_rids(self) -> list[int]:
+        """Admitted-but-not-yet-decoding requests, queue order. These are
+        movable at zero cost (no generated tokens to discard): the fleet's
+        spawn-time rebalance pulls from here when autoscaling adds a
+        replica (launch/fleet.py)."""
+        return [r.rid for r in self._ready]
+
     def backlog_tokens(self) -> float:
         """Remaining token budget across decoding + ready requests — the
         backlog the fleet's ``shortest_backlog`` router joins on."""

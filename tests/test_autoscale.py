@@ -1,0 +1,563 @@
+"""Replica autoscaling (PR 5): AUTOSCALE registry semantics, policy units
+(sustain/cooldown/bounds, budget learning, stale-p99 guard), fleet-engine
+pool lifecycle invariants (warmup lag, drain-then-retire, rebalance,
+conservation), bit-identical replay with autoscaling enabled, and the
+shared-registry criterion that launch/fleet.py scales through the same
+policy objects the simulator validates.
+"""
+
+import time
+
+import pytest
+
+from repro.core.autoscale import (
+    AUTOSCALE,
+    GROW,
+    HOLD,
+    SHRINK,
+    Autoscaler,
+    BacklogThresholdScaler,
+    DeadlineAwareScaler,
+    FixedPool,
+    PoolView,
+    ScaleDecision,
+    get_autoscaler,
+)
+from repro.core.admission import JobRequest
+from repro.core.router import ReplicaView
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+ALL_SCALERS = ("fixed", "backlog_threshold", "deadline_aware")
+
+
+def _view(rid=0, cap=1.0, backlog=0.0, depth=0, alive=True):
+    return ReplicaView(
+        replica_id=rid, capacity=cap, nameplate=cap,
+        backlog_work=backlog, queue_depth=depth, oldest_age_s=0.0,
+        alive=alive,
+    )
+
+
+def _pool(t, views, warming=0, p99=None):
+    return PoolView(
+        time=t, replicas=tuple(views), n_warming=warming,
+        class_p99=p99 or {},
+    )
+
+
+def _req(rid=0, work=10.0, slo_class=0, deadline=120.0):
+    return JobRequest(job_id=rid, arrive_t=0.0, n_tasks=1, total_work=work,
+                      slo_class=slo_class, deadline_s=deadline)
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_registry_complete_and_fresh_semantics():
+    assert set(AUTOSCALE) == set(ALL_SCALERS)
+    for name, factory in AUTOSCALE.items():
+        assert factory().name == name
+    assert get_autoscaler(None) is None  # fixed fleet, zero overhead
+    assert isinstance(get_autoscaler("fixed"), FixedPool)
+    # instances are cloned-and-reset: runtime state (cooldown clocks,
+    # learned budgets) never leaks between runs, tuning carries over
+    inst = BacklogThresholdScaler(grow_backlog_s=77.0, sustain_s=0.0,
+                                  cooldown_s=1000.0)
+    inst.decide(_pool(0.0, [_view(0, backlog=100.0)]))  # starts a cooldown
+    got = get_autoscaler(inst)
+    assert got is not inst
+    assert got.grow_backlog_s == 77.0  # tuning carried
+    assert got._last_action_t == float("-inf")  # clock reset
+    with pytest.raises(ValueError):
+        get_autoscaler("nope")
+
+
+# ------------------------------------------------------- policy units
+
+
+def test_backlog_threshold_requires_sustained_signal():
+    """A single above-threshold sample is not a trend: the breach must
+    persist for sustain_s before a grow fires."""
+    p = BacklogThresholdScaler(grow_backlog_s=30.0, sustain_s=10.0,
+                               cooldown_s=0.0, max_replicas=4)
+    hot = [_view(0, cap=1.0, backlog=100.0, depth=5)]
+    assert p.decide(_pool(0.0, hot)).action == HOLD  # breach noticed
+    assert p.decide(_pool(5.0, hot)).action == HOLD  # still sustaining
+    d = p.decide(_pool(10.0, hot))
+    assert d.action == GROW and "backlog" in d.reason
+    # a dip back inside the band resets the sustain clock
+    p2 = BacklogThresholdScaler(grow_backlog_s=30.0, sustain_s=10.0,
+                                cooldown_s=0.0)
+    assert p2.decide(_pool(0.0, hot)).action == HOLD
+    assert p2.decide(_pool(5.0, [_view(0, backlog=10.0)])).action == HOLD
+    assert p2.decide(_pool(12.0, hot)).action == HOLD  # clock restarted
+
+
+def test_backlog_threshold_cooldown_and_bounds():
+    p = BacklogThresholdScaler(grow_backlog_s=30.0, shrink_backlog_s=5.0,
+                               sustain_s=0.0, cooldown_s=60.0,
+                               min_replicas=1, max_replicas=2)
+    hot = [_view(0, backlog=100.0, depth=5)]
+    assert p.decide(_pool(0.0, hot)).action == GROW
+    assert p.decide(_pool(30.0, hot)).action == HOLD  # cooling down
+    # at the max bound (warming replicas count: they are committed)
+    assert p.decide(_pool(100.0, hot, warming=1)).action == HOLD
+    # shrink respects the min bound
+    idle = [_view(0, backlog=0.0)]
+    p2 = BacklogThresholdScaler(shrink_backlog_s=5.0, sustain_s=0.0,
+                                cooldown_s=0.0, min_replicas=1)
+    assert p2.decide(_pool(0.0, idle)).action == HOLD  # already at min
+    d = p2.decide(_pool(1.0, [_view(0), _view(1)]))
+    assert d.action == SHRINK
+
+
+def test_backlog_threshold_shrink_picks_slowest_then_newest():
+    p = BacklogThresholdScaler(shrink_backlog_s=5.0, sustain_s=0.0,
+                               cooldown_s=0.0, min_replicas=1)
+    d = p.decide(_pool(0.0, [_view(0, cap=1.0), _view(1, cap=0.4),
+                             _view(2, cap=1.0)]))
+    assert d.action == SHRINK and d.replica_id == 1  # slowest
+    p.reset()
+    d = p.decide(_pool(0.0, [_view(0, cap=1.0), _view(1, cap=1.0),
+                             _view(2, cap=1.0)]))
+    assert d.replica_id == 2  # equal rates: newest goes first
+
+
+def test_backlog_threshold_holds_without_measurement():
+    """A real fleet before its first decode reports zero capacity —
+    backlog-seconds is undefined, so there is no evidence to scale on."""
+    p = BacklogThresholdScaler(sustain_s=0.0, cooldown_s=0.0)
+    d = p.decide(_pool(0.0, [_view(0, cap=0.0, backlog=50.0, depth=3)]))
+    assert d.action == HOLD and "measured" in d.reason
+    # all replicas draining: nothing routable, nothing to size
+    d = p.decide(_pool(1.0, [_view(0, alive=False, backlog=50.0, depth=3)]))
+    assert d.action == HOLD
+
+
+def test_deadline_aware_learns_budget_and_holds_without_one():
+    p = DeadlineAwareScaler(target_frac=0.5, sustain_s=0.0, cooldown_s=0.0,
+                            max_replicas=4)
+    hot = [_view(0, cap=1.0, backlog=100.0, depth=5)]
+    # no class-0 deadline ever seen: sizing would be a guess
+    assert p.decide(_pool(0.0, hot)).action == HOLD
+    p.note_request(_req(deadline=120.0))
+    p.note_request(_req(slo_class=1, deadline=10.0))  # other classes ignored
+    assert p._budget() == 120.0
+    d = p.decide(_pool(1.0, hot))  # 100s backlog > 0.5 * 120s
+    assert d.action == GROW and "budget" in d.reason
+
+
+def test_deadline_aware_stale_p99_never_blocks_shrink():
+    """The trailing p99 window only advances when completions land, so in
+    an idle trough it is history, not a signal: with an empty queue the
+    policy must still shrink, however bad the last burst's p99 was."""
+    p = DeadlineAwareScaler(budget_s=120.0, relax_frac=0.1, sustain_s=0.0,
+                            cooldown_s=0.0, min_replicas=1)
+    idle = [_view(0), _view(1)]
+    d = p.decide(_pool(0.0, idle, p99={0: 500.0}))  # p99 way over budget
+    assert d.action == SHRINK
+    # but while work is queued, an observed budget blow-out grows even if
+    # the backlog estimate alone looks tolerable
+    p2 = DeadlineAwareScaler(budget_s=120.0, target_frac=0.5, sustain_s=0.0,
+                             cooldown_s=0.0, max_replicas=4)
+    loaded = [_view(0, cap=1.0, backlog=20.0, depth=2)]  # 20s < 60s target
+    assert p2.decide(_pool(0.0, loaded, p99={0: 500.0})).action == GROW
+
+
+def test_veto_rolls_back_cooldown_and_sustain():
+    """An engine-vetoed decision must not burn the policy's cooldown: if a
+    SHRINK is refused (last routable replica, no factory), the very next
+    legitimate GROW must still be allowed to fire."""
+    kw = dict(grow_backlog_s=30.0, shrink_backlog_s=5.0, sustain_s=0.0,
+              cooldown_s=100.0, min_replicas=1, max_replicas=4)
+    hot = [_view(0, backlog=100.0, depth=5), _view(1)]
+    idle = [_view(0), _view(1)]
+    p = BacklogThresholdScaler(**kw)
+    d = p.decide(_pool(0.0, idle))
+    assert d.action == SHRINK
+    p.veto(d)
+    assert p.decide(_pool(1.0, hot)).action == GROW  # cooldown rolled back
+    # control: without the veto the phantom shrink suppresses the grow
+    p2 = BacklogThresholdScaler(**kw)
+    assert p2.decide(_pool(0.0, idle)).action == SHRINK
+    assert p2.decide(_pool(1.0, hot)).action == HOLD
+    # deadline_aware implements the same rollback
+    da = DeadlineAwareScaler(budget_s=120.0, sustain_s=0.0, cooldown_s=100.0,
+                             min_replicas=1, max_replicas=4)
+    d = da.decide(_pool(0.0, idle))
+    assert d.action == SHRINK
+    da.veto(d)
+    assert da.decide(_pool(1.0, hot)).action == GROW
+    # a veto applies only to the immediately-preceding decision: after a
+    # HOLD it is a no-op, not a rollback of older state
+    p3 = BacklogThresholdScaler(**kw)
+    d = p3.decide(_pool(0.0, idle))
+    assert d.action == SHRINK
+    assert p3.decide(_pool(1.0, hot)).action == HOLD  # cooling down
+    p3.veto(d)  # stale: must not resurrect the pre-shrink clock
+    assert p3.decide(_pool(2.0, hot)).action == HOLD
+
+
+def test_note_action_done_restarts_cooldown_from_completion():
+    """A real spawn compiles synchronously and can outlast the cooldown:
+    the clock must restart from when the action *landed*, or the backlog
+    that piled up during the stall immediately re-triggers another
+    fleet-freezing spawn."""
+    p = BacklogThresholdScaler(grow_backlog_s=30.0, sustain_s=0.0,
+                               cooldown_s=30.0, max_replicas=6)
+    hot = [_view(0, backlog=100.0, depth=5)]
+    assert p.decide(_pool(0.0, hot)).action == GROW  # decision at t=0
+    p.note_action_done(60.0)  # ...but the compile finished at t=60
+    # t=70 is 70s past the decision but only 10s past completion: still
+    # cooling — without the hook this would GROW again
+    assert p.decide(_pool(70.0, hot)).action == HOLD
+    assert p.decide(_pool(90.0, hot)).action == GROW  # cooled from t=60
+    # the landed action is no longer vetoable: a stale veto is a no-op
+    p2 = BacklogThresholdScaler(grow_backlog_s=30.0, sustain_s=0.0,
+                                cooldown_s=30.0, max_replicas=6)
+    d = p2.decide(_pool(0.0, hot))
+    p2.note_action_done(0.0)
+    p2.veto(d)
+    assert p2.decide(_pool(10.0, hot)).action == HOLD  # cooldown intact
+
+
+def test_deadline_aware_reason_names_the_triggering_signal():
+    """The churn-trace reason must cite the signal that actually tripped
+    the grow: a p99-triggered scale-up attributed to a backlog breach
+    that never happened would mislead anyone auditing a replay."""
+    p = DeadlineAwareScaler(budget_s=120.0, target_frac=0.4, sustain_s=0.0,
+                            cooldown_s=0.0, max_replicas=4)
+    # backlog tiny (2s << 48s target) but observed p99 blew the budget
+    loaded = [_view(0, cap=1.0, backlog=2.0, depth=1)]
+    d = p.decide(_pool(0.0, loaded, p99={0: 130.0}))
+    assert d.action == GROW
+    assert "p99" in d.reason and "130.0" in d.reason
+    # and a backlog-triggered grow cites the backlog estimate
+    p2 = DeadlineAwareScaler(budget_s=120.0, target_frac=0.4, sustain_s=0.0,
+                             cooldown_s=0.0, max_replicas=4)
+    hot = [_view(0, cap=1.0, backlog=100.0, depth=5)]
+    d = p2.decide(_pool(0.0, hot))
+    assert d.action == GROW and "sojourn" in d.reason
+
+
+def test_recover_does_not_duplicate_scale_cadence():
+    """A re-registration re-arms the scale-check chain only if it died;
+    next to a live chain it must not start a second one (decisions would
+    silently run at double cadence for the rest of the run)."""
+
+    class Counting(BacklogThresholdScaler):
+        name = "counting"
+
+        def __init__(self):
+            super().__init__(min_replicas=2, max_replicas=6)
+            self.calls = []
+
+        def decide(self, view):
+            self.calls.append(view.time)
+            return super().decide(view)
+
+        def fresh(self):  # keep the call log observable from the test
+            self.calls = []
+            return self
+
+    p = Counting()
+    res = run_fleet("fleet_churny", seed=0, autoscale=p)
+    assert any(e.kind == "re_registered" for e in res.trace)
+    cadence = FLEET_PRESETS["fleet_churny"].scale_check_s
+    diffs = [b - a for a, b in zip(p.calls, p.calls[1:])]
+    assert diffs and all(d >= cadence - 1e-9 for d in diffs)
+
+
+def test_fixed_pool_matches_no_autoscale():
+    """autoscale="fixed" and autoscale=None must produce the same run —
+    the named baseline exists only so sweeps can treat "no scaling" as a
+    policy."""
+    a = run_fleet("fleet_bursty", seed=0, autoscale=None)
+    b = run_fleet("fleet_bursty", seed=0, autoscale="fixed")
+    assert a.requests == b.requests
+    assert a.makespan == b.makespan
+    assert a.replica_seconds == b.replica_seconds
+    assert b.autoscaler == "fixed" and a.autoscaler == "none"
+    assert b.n_spawned == b.n_retired == 0
+
+
+# ------------------------------------- fleet engine pool lifecycle
+
+
+def _bt(**kw):
+    defaults = dict(min_replicas=2, max_replicas=6)
+    defaults.update(kw)
+    return BacklogThresholdScaler(**defaults)
+
+
+def test_bursty_pool_grows_shrinks_and_conserves():
+    res = run_fleet("fleet_bursty", seed=0, autoscale=_bt())
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    assert res.n_spawned > 0 and res.n_retired > 0
+    assert res.pool_peak > 2
+    # every request still completes exactly once across the pool churn
+    for r in res.requests:
+        done = [d for d in r.dispatches if d.outcome == "done"]
+        assert len(done) == 1 and done[0].replica == r.served_by
+    assert sum(res.served_by.values()) == res.completed
+    # spawned replicas actually served work (the rebalance guarantee)
+    spawned_ids = {e.detail["replica"] for e in res.trace
+                   if e.kind == "scale_up"}
+    assert any(res.served_by.get(i, 0) > 0 for i in spawned_ids)
+    # cost accounting: the base pool bills to the end; the elastic
+    # replicas bill only their online windows, so the total sits between
+    # base-only and whole-peak-pool
+    assert 2 * res.makespan < res.replica_seconds
+    assert res.replica_seconds < res.pool_peak * res.makespan
+
+
+def test_warmup_lag_gates_routability():
+    """A spawned replica must receive nothing — routes or rebalances —
+    before its warm_at: cold capacity is not capacity."""
+    res = run_fleet("fleet_bursty", seed=1, autoscale=_bt())
+    warm_at = {e.detail["replica"]: e.detail["warm_at"]
+               for e in res.trace if e.kind == "scale_up"}
+    assert warm_at  # the burst actually triggered spawns
+    for e in res.trace:
+        if e.kind == "route" and e.detail["replica"] in warm_at:
+            assert e.time >= warm_at[e.detail["replica"]] - 1e-9
+        if e.kind == "rebalance" and e.detail["to"] in warm_at:
+            assert e.time >= warm_at[e.detail["to"]] - 1e-9
+    # and the warm event itself lands exactly warmup_s after the decision
+    spec = FLEET_PRESETS["fleet_bursty"]
+    ups = {e.detail["replica"]: e.time for e in res.trace
+           if e.kind == "scale_up"}
+    warms = {e.detail["replica"]: e.time for e in res.trace
+             if e.kind == "replica_warm"}
+    for i, t_up in ups.items():
+        if i in warms:
+            assert warms[i] == pytest.approx(t_up + spec.warmup_s)
+
+
+def test_drain_stops_routing_then_retires():
+    res = run_fleet("fleet_bursty", seed=0, autoscale=_bt())
+    downs = [(e.detail["replica"], e.time) for e in res.trace
+             if e.kind == "scale_down"]
+    retired = {e.detail["replica"]: e.time for e in res.trace
+               if e.kind == "replica_retired"}
+    assert downs and retired
+    for i, t_down in downs:
+        # no new work lands on a draining/retired replica, ever
+        for e in res.trace:
+            if e.time > t_down and e.detail.get("replica") == i:
+                assert e.kind not in ("route",), (i, e)
+            if e.time > t_down and e.kind == "rebalance":
+                assert e.detail["to"] != i
+        # retire happens at or after the drain decision
+        if i in retired:
+            assert retired[i] >= t_down
+
+
+def test_bit_identical_replay_with_autoscaling():
+    """The acceptance pin: scaling decisions are pure arithmetic over the
+    views, so two replays agree on every spawn, warm, drain, retire,
+    route, and completion — dataclass equality over the full FleetResult,
+    trace included."""
+    for asc in ("backlog_threshold", "deadline_aware"):
+        a = run_fleet("fleet_bursty", seed=2, autoscale=asc)
+        b = run_fleet("fleet_bursty", seed=2, autoscale=asc)
+        assert a == b
+        kinds = {e.kind for e in a.trace}
+        assert "scale_up" in kinds and "replica_warm" in kinds
+
+
+def test_autoscale_composes_with_admission_and_churn():
+    """Scaling events feed the same capacity signal admission re-rates on
+    (token_bucket), and the pool machinery coexists with replica
+    death/re-registration on the churny preset."""
+    res = run_fleet("fleet_churny", seed=0, admission="token_bucket",
+                    autoscale=_bt(min_replicas=1, max_replicas=5,
+                                  grow_backlog_s=20.0))
+    assert res.completed + res.n_rejected == len(res.requests)
+    assert res.stranded == 0
+    a = run_fleet("fleet_churny", seed=3, admission="token_bucket",
+                  autoscale="backlog_threshold")
+    b = run_fleet("fleet_churny", seed=3, admission="token_bucket",
+                  autoscale="backlog_threshold")
+    assert a == b
+
+
+def test_diurnal_preset_tracks_the_cycle():
+    res = run_fleet("fleet_diurnal", seed=0, autoscale=_bt())
+    assert res.completed == len(res.requests)
+    fixed = run_fleet("fleet_diurnal", seed=0)
+    # the sinusoid gives the scaler both a crest (grow) and a trough
+    # (shrink); tracking it must not cost more than the static pool tail
+    assert res.n_spawned > 0 or res.n_retired > 0
+    assert res.latency_quantile(0.99) <= fixed.latency_quantile(0.99)
+
+
+def test_all_dead_pool_terminates_with_autoscaling():
+    """Regression: with every replica dead for good, the growable
+    policies can never act (no measured capacity → HOLD), so parked
+    requests must not keep the scale-check chain — and the run — alive.
+    The run must terminate and report the strands, exactly like
+    autoscale=None does."""
+    from repro.core.workload import FleetSpec
+
+    spec = FleetSpec(
+        replica_rates=(1.0,), n_requests=8,
+        arrival="uniform", mean_interarrival_s=10.0,
+        replica_fail=(0, 5.0), replica_recover_s=None,
+        dead_after_s=10.0,
+    )
+    base = run_fleet(spec, seed=0, redispatch=False, autoscale=None)
+    scaled = run_fleet(spec, seed=0, redispatch=False,
+                       autoscale="backlog_threshold")
+    assert scaled.stranded == base.stranded > 0
+    assert scaled.n_spawned == 0  # nothing measured: policy held throughout
+
+
+def test_shrink_never_drains_the_last_routable_replica():
+    """Whatever a (buggy or scripted) policy asks, the engine refuses to
+    drain the last routable replica — otherwise every later arrival parks
+    forever with nothing to retry on."""
+
+    class DrainEverything(Autoscaler):
+        name = "drain_everything"
+
+        def decide(self, view):
+            live = view.routable
+            if live:
+                return ScaleDecision(SHRINK, replica_id=live[0].replica_id)
+            return ScaleDecision(GROW)  # never honored: no factory path
+
+        def fresh(self):
+            return self
+
+    res = run_fleet("fleet_bursty", seed=0, autoscale=DrainEverything())
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    # it drained down to — but not through — the last routable replica
+    assert res.n_retired == len(FLEET_PRESETS["fleet_bursty"].replica_rates) - 1
+
+
+def test_fleet_presets_complete():
+    assert {"fleet_bursty", "fleet_diurnal"} <= set(FLEET_PRESETS)
+    for name in ("fleet_bursty", "fleet_diurnal"):
+        spec = FLEET_PRESETS[name]
+        assert spec.warmup_s > 0 and spec.scale_check_s > 0, name
+
+
+# ------------------------------------------- launch/fleet shared registry
+
+
+class _ScriptedScaler(Autoscaler):
+    """Deterministic decision script for driving FleetLoop's pool hooks."""
+
+    name = "scripted"
+
+    def __init__(self, script):
+        self.script = list(script)
+        self._i = 0
+
+    def reset(self):
+        self._i = 0
+
+    def decide(self, view):
+        d = (self.script[self._i] if self._i < len(self.script)
+             else ScaleDecision(HOLD))
+        self._i += 1
+        return d
+
+
+def _mk_requests(n, gen=8):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    return [Request(i, np.zeros(4, np.int32), gen) for i in range(n)]
+
+
+def test_fleet_loop_resolves_autoscaler_from_shared_registry():
+    from test_router import _StubReplica
+    from repro.launch.fleet import FleetLoop
+
+    loop = FleetLoop([_StubReplica(2)], autoscale="backlog_threshold")
+    assert isinstance(get_autoscaler(loop.autoscale), BacklogThresholdScaler)
+    pre = BacklogThresholdScaler(grow_backlog_s=11.0)
+    resolved = get_autoscaler(FleetLoop([_StubReplica(2)],
+                                        autoscale=pre).autoscale)
+    assert resolved is not pre and resolved.grow_backlog_s == 11.0
+
+
+def test_fleet_loop_grows_rebalances_and_drains_with_stubs():
+    """End-to-end pool lifecycle on the hardware path without JAX: a slow
+    single-replica fleet under load spawns stubs via the factory, queued
+    requests rebalance onto them, and the drained pool still completes
+    every request exactly once."""
+    from test_router import _StubReplica
+    from repro.launch.fleet import FleetLoop
+
+    loop = FleetLoop(
+        [_StubReplica(1, batch=1)], router="capacity_weighted",
+        admission=None, redispatch=False, scale_check_s=0.0,
+        autoscale=BacklogThresholdScaler(
+            grow_backlog_s=2.0, shrink_backlog_s=0.5, sustain_s=0.0,
+            cooldown_s=0.0, min_replicas=1, max_replicas=3,
+        ),
+        replica_factory=lambda: _StubReplica(4, batch=2),
+    )
+    stats = loop.run_requests(_mk_requests(16, gen=16))
+    assert stats["completed"] == 16 and stats["rejected"] == 0
+    assert stats["spawned"] >= 1
+    assert stats["rebalanced"] >= 1  # spawned capacity absorbed the queue
+    assert sum(stats["completed_per_replica"]) == 16
+    spawned_served = sum(stats["completed_per_replica"][1:])
+    assert spawned_served > 0
+    assert stats["autoscaler"] == "backlog_threshold"
+
+
+def test_fleet_loop_scripted_drain_retires_idle_replica():
+    from test_router import _StubReplica
+    from repro.launch.fleet import FleetLoop
+
+    script = [ScaleDecision(GROW), ScaleDecision(SHRINK, replica_id=1)]
+    loop = FleetLoop(
+        [_StubReplica(2, batch=2)], router="round_robin", admission=None,
+        redispatch=False, scale_check_s=0.0,
+        autoscale=_ScriptedScaler(script),
+        replica_factory=lambda: _StubReplica(2, batch=2),
+    )
+    stats = loop.run_requests(_mk_requests(10, gen=12))
+    assert stats["completed"] == 10
+    assert stats["spawned"] == 1 and stats["drained"] == 1
+    assert stats["pool_final"] == 1  # the drained spawn retired
+    assert sum(stats["completed_per_replica"]) == 10
+
+
+def test_fleet_loop_add_drain_are_callable_directly():
+    """add_replica/drain_replica are public pool hooks, not autoscaler
+    internals: an operator (or an external controller) can drive them."""
+    from test_router import _StubReplica
+    from repro.launch.fleet import FleetLoop
+
+    loop = FleetLoop([_StubReplica(2)], replica_factory=lambda: _StubReplica(2))
+    assert loop.add_replica() == 1
+    assert len(loop.replicas) == 2
+    assert loop.drain_replica(1) is True
+    assert loop.drain_replica(1) is False  # already draining
+    assert loop.drain_replica(7) is False  # out of range
+    no_factory = FleetLoop([_StubReplica(2)])
+    with pytest.raises(ValueError):
+        no_factory.add_replica()
+
+
+# ------------------------------------------------------------- tooling
+
+
+def test_fast_tier_timing_guard():
+    """The autoscale suite rides the fast tier: a representative claim-11
+    slice must stay well inside the ~2 min budget — catches a scale-check
+    storm (e.g. a re-arm bug going quadratic) before CI times out."""
+    t0 = time.perf_counter()
+    for seed in (0, 1):
+        run_fleet("fleet_bursty", seed=seed, autoscale="backlog_threshold")
+        run_fleet("fleet_bursty", seed=seed)
+    assert time.perf_counter() - t0 < 30.0

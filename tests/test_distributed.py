@@ -96,12 +96,17 @@ def test_sharded_train_step_matches_single_device():
     """))
 
 
-def test_dryrun_cli_smoke_cell():
-    """The dry-run CLI end to end on a tiny mesh with a reduced arch."""
+def test_dryrun_cli_smoke_cell(tmp_path):
+    """The dry-run CLI end to end on a tiny mesh with a reduced arch.
+
+    Artifacts go to pytest's tmp dir, NOT results/: a test must never
+    dirty the working tree (results/ is generated output and gitignored —
+    this test once wrote results/dryrun_test/ and left churn in every
+    run's diff)."""
     env = dict(os.environ)
     env["REPRO_DRYRUN_DEVICES"] = "8"
     env["PYTHONPATH"] = str(REPO / "src")
-    out_dir = REPO / "results" / "dryrun_test"
+    out_dir = tmp_path / "dryrun_test"
     res = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
          "--cell", "qwen3-1.7b-smoke:train_4k", "--mesh", "2x4",

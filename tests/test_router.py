@@ -344,6 +344,9 @@ class _StubReplica:
     def outstanding_rids(self):
         return [r.rid for r in self.active + self.ready]
 
+    def queued_rids(self):  # movable at zero cost (spawn-time rebalance)
+        return [r.rid for r in self.ready]
+
     def backlog_tokens(self):
         return float(
             sum(r.max_new - len(r.tokens) for r in self.active)

@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         bench_autoscale,
         bench_elastic,
         bench_heartbeat,
+        bench_hedge,
         bench_namespace,
         bench_placement,
         bench_replication,
@@ -52,6 +53,8 @@ def main(argv=None) -> None:
          lambda: bench_router.main(smoke=opts.smoke)),
         ("claim11: replica autoscaling on the measured-capacity signal",
          lambda: bench_autoscale.main(smoke=opts.smoke)),
+        ("claim12: class reservation + hedged duplicate dispatch",
+         lambda: bench_hedge.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

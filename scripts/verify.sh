@@ -44,13 +44,15 @@ python -m pytest -q tests/test_docs.py
 
 echo "== [4/4] benchmark smoke path =="
 # claim 8 (elastic re-mesh under churn), claim 9 (SLO-aware admission),
-# claim 10 (cross-replica routing + re-dispatch) and claim 11 (replica
-# autoscaling) run standalone first so a recovery/admission/routing/scaling
+# claim 10 (cross-replica routing + re-dispatch), claim 11 (replica
+# autoscaling) and claim 12 (class reservation + hedged dispatch) run
+# standalone first so a recovery/admission/routing/scaling/hedging
 # regression is attributed before the full sweep, then the whole sweep
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_elastic.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_admission.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_router.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_autoscale.py --smoke
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_hedge.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

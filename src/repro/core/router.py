@@ -37,6 +37,24 @@ Policies, and the paper §IV guideline each one operationalizes:
     §IV.a (decide in measured currency): join-shortest-backlog-**seconds**
     — queue depth divided by measured rate, not slot count, so a short
     queue on a slow replica is correctly seen as a long wait.
+``class_reserved``
+    The paper's "fragments ∝ speed" rule applied to SLO classes (PR 6): a
+    ``reserve_frac`` share of measured capacity — the *fastest* replicas —
+    is reserved for class-0 (deadline-critical) work. Class 0 joins the
+    shortest backlog-seconds queue fleet-wide; best-effort classes keep off
+    the reserve unless a reserve replica is idle (spill-when-idle), so fast
+    capacity is standing by when critical work arrives instead of buried
+    under best-effort backlog.
+
+Alongside the reactive rescue, :func:`plan_hedge` plans **hedged duplicate
+dispatch** (PR 6): a deadline-critical request is dispatched to *two*
+replicas up front — the router's pick plus either the fastest idle reserve
+replica (free insurance) or, when the pick itself is already degraded, the
+shortest backlog-seconds healthy reserve replica (paid insurance, bought
+exactly when risk is visible) — first completion wins and the loser is
+cancelled. This is the paper's speculative-execution model without the
+stuck-task precondition: the duplicate races from dispatch, so the tail is
+bounded before ``late_factor`` detection could even trigger.
 
 Registry contract (``ROUTER`` / :func:`get_router` — one of the four
 policy registries documented in docs/architecture.md, alongside
@@ -242,6 +260,144 @@ class ShortestBacklogRouter(Router):
         return best.replica_id
 
 
+def reserve_ids(
+    views: Sequence[ReplicaView], reserve_frac: float
+) -> set[int]:
+    """The class-0 reserve: the smallest prefix of the fastest *measured*
+    live replicas whose cumulative measured capacity covers
+    ``reserve_frac`` of the fleet total (at least one replica whenever
+    anything is measured). Ranking is by measured capacity with ties to the
+    lower replica id, so the set is deterministic for a given snapshot —
+    the "fragments ∝ speed" rule (§IV.b.ii) applied to SLO classes:
+    reserve fast *capacity*, not a fast replica-count."""
+    measured = sorted(
+        (v for v in views if v.alive and v.capacity > _EPS),
+        key=lambda v: (-v.capacity, v.replica_id),
+    )
+    if not measured or reserve_frac <= 0.0:
+        return set()
+    want = reserve_frac * sum(v.capacity for v in measured)
+    out: set[int] = set()
+    got = 0.0
+    for v in measured:
+        out.add(v.replica_id)
+        got += v.capacity
+        if got >= want - _EPS:
+            break
+    return out
+
+
+class ClassReservedRouter(Router):
+    """Class-aware placement: reserve the fastest replicas for class 0.
+
+    Class-0 requests join the shortest backlog-seconds queue over the whole
+    live fleet (the reservation protects them by keeping best-effort work
+    *off* the fast replicas, not by fencing them in). Best-effort classes
+    are routed over the non-reserve replicas, spilling onto a reserve
+    replica only while it is idle — reserved capacity is never wasted, but
+    a queued best-effort request never sits between critical work and the
+    fast replica it was reserved for. Before anything has measured there is
+    no reserve to draw (no proportions exist): fall back to least-loaded,
+    exactly like ``capacity_weighted``'s opening-burst rule."""
+
+    name = "class_reserved"
+
+    def __init__(self, reserve_frac: float = 0.5) -> None:
+        self.reserve_frac = reserve_frac
+
+    def pick(self, req, views):
+        live = _routable(views)
+        if not live:
+            return None
+        if not any(v.capacity > _EPS for v in live):
+            return min(
+                live,
+                key=lambda v: (v.queue_depth, v.backlog_work, v.replica_id),
+            ).replica_id
+        reserve = reserve_ids(live, self.reserve_frac)
+        if req.slo_class == 0:
+            pool = live
+        else:
+            pool = [
+                v for v in live
+                if v.replica_id not in reserve or v.idle
+            ] or live
+        best = min(pool, key=lambda v: (v.backlog_s, -v.capacity, v.replica_id))
+        return best.replica_id
+
+
+def plan_hedge(
+    req: JobRequest,
+    primary_id: Optional[int],
+    views: Sequence[ReplicaView],
+    reserve_frac: float = 0.5,
+) -> Optional[int]:
+    """Hedge target for a deadline-critical request, or ``None``.
+
+    Speculative execution without the stuck-task precondition: instead of
+    waiting for a request to run ``late_factor ×`` past its estimate on a
+    degraded replica, a class-0 request with a finite deadline is
+    duplicated onto a second replica at dispatch time — first completion
+    wins, the loser is cancelled by the caller. Two triggers, checked in
+    order:
+
+    1. **Idle-reserve hedge** — the fastest idle, healthy, measured
+       reserve replica races the primary (LATE's backups-on-fast-nodes
+       rule: a free fast node duplicates at zero displacement). Skipped
+       when the primary itself is idle, healthy, and at least as fast —
+       that duplicate could only lose, and its progress would be pure
+       duplicate-work tax. Under backlog-seconds routing
+       (``class_reserved``) an idle replica is always the primary's own
+       pick, so this branch mainly fires under weight-based routers.
+    2. **Degraded-primary hedge** — when the router was forced to place
+       the request on an observably *degraded* replica (every healthier
+       choice carried more backlog-seconds), the duplicate joins the
+       shortest backlog-seconds healthy reserve queue even though it is
+       busy. Risk is already visible here, so insurance is bought at
+       dispatch instead of waiting ``late_factor ×`` the estimate for the
+       re-dispatch monitor; if the primary recovers and wins anyway, the
+       still-queued duplicate cancels at zero progress lost.
+
+    The target always differs from the primary; ties break by replica id
+    (deterministic). ``views`` is the same snapshot the router's ``pick``
+    saw (pre-dispatch: the primary's own queue does not yet contain the
+    request), so both decisions are arithmetic over one consistent fleet
+    state.
+    """
+    if req.slo_class != 0 or math.isinf(req.deadline_s):
+        return None
+    reserve = reserve_ids(views, reserve_frac)
+    by_id = {v.replica_id: v for v in views}
+    primary = by_id.get(primary_id)
+    candidates = [
+        v
+        for v in views
+        if v.replica_id in reserve
+        and v.replica_id != primary_id
+        and v.alive
+        and not v.degraded
+        and v.capacity > _EPS
+    ]
+    if not candidates:
+        return None
+    idle = [v for v in candidates if v.idle]
+    if idle:
+        target = min(idle, key=lambda v: (-v.capacity, v.replica_id))
+        if not (
+            primary is not None
+            and primary.alive
+            and primary.idle
+            and not primary.degraded
+            and primary.capacity >= target.capacity - _EPS
+        ):
+            return target.replica_id
+    if primary is not None and primary.degraded:
+        return min(
+            candidates, key=lambda v: (v.backlog_s, -v.capacity, v.replica_id)
+        ).replica_id
+    return None
+
+
 def plan_redispatch(
     inflight: Sequence[InflightView],
     views: Sequence[ReplicaView],
@@ -261,14 +417,23 @@ def plan_redispatch(
     fast nodes", with idleness standing in for the free-slot condition):
     rescued work must never displace healthy work, so a pass plans at most
     one move per idle replica and never moves a request onto another
-    degraded-but-idle replica. Candidates are ranked by estimated
+    degraded-but-idle replica — nor onto a replica with **no measured
+    capacity** (a just-spawned, still-warming replica on the serving path
+    reports rate 0 until its first decode completes; it is idle and not
+    degraded by the nameplate test, but handing rescued work to a replica
+    that has never demonstrated a rate re-strands it behind a cold start).
+    Candidates are ranked by estimated
     time-to-end on their current replica, longest first (LATE's ordering),
     so the worst-off request gets the fastest target. Deterministic: pure
     arithmetic over the views, ties broken by request id.
     """
     by_id = {v.replica_id: v for v in views}
     idle = sorted(
-        (v for v in views if v.alive and v.idle and not v.degraded),
+        (
+            v
+            for v in views
+            if v.alive and v.idle and not v.degraded and v.capacity > _EPS
+        ),
         key=lambda v: (-v.capacity, v.replica_id),
     )
     if not idle:
@@ -311,6 +476,7 @@ ROUTER: dict[str, Callable[[], Router]] = {
     "round_robin": RoundRobinRouter,
     "capacity_weighted": CapacityWeightedRouter,
     "shortest_backlog": ShortestBacklogRouter,
+    "class_reserved": ClassReservedRouter,
 }
 
 

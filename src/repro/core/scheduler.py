@@ -24,11 +24,22 @@ capacity  — the paper's §IV.b.ii "fragments ∝ speed" rule lifted to the job
             processing-time sharing, which shrinks workload makespan on
             slow/fast pod mixes (no giant job is left to tail out alone on
             the slow pod).
+class_reserved — class-aware slot reservation (PR 6, the scheduler-layer
+            twin of the ``class_reserved`` router in core/router.py): slots
+            on the fastest workers — rate at least ``reserve_frac`` of the
+            fastest rate yet offered — are reserved for class-0 jobs,
+            earliest deadline first; slower slots feed best-effort classes
+            by capacity deficit. Either side spills to the other rather
+            than idle a slot, so the reservation shapes placement without
+            ever wasting capacity.
 
 The engine (simulator.run_workload) calls ``select`` every time a worker
 frees, passing a snapshot of all arrived jobs that still have pending tasks.
-Schedulers are stateless between calls; everything they need is in the views,
-which keeps replays bit-deterministic.
+Schedulers carry no per-decision queue state — everything they need is in
+the views, which keeps replays bit-deterministic (``class_reserved`` keeps
+only a monotone high-water mark of the fastest rate seen, itself a pure
+function of the offer sequence; the registry constructs a fresh instance
+per run, so no mark leaks across replays).
 
 Under churn (PR 2) this snapshot protocol is what makes the schedulers
 elastic for free: ``alloc_capacity`` is summed from ``rate_at(t)`` and dead
@@ -40,13 +51,21 @@ re-planning step.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable
 
 
 @dataclass(frozen=True)
 class JobView:
-    """What a scheduler may see about one runnable job at decision time."""
+    """What a scheduler may see about one runnable job at decision time.
+
+    ``slo_class``/``deadline_t`` (PR 6) surface the admission-layer SLO
+    handles to class-aware schedulers; both default to "no SLO" so every
+    pre-existing scheduler and replay sees the exact views it always did.
+    ``deadline_t`` is absolute (submit time + budget) so earliest-deadline
+    ordering needs no per-job arithmetic at decision time.
+    """
 
     job_id: int
     submit_t: float
@@ -54,6 +73,8 @@ class JobView:
     n_running: int  # live (non-killed, non-done) attempts holding slots
     remaining_work: float  # total work minus completed tasks' work
     alloc_capacity: float  # Σ rate of the workers this job occupies now
+    slo_class: int = 0  # admission-layer class (0 = strictest SLO)
+    deadline_t: float = math.inf  # absolute deadline (submit_t + budget)
 
 
 class JobScheduler:
@@ -122,9 +143,54 @@ class FairCapacityScheduler(JobScheduler):
         ).job_id
 
 
+class ClassReservedScheduler(JobScheduler):
+    """Class-aware slot reservation: fast slots serve class 0 first.
+
+    A freed worker counts as a **reserve slot** when its current rate is at
+    least ``reserve_frac`` of the fastest rate this run has offered so far
+    (a monotone high-water mark — on a heterogeneous cluster the fast pod
+    sets it within the first scheduling wave, since the engine offers freed
+    workers fastest-first). A reserve slot goes to the class-0 job with the
+    earliest absolute deadline (ties: submit order); a general slot goes to
+    the best-effort job with the largest capacity deficit (the ``capacity``
+    rule). Neither side idles a slot: a reserve slot with no class-0 work
+    spills to the deficit rule, and a general slot with only class-0 work
+    serves it rather than wait.
+    """
+
+    name = "class_reserved"
+
+    def __init__(self, reserve_frac: float = 0.5) -> None:
+        self.reserve_frac = reserve_frac
+        self._peak_rate = 0.0
+
+    def _deficit_pick(self, jobs: list[JobView], wrate: float) -> int:
+        def deficit(j: JobView) -> float:
+            return j.remaining_work / max(j.alloc_capacity + wrate, 1e-9)
+
+        return max(jobs, key=lambda j: (deficit(j), -j.submit_t, -j.job_id)).job_id
+
+    def select(self, t, jobs, worker):
+        wrate = worker.rate_at(t)
+        self._peak_rate = max(self._peak_rate, wrate)
+        critical = [j for j in jobs if j.slo_class == 0]
+        best_effort = [j for j in jobs if j.slo_class != 0]
+        if wrate >= self.reserve_frac * self._peak_rate - 1e-12:
+            if critical:  # reserve slot: earliest deadline first
+                return min(
+                    critical,
+                    key=lambda j: (j.deadline_t, j.submit_t, j.job_id),
+                ).job_id
+            return self._deficit_pick(best_effort, wrate)
+        if best_effort:  # general slot: keep best-effort off the reserve
+            return self._deficit_pick(best_effort, wrate)
+        return self._deficit_pick(critical, wrate)
+
+
 SCHEDULERS: dict[str, Callable[[], JobScheduler]] = {
     "fifo": FifoScheduler,
     "fair": FairScheduler,
     "fair_capacity": FairCapacityScheduler,
     "capacity": CapacityWeightedScheduler,
+    "class_reserved": ClassReservedScheduler,
 }

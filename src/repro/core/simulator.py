@@ -801,6 +801,8 @@ class SimCluster:
                     n_running=n_running.get(jid, 0),
                     remaining_work=jr.remaining_work,
                     alloc_capacity=alloc_cap.get(jid, 0.0),
+                    slo_class=jr.job.slo_class,
+                    deadline_t=jr.job.submit_t + jr.job.deadline_s,
                 )
                 for jid, jr in jrs.items()
                 if jr.arrived and jr.pending

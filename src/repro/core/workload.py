@@ -49,6 +49,20 @@ re-dispatch, and admission see scaling as ordinary capacity change.
 ``FleetResult.replica_seconds`` is the cost currency autoscaling is judged
 in. The registry contract for all four policy layers is documented in
 docs/architecture.md.
+
+PR 6 closes the chain proactively: ``run_fleet(hedge=True)`` races every
+deadline-critical (class-0, finite-deadline) request on two replicas at
+once — the router's pick plus the fastest idle reserve replica
+(``core/router.plan_hedge``; reserve share = ``FleetSpec.reserve_frac``).
+First completion wins, the loser is cancelled through the re-dispatch
+cancel path with its progress booked to ``FleetResult.duplicate_work``
+(the hedge tax, in the same work units as ``wasted_work``), and the trace
+gains ``hedge_dispatch`` / ``hedge_win`` / ``hedge_cancel``. The
+``class_reserved`` router keeps best-effort work off the fast replicas so
+a hedge target is standing idle when critical work arrives.
+``fleet_straggler`` is the claim-12 regime (benchmarks/bench_hedge.py):
+hedging + reservation must cut class-0 p99 below the claim-10
+re-dispatch baseline at a duplicate-work tax ≤ 15%.
 """
 
 from __future__ import annotations
@@ -83,6 +97,7 @@ from repro.core.router import (
     ReplicaView,
     Router,
     get_router,
+    plan_hedge,
     plan_redispatch,
     service_estimate_s,
 )
@@ -433,6 +448,9 @@ class FleetSpec:
     spawn_rate: float = 1.0  # capacity of a newly spawned replica
     warmup_s: float = 15.0  # cold-start lag: spawn decision → routable
     scale_check_s: float = 5.0  # autoscaler decision cadence
+    # class-0 reserve share (PR 6): consumed by the class_reserved router/
+    # scheduler and by hedged duplicate dispatch (run_fleet(hedge=True))
+    reserve_frac: float = 0.5
     description: str = ""
 
     @property
@@ -505,12 +523,23 @@ def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
 @dataclass(frozen=True)
 class Dispatch:
     """One attempt to serve a request on one replica. Re-dispatch cancels
-    the open attempt and opens a new one — both stay recorded."""
+    the open attempt and opens a new one — both stay recorded; a hedged
+    request (PR 6) holds *two* open attempts at once, and the one that
+    loses the race closes as ``hedge_loss``. ``progress`` is the work this
+    attempt had completed when it closed (always 0.0 for ``done`` — the
+    work is counted as served, not discarded): Σ progress over
+    ``hedge_loss`` attempts is exactly ``duplicate_work``, and Σ over
+    ``cancelled`` attempts is ``wasted_work`` — same currency, split by
+    cause. (On a replica death+recovery, ``wasted_work`` additionally
+    counts progress an attempt lost *without closing* — the restart keeps
+    the same Dispatch record — so the cancelled-sum equality is exact only
+    on runs without recoveries.)"""
 
     replica: int
     t: float
     end_t: float = -1.0
-    outcome: str = "open"  # done | cancelled | stranded
+    outcome: str = "open"  # done | cancelled | stranded | hedge_loss
+    progress: float = 0.0  # work completed by this attempt when it closed
 
 
 @dataclass(frozen=True)
@@ -562,6 +591,12 @@ class FleetResult:
     stranded: int  # admitted but never completed (degraded replica held them)
     wasted_work: float  # progress discarded by cancellations/restarts
     served_by: dict[int, int]  # replica → completions
+    # hedged duplicate dispatch (PR 6); with hedge=False all four stay at
+    # their defaults and the result is bit-identical to pre-hedge runs
+    hedge: bool = False
+    n_hedged: int = 0  # requests dispatched to two replicas
+    n_hedge_wins: int = 0  # races the hedge attempt won
+    duplicate_work: float = 0.0  # losing attempts' progress (the hedge tax)
     # autoscaling outcome (PR 5); with autoscale=None the pool is static,
     # so spawned/retired are 0 and replica_seconds = n_replicas × makespan
     autoscaler: str = "none"
@@ -695,11 +730,21 @@ class _ReplicaState:
 
 
 class _ReqState:
-    """Mutable per-request engine state for :func:`run_fleet`."""
+    """Mutable per-request engine state for :func:`run_fleet`.
+
+    A hedged request (PR 6) holds two live attempts at once: the primary
+    slot (``replica``/``dispatch_t``/``est_s``) and the hedge slot
+    (``hedge_replica``/…). The slots are symmetric in the engine — either
+    attempt may win the race; the loser's slot is cleared when its attempt
+    is cancelled. Invariant: the two slots never point at the same replica
+    (``plan_hedge`` excludes the primary, and re-dispatch can never move an
+    attempt onto the sibling's replica because that replica is not idle).
+    """
 
     __slots__ = (
         "req", "decision", "admit_t", "finish_t", "served_by", "dispatches",
         "replica", "dispatch_t", "est_s",
+        "hedge_replica", "hedge_dispatch_t", "hedge_est_s",
     )
 
     def __init__(self, req: JobRequest):
@@ -712,6 +757,9 @@ class _ReqState:
         self.replica: Optional[int] = None  # current assignment
         self.dispatch_t = -1.0
         self.est_s = 0.0
+        self.hedge_replica: Optional[int] = None  # live duplicate attempt
+        self.hedge_dispatch_t = -1.0
+        self.hedge_est_s = 0.0
 
 
 def run_fleet(
@@ -722,6 +770,7 @@ def run_fleet(
     redispatch: bool = True,
     late_factor: Optional[float] = None,
     autoscale: Union[str, Autoscaler, None] = None,
+    hedge: bool = False,
 ) -> FleetResult:
     """Replay a request stream through N heterogeneous sim-replicas.
 
@@ -763,10 +812,29 @@ def run_fleet(
     decision (warmup included — cold starts are not free) to its
     retirement or the end of the run.
 
+    With ``hedge=True`` (PR 6), every class-0 request with a finite
+    deadline may be dispatched to **two** replicas at once: the router's
+    pick plus the fastest idle reserve replica
+    (:func:`~repro.core.router.plan_hedge` over the same pre-dispatch
+    views, reserve share = ``spec.reserve_frac``). First completion wins;
+    the losing attempt is cancelled through the same cancel path
+    re-dispatch uses, its progress booked to ``duplicate_work`` (the hedge
+    tax — *not* ``wasted_work``, which remains the re-dispatch cost), and
+    exactly one completion is recorded: one ``request_done`` event, one
+    sojourn into the admission layer's class-p99 window, one
+    ``served_by`` credit. The race surfaces in the trace as
+    ``hedge_dispatch`` (duplicate opened), then ``hedge_win`` (the
+    duplicate finished first) and/or ``hedge_cancel`` (the losing attempt
+    closed). While both attempts are live the request is invisible to the
+    re-dispatch monitor — the hedge *is* its backup; if one attempt's
+    replica degrades, the monitor sees the surviving single attempt again
+    once the race resolves, and a stuck hedged pair still resolves through
+    whichever sibling finishes.
+
     Everything is pure arithmetic over a seeded stream, so the full
     :class:`FleetResult` — routing decisions, re-dispatches, completions,
     the trace — is bit-identical across replays of the same arguments,
-    autoscaling included.
+    autoscaling and hedging included.
     """
     spec = (
         FLEET_PRESETS[spec_or_name]
@@ -804,6 +872,9 @@ def run_fleet(
     n_deferred = [0]
     n_moves = [0]
     wasted = [0.0]
+    n_hedged = [0]
+    n_hedge_wins = [0]
+    duplicate = [0.0]
     makespan = [0.0]
     served_by = {i: 0 for i in range(len(workers))}
     n_spawned = [0]
@@ -848,6 +919,39 @@ def run_fleet(
         remaining = rs[rid].req.total_work
         push(t + remaining / max(st.cur_rate, 1e-9), "svc_done", (i, st.version))
 
+    # ---- per-attempt bookkeeping (hedging makes these two-valued) -------
+    def is_hedged(rid: int) -> bool:
+        """Both attempt slots live: the request is racing two replicas."""
+        r = rs[rid]
+        return r.replica is not None and r.hedge_replica is not None
+
+    def attempt_dispatch_t(rid: int, i: int) -> float:
+        r = rs[rid]
+        return r.hedge_dispatch_t if r.hedge_replica == i else r.dispatch_t
+
+    def attempt_est_s(rid: int, i: int) -> float:
+        r = rs[rid]
+        return r.hedge_est_s if r.hedge_replica == i else r.est_s
+
+    def close_attempt(rid: int, i: int, t: float, outcome: str,
+                      progress: float = 0.0) -> None:
+        """Close the open Dispatch record for ``rid``'s attempt on replica
+        ``i`` and clear that attempt slot. With hedging a request can hold
+        two open records at once, so the close must match on replica —
+        blindly closing ``dispatches[-1]`` would stamp the sibling."""
+        r = rs[rid]
+        for k in range(len(r.dispatches) - 1, -1, -1):
+            d = r.dispatches[k]
+            if d.outcome == "open" and d.replica == i:
+                r.dispatches[k] = replace(
+                    d, end_t=t, outcome=outcome, progress=progress
+                )
+                break
+        if r.hedge_replica == i:
+            r.hedge_replica = None
+        elif r.replica == i:
+            r.replica = None
+
     # ---- views ---------------------------------------------------------
     def backlog_work_of(i: int, t: float) -> float:
         st = repl[i]
@@ -864,7 +968,7 @@ def run_fleet(
             rids = outstanding_on(i)
             backlog = backlog_work_of(i, t)
             oldest = (
-                max(t - min(rs[r].dispatch_t for r in rids), 0.0)
+                max(t - min(attempt_dispatch_t(r, i) for r in rids), 0.0)
                 if rids
                 else 0.0
             )
@@ -917,18 +1021,25 @@ def run_fleet(
             next_probe[0] = t + spec.probe_s
             push(next_probe[0], "probe", None)
 
-    def dispatch(rid: int, dst: int, t: float) -> None:
+    def dispatch(rid: int, dst: int, t: float, slot: str = "primary") -> None:
         r = rs[rid]
-        r.replica = dst
-        r.dispatch_t = t
-        r.est_s = service_estimate_s(r.req.total_work, workers[dst].rate)
+        est = service_estimate_s(r.req.total_work, workers[dst].rate)
+        if slot == "primary":
+            r.replica = dst
+            r.dispatch_t = t
+            r.est_s = est
+        else:  # the duplicate attempt of a hedged pair
+            r.hedge_replica = dst
+            r.hedge_dispatch_t = t
+            r.hedge_est_s = est
         r.dispatches.append(Dispatch(replica=dst, t=t))
         repl[dst].queue.append(rid)
         start_service(dst, t)
         arm_probe(t)
 
     def route(rid: int, t: float) -> None:
-        choice = rtr.pick(rs[rid].req, replica_views(t))
+        views = replica_views(t)
+        choice = rtr.pick(rs[rid].req, views)
         if choice is None:  # every replica pronounced dead: park + retry
             parked.append(rid)
             trace.append(ChurnEvent(t, "route_parked", {"request": rid}))
@@ -937,6 +1048,21 @@ def run_fleet(
             ChurnEvent(t, "route", {"request": rid, "replica": choice})
         )
         dispatch(rid, choice, t)
+        if not hedge:
+            return
+        # hedge plan over the same pre-dispatch snapshot the router saw:
+        # both decisions are arithmetic over one consistent fleet state
+        target = plan_hedge(
+            rs[rid].req, choice, views, spec.reserve_frac
+        )
+        if target is not None:
+            n_hedged[0] += 1
+            trace.append(
+                ChurnEvent(t, "hedge_dispatch", {
+                    "request": rid, "primary": choice, "replica": target,
+                })
+            )
+            dispatch(rid, target, t, slot="hedge")
 
     def retry_parked(t: float) -> None:
         if parked and any(
@@ -989,20 +1115,26 @@ def run_fleet(
             next_adm_check[0] = nxt
             push(nxt, "admission_check", None)
 
-    # ---- re-dispatch (LATE-style rescue) -------------------------------
-    def cancel(rid: int, t: float) -> None:
-        r = rs[rid]
-        i = r.replica
+    # ---- re-dispatch (LATE-style rescue) + hedge-loser cancellation ----
+    def cancel(rid: int, i: int, t: float, outcome: str = "cancelled") -> None:
+        """Pull ``rid``'s attempt off replica ``i``. A re-dispatch cancel
+        books the discarded progress to ``wasted_work``; a ``hedge_loss``
+        cancel books it to ``duplicate_work`` — the losing attempt's work
+        was *duplicated*, not wasted by a rescue decision."""
         st = repl[i]
+        progress = 0.0
         if st.serving == rid:
-            wasted[0] += done_est(i, t)
+            progress = done_est(i, t)
             st.serving = None
             st.version += 1
             start_service(i, t)
         else:
             st.queue.remove(rid)
-        last = r.dispatches[-1]
-        r.dispatches[-1] = replace(last, end_t=t, outcome="cancelled")
+        if outcome == "hedge_loss":
+            duplicate[0] += progress
+        else:
+            wasted[0] += progress
+        close_attempt(rid, i, t, outcome, progress)
         if st.draining:  # a rescue can drain a degraded replica dry
             maybe_retire(i, t)
 
@@ -1013,6 +1145,11 @@ def run_fleet(
             inflight = []
             for i in range(len(repl)):
                 for rid in outstanding_on(i):
+                    if is_hedged(rid):
+                        # a racing pair is its own backup: the monitor
+                        # never rescues either sibling — first completion
+                        # resolves the race and cancels the loser
+                        continue
                     r = rs[rid]
                     remaining = r.req.total_work
                     if repl[i].serving == rid:
@@ -1020,17 +1157,19 @@ def run_fleet(
                     inflight.append(
                         InflightView(
                             request_id=rid, replica_id=i,
-                            age_s=t - r.dispatch_t, est_s=r.est_s,
+                            age_s=t - attempt_dispatch_t(rid, i),
+                            est_s=attempt_est_s(rid, i),
                             remaining_work=remaining,
                         )
                     )
             for rid, src, dst in plan_redispatch(inflight, views, late_f):
-                cancel(rid, t)
+                age = t - attempt_dispatch_t(rid, src)
+                cancel(rid, src, t)
                 n_moves[0] += 1
                 trace.append(
                     ChurnEvent(t, "redispatch", {
                         "request": rid, "from": src, "to": dst,
-                        "age_s": t - rs[rid].dispatch_t,
+                        "age_s": age,
                     })
                 )
                 dispatch(rid, dst, t)
@@ -1099,33 +1238,45 @@ def run_fleet(
         backlog that motivated the spawn, not just by future arrivals.
         """
         me = repl[i]
+
+        def movable(j: int) -> Optional[int]:
+            # last in FIFO (longest current wait) that may land here: a
+            # hedged attempt must never join its racing sibling's replica
+            for rid in reversed(repl[j].queue):
+                r = rs[rid]
+                sibling = r.hedge_replica if r.replica == j else r.replica
+                if not (is_hedged(rid) and sibling == i):
+                    return rid
+            return None
+
         while True:
-            donor, donor_bs = None, 0.0
+            donor, donor_bs, donor_rid = None, 0.0, None
             for j, stj in enumerate(repl):
                 if j == i or not stj.online or stj.retired or not stj.queue:
                     continue
+                cand = movable(j)
+                if cand is None:
+                    continue
                 bs = backlog_work_of(j, t) / max(stj.observed, 1e-9)
                 if bs > donor_bs:
-                    donor, donor_bs = j, bs
+                    donor, donor_bs, donor_rid = j, bs, cand
             if donor is None:
                 break
-            rid = repl[donor].queue[-1]  # last in FIFO: longest current wait
+            rid = donor_rid
             w = rs[rid].req.total_work
             my_rate = max(me.observed, 1e-9)
             finish_here = (backlog_work_of(i, t) + w) / my_rate
             if finish_here >= donor_bs:
                 break  # the move no longer helps anyone: queues are even
             repl[donor].queue.remove(rid)
-            r = rs[rid]
-            r.dispatches[-1] = replace(
-                r.dispatches[-1], end_t=t, outcome="cancelled"
-            )
+            slot = "hedge" if rs[rid].hedge_replica == donor else "primary"
+            close_attempt(rid, donor, t, "cancelled")
             trace.append(
                 ChurnEvent(t, "rebalance", {
                     "request": rid, "from": donor, "to": i,
                 })
             )
-            dispatch(rid, i, t)
+            dispatch(rid, i, t, slot=slot)
             if repl[donor].draining:
                 maybe_retire(donor, t)
 
@@ -1254,9 +1405,31 @@ def run_fleet(
             st.serving = None
             st.version += 1
             r = rs[rid]
+            # resolve a hedge race first: identify the losing sibling (if
+            # any) before the winner's close clears the attempt slots
+            hedge_won = r.hedge_replica == i
+            loser = r.replica if hedge_won else r.hedge_replica
             r.finish_t = t
             r.served_by = i
-            r.dispatches[-1] = replace(r.dispatches[-1], end_t=t, outcome="done")
+            close_attempt(rid, i, t, "done")
+            if loser is not None:
+                # first completion wins: cancel the losing attempt through
+                # the same path re-dispatch uses; its progress is the
+                # duplicate-work tax, and nothing else is recorded — one
+                # completion, one sojourn into the class-p99 window
+                cancel(rid, loser, t, outcome="hedge_loss")
+                trace.append(
+                    ChurnEvent(t, "hedge_cancel", {
+                        "request": rid, "replica": loser, "winner": i,
+                    })
+                )
+                if hedge_won:
+                    n_hedge_wins[0] += 1
+                    trace.append(
+                        ChurnEvent(t, "hedge_win", {
+                            "request": rid, "replica": i, "primary": loser,
+                        })
+                    )
             completed[0] += 1
             served_by[i] += 1
             makespan[0] = max(makespan[0], t)
@@ -1373,9 +1546,12 @@ def run_fleet(
     results = []
     for rid in sorted(rs):
         r = rs[rid]
-        dispatches = list(r.dispatches)
-        if r.finish_t < 0 and dispatches and dispatches[-1].outcome == "open":
-            dispatches[-1] = replace(dispatches[-1], outcome="stranded")
+        dispatches = [
+            replace(d, outcome="stranded")
+            if r.finish_t < 0 and d.outcome == "open"
+            else d
+            for d in r.dispatches
+        ]
         if r.decision == "admitted" and r.finish_t < 0:
             stranded += 1
         results.append(
@@ -1415,6 +1591,10 @@ def run_fleet(
         stranded=stranded,
         wasted_work=wasted[0],
         served_by=served_by,
+        hedge=hedge,
+        n_hedged=n_hedged[0],
+        n_hedge_wins=n_hedge_wins[0],
+        duplicate_work=duplicate[0],
         autoscaler=asc.name if asc is not None else "none",
         n_spawned=n_spawned[0],
         n_retired=n_retired[0],

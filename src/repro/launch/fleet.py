@@ -24,6 +24,19 @@ degraded replica is cancelled there (:meth:`ServeLoop.cancel`, generated
 tokens discarded) and re-enqueued on the fastest idle replica; both
 attempts are counted in the stats.
 
+Hedged duplicate dispatch (PR 6) is the proactive counterpart: with
+``hedge=True``, a deadline-critical request whose
+:func:`~repro.core.router.plan_hedge` trigger fires is enqueued on *two*
+replicas at admission — the router's pick plus a reserve replica — each
+holding its own :meth:`Request.clone_for_hedge` attempt. First completion
+wins; the loop cancels the loser through the same :meth:`ServeLoop.cancel`
+path re-dispatch uses, books its generated tokens as ``duplicate_tokens``
+(the hedging tax, same currency as ``cancelled_tokens``), and — when the
+hedge attempt won — copies the winner's tokens/timestamps onto the
+canonical request so fleet stats count exactly one completion. A racing
+pair is its own backup: hedged requests are invisible to the re-dispatch
+monitor and to spawn-time rebalancing, so no third attempt can exist.
+
 The pool is elastic (PR 5): an ``AUTOSCALE`` policy (core/autoscale.py —
 the same registry the simulator's ``run_fleet`` resolves, see
 docs/architecture.md) is consulted on a ``scale_check_s`` cadence with a
@@ -71,6 +84,7 @@ from repro.core.router import (
     ReplicaView,
     Router,
     get_router,
+    plan_hedge,
     plan_redispatch,
     service_estimate_s,
 )
@@ -92,6 +106,8 @@ class FleetLoop:
         autoscale: Union[str, Autoscaler, None] = None,
         replica_factory=None,  # () -> ServeLoop-compatible, for grow
         scale_check_s: float = 0.5,
+        hedge: bool = False,
+        reserve_frac: float = 0.5,
     ):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
@@ -105,6 +121,8 @@ class FleetLoop:
         self.autoscale = autoscale
         self.replica_factory = replica_factory
         self.scale_check_s = scale_check_s
+        self.hedge = hedge
+        self.reserve_frac = reserve_frac
         self._draining: set[int] = set()
         self._retired: set[int] = set()
         self._running = False
@@ -166,9 +184,17 @@ class FleetLoop:
             # ordinary measurement noise never reads as degradation — only
             # a sustained rate drop (a real straggler) crosses the margin
             nameplate = rep.peak_rate * self.headroom
+
+            def attempt_t(rid: int) -> float:
+                # a hedge attempt ages from its own enqueue, not from the
+                # primary's dispatch stamp
+                if self._hedge_where.get(rid) == i:
+                    return self._hedge_dispatch_t[rid]
+                return self._dispatch_t[rid]
+
             oldest = (
                 max(
-                    (t - self._dispatch_t[r] for r in rids if r in self._dispatch_t),
+                    (t - attempt_t(r) for r in rids if r in self._dispatch_t),
                     default=0.0,
                 )
                 if rids
@@ -216,10 +242,18 @@ class FleetLoop:
         self._est_s: dict[int, float] = {}
         self._where: dict[int, int] = {}
         self._done_hist: dict[int, list[float]] = {}
+        # hedged-pair books: rid -> hedge replica / enqueue stamp / the
+        # clone attempt racing there (a rid in _hedge_clone is mid-race)
+        self._hedge_where: dict[int, int] = {}
+        self._hedge_dispatch_t: dict[int, float] = {}
+        self._hedge_clone: dict[int, Request] = {}
         self._draining = set()
         self._retired = set()
         n_moves = 0
         cancelled_tokens = 0
+        n_hedged = 0
+        n_hedge_wins = 0
+        duplicate_tokens = 0
         n_spawned = 0
         n_drained = 0
         n_rebalanced = 0
@@ -266,9 +300,12 @@ class FleetLoop:
             rep.enqueue(r)
 
         def route(r: Request, t: float) -> None:
+            nonlocal n_hedged
             if asc is not None:
                 asc.note_request(ServeLoop.as_job_request(r))
-            choice = rtr.pick(ServeLoop.as_job_request(r), self._views(t))
+            jr = ServeLoop.as_job_request(r)
+            views = self._views(t)  # one snapshot for pick AND hedge plan
+            choice = rtr.pick(jr, views)
             if choice is None:
                 # every replica draining (all-dead cannot occur in-process):
                 # fall back to the least-backlogged live one — it still
@@ -279,6 +316,15 @@ class FleetLoop:
                 )
             routed_of[choice] = routed_of.get(choice, 0) + 1
             dispatch(r, choice, t)
+            if self.hedge:
+                target = plan_hedge(jr, choice, views, self.reserve_frac)
+                if target is not None:
+                    clone = r.clone_for_hedge()
+                    n_hedged += 1
+                    self._hedge_where[r.rid] = target
+                    self._hedge_dispatch_t[r.rid] = t
+                    self._hedge_clone[r.rid] = clone
+                    self.replicas[target].enqueue(clone)
 
         def resolve(r: Request, decision: str, t: float) -> None:
             if decision == ADMIT:
@@ -332,14 +378,23 @@ class FleetLoop:
                 for rid in rep.outstanding_rids():
                     if rid not in self._dispatch_t:
                         continue
+                    if rid in self._hedge_clone:
+                        # a racing hedged pair is its own backup: neither
+                        # attempt may be re-dispatched (a third attempt
+                        # would break first-completion-wins bookkeeping)
+                        continue
                     r = by_id[rid]
                     est = self._est_s.get(rid)
                     if est is None:
                         # dispatched before any measurement existed: backfill
-                        # from the replica's learned nameplate (fleet-best
-                        # when the replica never measured — e.g. it stalled
-                        # before its first decode completed)
-                        base = rep.peak_rate * self.headroom or fleet_peak[0]
+                        # from the replica's learned nameplate, floored at
+                        # the fleet-best. The old `a or b` fallback only
+                        # fired on *exactly* 0.0 — a stalled replica's
+                        # epsilon EMA (e.g. 1e-12 tok/s) slipped through as
+                        # a "measurement" and blew the estimate up to ~1e13
+                        # seconds, blinding the stuck monitor on precisely
+                        # the replica most likely to need a rescue
+                        base = max(rep.peak_rate * self.headroom, fleet_peak[0])
                         if base <= 0:
                             continue  # nothing measured fleet-wide yet
                         est = service_estimate_s(float(r.max_new), base)
@@ -382,21 +437,29 @@ class FleetLoop:
             )
             if est_rate <= 0:
                 return
+            def movable(j: int) -> list[int]:
+                # hedged pairs stay put: pulling either attempt onto
+                # another replica would desync the pair's books (and could
+                # co-locate both attempts on one replica)
+                queued = getattr(self.replicas[j], "queued_rids", None)
+                if queued is None:
+                    return []
+                return [q for q in queued() if q not in self._hedge_clone]
+
             while True:
                 donor, donor_bs = None, 0.0
                 for j in self._live_indices():
                     oj = self.replicas[j]
                     if j == dst or oj.tok_rate <= 0:
                         continue
-                    queued = getattr(oj, "queued_rids", None)
-                    if queued is None or not queued():
+                    if not movable(j):
                         continue
                     bs = oj.backlog_tokens() / oj.tok_rate
                     if bs > donor_bs:
                         donor, donor_bs = j, bs
                 if donor is None:
                     break
-                rid = self.replicas[donor].queued_rids()[-1]
+                rid = movable(donor)[-1]
                 r = by_id[rid]
                 # move only while the request finishes sooner on the fresh
                 # replica than its current queue position promises
@@ -468,6 +531,39 @@ class FleetLoop:
                 if self.replicas[i].idle:
                     self._draining.discard(i)
                     self._retired.add(i)
+            # resolve hedge races BEFORE the completion scan: the first
+            # attempt to finish wins, the loser is cancelled through the
+            # same ServeLoop.cancel path re-dispatch uses, and its tokens
+            # are booked as duplicate work — so by the time the scan runs,
+            # the canonical Request carries exactly the winner's state
+            for rid in list(self._hedge_clone):
+                r = by_id[rid]
+                clone = self._hedge_clone[rid]
+                if r.finished >= 0:
+                    # primary won (photo-finishes resolve to the primary:
+                    # its completion is already on the canonical request)
+                    h = self._hedge_where.pop(rid)
+                    del self._hedge_clone[rid]
+                    self._hedge_dispatch_t.pop(rid, None)
+                    self.replicas[h].cancel(rid)
+                    # whether the cancel landed or the clone finished in
+                    # the race, its generated tokens are duplicate work
+                    duplicate_tokens += len(clone.tokens)
+                elif clone.finished >= 0:
+                    # hedge won: discard the primary attempt and graft the
+                    # winner's tokens/timestamps onto the canonical request
+                    h = self._hedge_where.pop(rid)
+                    del self._hedge_clone[rid]
+                    self._hedge_dispatch_t.pop(rid, None)
+                    p = self._where.get(rid)
+                    if p is not None:
+                        self.replicas[p].cancel(rid)
+                    duplicate_tokens += len(r.tokens)
+                    n_hedge_wins += 1
+                    r.tokens = clone.tokens
+                    r.submitted = clone.submitted
+                    r.first_token = clone.first_token
+                    r.finished = clone.finished
             # completions feed the fleet-level latency history + policy
             for r in requests:
                 if r.finished >= 0 and r.rid in self._where:
@@ -524,6 +620,9 @@ class FleetLoop:
             "router": rtr.name,
             "redispatched": n_moves,
             "cancelled_tokens": cancelled_tokens,
+            "hedged": n_hedged,
+            "hedge_wins": n_hedge_wins,
+            "duplicate_tokens": duplicate_tokens,
             "routed_per_replica": [
                 routed_of.get(i, 0) for i in range(len(self.replicas))
             ],
@@ -599,6 +698,9 @@ def main(argv=None) -> dict:
                     help="policy name from core.autoscale.AUTOSCALE "
                          "(default: fixed pool)")
     ap.add_argument("--no-redispatch", action="store_true")
+    ap.add_argument("--hedge", action="store_true",
+                    help="hedged duplicate dispatch for deadline-critical "
+                         "requests (core.router.plan_hedge)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -616,6 +718,7 @@ def main(argv=None) -> dict:
         router=args.router, admission=args.admission,
         autoscale=args.autoscale,
         redispatch=not args.no_redispatch,
+        hedge=args.hedge,
     )
     stats = fleet.run_requests(reqs)
     print(

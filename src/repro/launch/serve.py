@@ -81,6 +81,25 @@ class Request:
     def queue_wait(self) -> float:
         return self.submitted - self.arrived
 
+    def clone_for_hedge(self) -> "Request":
+        """A second attempt of this request, for hedged dispatch (PR 6).
+
+        Same ``rid`` — the fleet's books are keyed by rid and first-
+        completion-wins is resolved there — but a fresh token list and
+        timing fields, because each replica session mutates the
+        ``Request`` it holds: two replicas must never share one mutable
+        object. Admission identity (arrival stamp, class, deadline)
+        carries over, so the clone is never re-judged and races as the
+        same logical request."""
+        return Request(
+            rid=self.rid,
+            prompt=self.prompt,
+            max_new=self.max_new,
+            arrived=self.arrived,
+            slo_class=self.slo_class,
+            deadline_s=self.deadline_s,
+        )
+
 
 class _Group:
     """Slots whose caches share a position, stacked along the batch axis.

@@ -1,0 +1,449 @@
+"""Class-aware reservation + hedged duplicate dispatch (PR 6): reserve-set
+arithmetic, `class_reserved` router/scheduler policy units, `plan_hedge`
+trigger/tie-break units, the cold-replica re-dispatch gate, hedged-run
+engine invariants (exactly-once completion under races, duplicate-work
+currency, bit-identical replay), and the FleetLoop hardware-path mirror
+(hedge win/loss lifecycles on stub replicas, pre-measurement estimate
+floor). Companion to benchmarks/bench_hedge.py (claim 12).
+"""
+
+import math
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admission import JobRequest
+from repro.core.router import (
+    InflightView,
+    ReplicaView,
+    plan_hedge,
+    plan_redispatch,
+    reserve_ids,
+    get_router,
+)
+from repro.core.scheduler import SCHEDULERS, JobView
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+
+def _view(rid=0, cap=1.0, nameplate=None, backlog=0.0, depth=0, age=0.0,
+          alive=True):
+    return ReplicaView(
+        replica_id=rid, capacity=cap,
+        nameplate=cap if nameplate is None else nameplate,
+        backlog_work=backlog, queue_depth=depth, oldest_age_s=age, alive=alive,
+    )
+
+
+def _req(rid=0, work=10.0, slo_class=0, deadline_s=60.0):
+    return JobRequest(job_id=rid, arrive_t=0.0, n_tasks=1, total_work=work,
+                      slo_class=slo_class, deadline_s=deadline_s)
+
+
+# ------------------------------------------------------------ reserve set
+
+
+def test_reserve_ids_smallest_fast_prefix():
+    """The reserve is the smallest prefix of fastest measured replicas
+    whose cumulative capacity covers reserve_frac of the total."""
+    views = [_view(0, cap=1.0), _view(1, cap=0.7), _view(2, cap=0.4)]
+    assert reserve_ids(views, 0.5) == {0, 1}  # 1.0 < 1.05 <= 1.7
+    assert reserve_ids(views, 0.4) == {0}  # 1.0 covers 0.84
+    assert reserve_ids(views, 1.0) == {0, 1, 2}
+    assert reserve_ids(views, 0.0) == set()
+
+
+def test_reserve_ids_ignores_dead_and_unmeasured():
+    views = [
+        _view(0, cap=2.0, alive=False),  # dead: not reservable
+        _view(1, cap=0.0),  # cold spawn, never measured
+        _view(2, cap=0.5),
+        _view(3, cap=0.5),
+    ]
+    # capacity total is the *measured live* 1.0; both measured replicas
+    # are needed to cover 0.9 of it
+    assert reserve_ids(views, 0.9) == {2, 3}
+    assert reserve_ids([_view(0, cap=0.0)], 0.5) == set()
+
+
+# ------------------------------------------------------ class_reserved router
+
+
+def test_class_reserved_keeps_best_effort_off_busy_reserve():
+    """A best-effort request avoids the reserve while it is occupied, even
+    when the reserve replica is the shorter backlog-seconds queue."""
+    r = get_router("class_reserved")
+    views = [
+        _view(0, cap=1.0, backlog=2.0, depth=1),  # reserve: short queue
+        _view(1, cap=0.4, backlog=4.0, depth=1),  # general: longer wait
+    ]
+    assert r.pick(_req(slo_class=1), views) == 1
+    # class 0 joins the shortest backlog-seconds queue fleet-wide
+    assert r.pick(_req(slo_class=0), views) == 0
+
+
+def test_class_reserved_spills_idle_reserve_to_best_effort():
+    """Spill-when-idle: an idle reserve replica serves best-effort rather
+    than sit empty (the paper's never-idle-a-slot rule)."""
+    r = get_router("class_reserved")
+    views = [
+        _view(0, cap=1.0),  # reserve, idle
+        _view(1, cap=0.4, backlog=8.0, depth=2),
+    ]
+    assert r.pick(_req(slo_class=1), views) == 0
+
+
+def test_class_reserved_premeasurement_falls_back_to_depth():
+    """Before any capacity is measured there is no reserve to respect —
+    the router degrades to least-loaded by queue depth, deterministically."""
+    r = get_router("class_reserved")
+    views = [_view(0, cap=0.0, depth=1, backlog=8.0), _view(1, cap=0.0)]
+    assert r.pick(_req(slo_class=1), views) == 1
+    assert r.pick(_req(slo_class=0), views) == 1
+
+
+# --------------------------------------------------- class_reserved scheduler
+
+
+class _Worker:
+    def __init__(self, rate):
+        self._rate = rate
+
+    def rate_at(self, t):
+        return self._rate
+
+
+def _job(jid, slo_class=0, deadline_t=math.inf, remaining=10.0, alloc=0.0,
+         submit_t=0.0):
+    return JobView(job_id=jid, submit_t=submit_t, n_pending=1, n_running=0,
+                   remaining_work=remaining, alloc_capacity=alloc,
+                   slo_class=slo_class, deadline_t=deadline_t)
+
+
+def test_class_reserved_scheduler_fast_slots_serve_class0_edf():
+    s = SCHEDULERS["class_reserved"]()
+    jobs = [
+        _job(0, slo_class=0, deadline_t=50.0),
+        _job(1, slo_class=0, deadline_t=20.0),
+        _job(2, slo_class=1, remaining=100.0),
+    ]
+    # fast worker (sets the high-water mark): earliest-deadline class 0
+    assert s.select(0.0, jobs, _Worker(1.0)) == 1
+    # slow worker (under reserve_frac x peak): best-effort by deficit
+    assert s.select(0.0, jobs, _Worker(0.3)) == 2
+
+
+def test_class_reserved_scheduler_spills_rather_than_idles():
+    s = SCHEDULERS["class_reserved"]()
+    s.select(0.0, [_job(0, slo_class=1)], _Worker(1.0))  # set peak mark
+    # a fast slot with no class-0 work serves best-effort
+    assert s.select(0.0, [_job(3, slo_class=1)], _Worker(1.0)) == 3
+    # a slow slot with only class-0 work serves it
+    assert s.select(0.0, [_job(4, slo_class=0, deadline_t=9.0)],
+                    _Worker(0.1)) == 4
+
+
+# ------------------------------------------------------------- plan_hedge
+
+
+def test_plan_hedge_gates_on_class_and_deadline():
+    views = [_view(0, cap=1.0, depth=1, backlog=5.0), _view(1, cap=1.0)]
+    assert plan_hedge(_req(slo_class=1), 0, views, 0.9) is None
+    assert plan_hedge(_req(slo_class=0, deadline_s=math.inf), 0, views,
+                      0.9) is None
+    assert plan_hedge(_req(slo_class=0), 0, views, 0.9) == 1
+
+
+def test_plan_hedge_idle_branch_fastest_then_id_tiebreak():
+    """The idle-reserve branch takes the fastest idle reserve replica;
+    exact capacity ties break by replica id — the determinism the replay
+    guarantee rides on."""
+    views = [
+        _view(0, cap=1.0, depth=1, backlog=5.0),  # busy primary
+        _view(2, cap=1.0),
+        _view(1, cap=1.0),
+    ]
+    assert plan_hedge(_req(), 0, views, 1.0) == 1
+    faster = views + [_view(3, cap=2.0)]
+    assert plan_hedge(_req(), 0, faster, 1.0) == 3
+
+
+def test_plan_hedge_skips_pure_waste():
+    """No hedge when the primary is idle, healthy, and at least as fast as
+    the best idle target: the duplicate could only lose."""
+    views = [_view(0, cap=2.0), _view(1, cap=1.0)]
+    assert plan_hedge(_req(), 0, views, 1.0) is None
+    # ...but a *slower* idle primary is worth insuring
+    views = [_view(0, cap=0.5), _view(1, cap=1.0)]
+    assert plan_hedge(_req(), 0, views, 1.0) == 1
+
+
+def test_plan_hedge_degraded_primary_queues_on_busy_reserve():
+    """When the router was forced onto a degraded replica and no reserve
+    replica is idle, the duplicate joins the shortest backlog-seconds
+    healthy reserve queue — risk is visible, insurance is bought at
+    dispatch (backlog-seconds ties break by id)."""
+    views = [
+        _view(0, cap=0.1, nameplate=1.0, backlog=1.0, depth=1),  # degraded
+        _view(1, cap=1.0, backlog=6.0, depth=2),
+        _view(2, cap=1.0, backlog=4.0, depth=1),
+    ]
+    assert plan_hedge(_req(), 0, views, 1.0) == 2
+    tie = [
+        _view(0, cap=0.1, nameplate=1.0, backlog=1.0, depth=1),
+        _view(2, cap=1.0, backlog=4.0, depth=1),
+        _view(1, cap=1.0, backlog=4.0, depth=1),
+    ]
+    assert plan_hedge(_req(), 0, tie, 1.0) == 1
+
+
+def test_plan_hedge_healthy_busy_primary_no_blanket_hedging():
+    """A busy-but-healthy primary with no idle reserve gets NO hedge:
+    blanket duplication under saturation displaces real work (measured in
+    bench_hedge tuning: it inflates p99 instead of cutting it)."""
+    views = [
+        _view(0, cap=1.0, backlog=5.0, depth=1),
+        _view(1, cap=1.0, backlog=6.0, depth=2),
+    ]
+    assert plan_hedge(_req(), 0, views, 1.0) is None
+
+
+def test_plan_hedge_never_targets_cold_or_degraded_replicas():
+    views = [
+        _view(0, cap=0.1, nameplate=1.0, backlog=1.0, depth=1),  # primary
+        _view(1, cap=0.0),  # cold spawn: unmeasured
+        _view(2, cap=0.2, nameplate=1.0),  # degraded too
+        _view(3, cap=0.0, alive=False),
+    ]
+    assert plan_hedge(_req(), 0, views, 1.0) is None
+
+
+# ------------------------------------------- cold-replica re-dispatch gate
+
+
+def test_plan_redispatch_skips_unmeasured_cold_replica():
+    """A just-spawned replica (capacity 0.0 until its warmup completes and
+    a rate is measured) must not receive rescued work — the satellite-2
+    regression: `alive and idle and not degraded` alone lets a cold spawn
+    through, because an unmeasured view has nameplate 0 and so never looks
+    degraded."""
+    stuck = [InflightView(request_id=7, replica_id=0, age_s=100.0, est_s=10.0,
+                          remaining_work=8.0)]
+    src = _view(0, cap=0.1, nameplate=1.0, backlog=8.0, depth=1, age=100.0)
+    cold = _view(1, cap=0.0)  # idle, alive, nameplate 0 -> not "degraded"
+    assert plan_redispatch(stuck, [src, cold]) == []
+    warm = _view(1, cap=0.8)
+    assert plan_redispatch(stuck, [src, warm]) == [(7, 0, 1)]
+
+
+# ------------------------------------------------------- engine invariants
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from(("class_reserved", "capacity_weighted")))
+@settings(max_examples=10, deadline=None)
+def test_exactly_once_completion_under_hedge_races(seed, router):
+    """Every request completes exactly once even when two attempts race:
+    however many dispatches a request accrued (primary, hedge, rescues),
+    exactly one carries outcome "done", the loser books to duplicate_work,
+    and the class-p99 window sees one sojourn per request."""
+    res = run_fleet("fleet_straggler", seed=seed, router=router,
+                    redispatch=True, hedge=True)
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    for r in res.requests:
+        assert sum(1 for d in r.dispatches if d.outcome == "done") == 1
+    done_events = [e for e in res.trace if e.kind == "request_done"]
+    assert len(done_events) == res.completed
+    assert len({e.detail["request"] for e in done_events}) == res.completed
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_duplicate_work_currency_pins(seed):
+    """duplicate_work is exactly the progress hedge losers discarded, and
+    wasted_work exactly the progress re-dispatch cancels discarded — same
+    work units, disjoint books (the satellite-3 no-double-count pin)."""
+    res = run_fleet("fleet_straggler", seed=seed, router="class_reserved",
+                    redispatch=True, hedge=True)
+    dup = sum(d.progress for r in res.requests for d in r.dispatches
+              if d.outcome == "hedge_loss")
+    was = sum(d.progress for r in res.requests for d in r.dispatches
+              if d.outcome == "cancelled")
+    assert abs(dup - res.duplicate_work) < 1e-9
+    assert abs(was - res.wasted_work) < 1e-9
+    assert res.n_hedge_wins <= res.n_hedged
+
+
+def test_hedged_run_fires_and_traces_the_full_vocabulary():
+    """On the claim-12 preset the mechanism demonstrably runs: hedges are
+    planned (hedge_dispatch), losers cancelled (hedge_cancel), and at
+    least one hedge beats its primary (hedge_win) — with coherent pairing
+    in the trace."""
+    res = run_fleet("fleet_straggler", seed=0, router="class_reserved",
+                    redispatch=True, hedge=True)
+    assert res.hedge and res.n_hedged > 0 and res.n_hedge_wins > 0
+    dispatches = [e for e in res.trace if e.kind == "hedge_dispatch"]
+    cancels = [e for e in res.trace if e.kind == "hedge_cancel"]
+    wins = [e for e in res.trace if e.kind == "hedge_win"]
+    assert len(dispatches) == res.n_hedged
+    assert len(wins) == res.n_hedge_wins
+    hedged_rids = {e.detail["request"] for e in dispatches}
+    for e in cancels:  # every cancel refers to a planned hedge pair
+        assert e.detail["request"] in hedged_rids
+        assert e.detail["replica"] != e.detail["winner"]
+    for e in wins:
+        assert e.detail["request"] in hedged_rids
+        assert e.detail["replica"] != e.detail["primary"]
+    assert res.duplicate_work >= 0.0
+
+
+def test_hedged_replay_bit_identical_across_churn():
+    """Same FleetResult — trace included — twice, with hedging enabled,
+    across the pod-death preset and the straggler preset (where hedges
+    win): dataclass equality catches any nondeterminism hedging added."""
+    for preset, seed in (("fleet_churny", 3), ("fleet_straggler", 0)):
+        a = run_fleet(preset, seed=seed, router="class_reserved",
+                      redispatch=True, hedge=True)
+        b = run_fleet(preset, seed=seed, router="class_reserved",
+                      redispatch=True, hedge=True)
+        assert a == b
+        assert a.n_hedged > 0  # the replay exercised the hedge paths
+
+
+def test_hedge_off_results_carry_no_hedge_artifacts():
+    res = run_fleet("fleet_straggler", seed=0, router="class_reserved",
+                    redispatch=True, hedge=False)
+    assert not res.hedge and res.n_hedged == 0 and res.n_hedge_wins == 0
+    assert res.duplicate_work == 0.0
+    assert not [e for e in res.trace if e.kind.startswith("hedge")]
+
+
+# ----------------------------------------------- FleetLoop hardware mirror
+
+
+from test_router import _StubReplica  # noqa: E402  (fast-tier stub)
+
+
+class _Premeasured(_StubReplica):
+    """Stub whose session opens with its rate already measured, so routing
+    and hedge planning see real capacities from the first request."""
+
+    def start(self, requests, prompt_len=None, t0=None):
+        super().start(requests, prompt_len, t0)
+        self.tok_rate = float(self.speed)
+        self.peak_rate = float(self.speed)
+
+
+class _DegradedStub(_Premeasured):
+    """Measured peak 4 but current EMA 0.05 — observably degraded — and
+    configurable actual service: serves `serve` tokens per request per
+    tick (0 = stuck straggler)."""
+
+    def __init__(self, serve=0):
+        super().__init__(4)
+        self.serve = serve
+
+    def start(self, requests, prompt_len=None, t0=None):
+        super().start(requests, prompt_len, t0)
+        self.tok_rate = 0.05
+        self.peak_rate = 4.0
+
+    def tick(self):
+        while self.ready and len(self.active) < self.batch:
+            r = self.ready.pop(0)
+            r.submitted = 0.0
+            self.active.append(r)
+        for r in list(self.active):
+            for _ in range(self.serve):
+                r.tokens.append(1)
+                if len(r.tokens) >= r.max_new:
+                    r.finished = time.perf_counter()
+                    self.active.remove(r)
+                    self.done.append(r)
+                    break
+        return "step"
+
+
+def _mk_requests(n, gen=8, deadline_s=30.0):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    return [Request(i, np.zeros(4, np.int32), gen, slo_class=0,
+                    deadline_s=deadline_s) for i in range(n)]
+
+
+def test_fleet_hedge_win_rescues_degraded_primary():
+    """A class-0 request routed onto the degraded replica is duplicated on
+    the healthy reserve replica; the hedge wins, the primary attempt is
+    cancelled, and the canonical request carries the winner's tokens —
+    exactly one fleet-level completion."""
+    from repro.launch.fleet import FleetLoop
+
+    fleet = FleetLoop([_Premeasured(2), _DegradedStub(serve=0)],
+                      router="class_reserved", redispatch=False, hedge=True)
+    reqs = _mk_requests(2)
+    stats = fleet.run_requests(reqs)
+    assert stats["completed"] == 2
+    assert stats["hedged"] == 1 and stats["hedge_wins"] == 1
+    assert stats["duplicate_tokens"] == 0  # the stuck primary generated none
+    assert stats["completed_per_replica"] == [2, 0]
+    for r in reqs:
+        assert r.finished >= 0 and len(r.tokens) == r.max_new
+
+
+def test_fleet_hedge_loser_clone_is_cancelled_not_counted():
+    """When the (degraded but still serving) primary wins, the clone is
+    cancelled off the reserve replica's queue and no completion is
+    double-counted — the request finished where it was first dispatched."""
+    from repro.launch.fleet import FleetLoop
+
+    fleet = FleetLoop([_Premeasured(1), _DegradedStub(serve=8)],
+                      router="class_reserved", redispatch=False, hedge=True)
+    reqs = _mk_requests(2)
+    stats = fleet.run_requests(reqs)
+    assert stats["completed"] == 2
+    assert stats["hedged"] == 1 and stats["hedge_wins"] == 0
+    assert sum(stats["completed_per_replica"]) == 2
+    for r in reqs:
+        assert r.finished >= 0 and len(r.tokens) == r.max_new
+
+
+class _EpsilonStalled(_StubReplica):
+    """Measures an *epsilon* rate (1e-12-scale EMA of a stalled decode)
+    and never finishes anything — the satellite-1 regression shape: under
+    the old `a or b` backfill its epsilon nameplate counted as a
+    measurement and the estimate blew up to ~1e13 seconds."""
+
+    def __init__(self):
+        super().__init__(1)
+
+    def tick(self):
+        while self.ready and len(self.active) < self.batch:
+            r = self.ready.pop(0)
+            r.submitted = 0.0
+            self.active.append(r)
+        self.tok_rate = 1e-13
+        self.peak_rate = max(self.peak_rate, 1e-12)
+        return "step"
+
+
+def test_fleet_premeasurement_estimate_floor_rescues_stalled_dispatch():
+    """A request dispatched before any measurement existed (est unknowable
+    at dispatch) onto a replica that then stalls at an epsilon EMA must
+    still be rescued: the backfilled estimate is floored at the fleet-best
+    nameplate, so the stuck monitor sees a sane est instead of ~1e13 s."""
+    from repro.launch.fleet import FleetLoop
+
+    fleet = FleetLoop([_EpsilonStalled(), _Premeasured(4)],
+                      router="round_robin", redispatch=True,
+                      probe_s=0.0, late_factor=0.001)
+    reqs = _mk_requests(2)
+    stats = fleet.run_requests(reqs)
+    assert stats["completed"] == 2
+    assert stats["redispatched"] >= 1  # the floor made the rescue possible
+    # the backfilled estimate is sane (fleet-best basis), not astronomical
+    assert all(est is not None and est < 60.0
+               for est in fleet._est_s.values())
+    for r in reqs:
+        assert r.finished >= 0 and len(r.tokens) == r.max_new

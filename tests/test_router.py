@@ -23,7 +23,12 @@ from repro.core.router import (
 )
 from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
 
-ALL_ROUTERS = ("round_robin", "capacity_weighted", "shortest_backlog")
+ALL_ROUTERS = (
+    "round_robin",
+    "capacity_weighted",
+    "shortest_backlog",
+    "class_reserved",
+)
 
 
 def _view(rid=0, cap=1.0, nameplate=None, backlog=0.0, depth=0, age=0.0,

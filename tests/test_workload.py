@@ -26,7 +26,7 @@ from repro.core.workload import (
     generate_workload,
 )
 
-ALL_SCHEDULERS = ("fifo", "fair", "fair_capacity", "capacity")
+ALL_SCHEDULERS = ("fifo", "fair", "fair_capacity", "capacity", "class_reserved")
 
 
 def _run_preset(name, scheduler, policy="late", seed=0, n_jobs=None):

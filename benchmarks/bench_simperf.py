@@ -1,0 +1,174 @@
+"""Claim 13 (incremental decision views): the fleet event loop sustains
+million-request replays, ≥10× the events/sec of the rebuild-on-demand loop.
+
+Every routing/admission/autoscale decision consumes the same
+``ReplicaView``/``PoolView`` snapshots. Pre-refactor the engine rebuilt
+them from scratch at every decision point — ``backlog_work`` re-summed
+every queued request, ``oldest_age_s`` re-scanned every outstanding
+dispatch, FIFO queues popped from the head of a list — so per-event cost
+grew with total queue depth and the loop turned superlinear exactly where
+the paper's heterogeneity story needs scale (a saturated 100+-replica
+fleet). Post-refactor (PR 7) the engine keeps per-replica accumulators
+patched at enqueue/dispatch/complete/re-rate time, assembles views in
+O(replicas), and memoizes the assembly behind an event-dirty stamp; the
+pre-refactor loop survives as ``legacy_views=True``, and the golden-trace
+harness in ``tests/test_simperf.py`` pins both engines bit-identical.
+
+This bench puts a floor under the win on ``fleet_million`` (120 replicas,
+diurnal overload). Tiers, all scaled-down slices of the same preset:
+
+* **ratio tier** (smoke + full): both engines replay the same 26 000-
+  request slice — the largest the legacy loop can afford in the verify
+  gate — and the bench **asserts** incremental events/sec ≥ 10× legacy.
+  Measured ~16× on the seed box; the floor leaves headroom for noise.
+  (At 10⁵ requests the legacy loop needs tens of minutes — the same
+  superlinearity the refactor removes — so the head-to-head is pinned at
+  the deepest slice that keeps the gate affordable.)
+* **throughput tiers** (full only): the incremental engine alone at 10⁵
+  and 10⁶ requests — the million-request headline, with events/sec,
+  per-class p99 and peak outstanding appended to ``BENCH_simperf.json``.
+
+Timed runs disable the cyclic GC (symmetrically, both engines): at 10⁶
+scale gen-2 scans over ~10⁶ live request records otherwise dominate, and
+the sim allocates no cycles on the hot path. Trace and per-request record
+collection are off (``collect_trace=False, collect_requests=False``);
+latency quantiles come from the ``sojourns_by_class`` fallback.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+from pathlib import Path
+
+from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+
+PRESET = "fleet_million"
+RATIO_N = 26_000  # deepest head-to-head slice the verify gate can afford
+FULL_NS = (100_000, 1_000_000)  # incremental-only throughput tiers
+SPEEDUP_FLOOR = 10.0  # the asserted events/sec multiple over legacy
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_simperf.json"
+
+
+def _slice(n: int) -> FleetSpec:
+    spec = FLEET_PRESETS[PRESET]
+    return FleetSpec(
+        **{
+            **{f: getattr(spec, f) for f in spec.__dataclass_fields__},
+            "n_requests": n,
+        }
+    )
+
+
+def timed_run(n: int, legacy: bool):
+    """One replay with the observability tax off and the GC parked."""
+    spec = _slice(n)
+    gc_was_on = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        res = run_fleet(
+            spec,
+            seed=0,
+            legacy_views=legacy,
+            collect_trace=False,
+            collect_requests=False,
+        )
+        wall = time.perf_counter() - t0
+    finally:
+        if gc_was_on:
+            gc.enable()
+        gc.collect()
+    assert res.completed + res.n_rejected == n, (n, legacy, res.completed)
+    assert res.stranded == 0, (n, legacy)
+    return res, wall
+
+
+def _append_trajectory(record: dict) -> None:
+    history = []
+    if TRAJECTORY.exists():
+        try:
+            history = json.loads(TRAJECTORY.read_text())
+        except (ValueError, OSError):
+            history = []  # a corrupt artifact must not fail the bench
+    history.append(record)
+    TRAJECTORY.write_text(json.dumps(history, indent=1) + "\n")
+
+
+def main(smoke: bool = False) -> list[str]:
+    spec = FLEET_PRESETS[PRESET]
+    rows: list[str] = []
+    print(f"({spec.description})")
+    print(f"{'engine':28s} {'requests':>9s} {'events':>9s} {'wall_s':>8s} "
+          f"{'events/s':>9s}")
+
+    # ---- ratio tier: both engines, same slice, same event stream --------
+    res_inc, wall_inc = timed_run(RATIO_N, legacy=False)
+    res_leg, wall_leg = timed_run(RATIO_N, legacy=True)
+    # same preset + seed → the two engines must process the identical
+    # event stream (the golden harness pins the full fingerprint; this is
+    # the bench-local conservation check)
+    assert res_inc.n_events == res_leg.n_events, (
+        res_inc.n_events, res_leg.n_events)
+    assert res_inc.completed == res_leg.completed
+    eps_inc = res_inc.n_events / wall_inc
+    eps_leg = res_leg.n_events / wall_leg
+    speedup = eps_inc / eps_leg
+    for label, res, wall, eps in (
+        ("incremental", res_inc, wall_inc, eps_inc),
+        ("legacy (rebuild-on-demand)", res_leg, wall_leg, eps_leg),
+    ):
+        print(f"{label:28s} {RATIO_N:>9,d} {res.n_events:>9,d} "
+              f"{wall:>8.2f} {eps:>9,.0f}")
+        rows.append(
+            f"simperf/{PRESET}@{RATIO_N}/{label.split()[0]},"
+            f"{wall * 1e6:.0f},events_per_s={eps:.0f}"
+        )
+    print(f"speedup {speedup:.1f}x (floor {SPEEDUP_FLOOR:.0f}x)")
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"incremental views cleared only {speedup:.1f}x the legacy loop's "
+        f"events/sec on {PRESET}@{RATIO_N} — the claim-13 floor is "
+        f"{SPEEDUP_FLOOR:.0f}x"
+    )
+
+    # ---- throughput tiers: incremental engine alone, up to 10⁶ ----------
+    tiers = {}
+    if not smoke:
+        for n in FULL_NS:
+            res, wall = timed_run(n, legacy=False)
+            eps = res.n_events / wall
+            p99 = {
+                cls: res.latency_quantile(0.99, slo_class=cls)
+                for cls in sorted(res.sojourns_by_class)
+            }
+            print(f"{'incremental':28s} {n:>9,d} {res.n_events:>9,d} "
+                  f"{wall:>8.2f} {eps:>9,.0f}   "
+                  + " ".join(f"c{c}_p99={v:,.0f}s" for c, v in p99.items()))
+            rows.append(
+                f"simperf/{PRESET}@{n}/incremental,"
+                f"{wall * 1e6:.0f},events_per_s={eps:.0f}"
+            )
+            tiers[n] = {"wall_s": round(wall, 2),
+                        "events": res.n_events,
+                        "events_per_s": round(eps),
+                        "class_p99_s": {c: round(v, 1) for c, v in p99.items()}}
+        _append_trajectory({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "preset": PRESET,
+            "ratio_n": RATIO_N,
+            "ratio_events": res_inc.n_events,
+            "eps_incremental": round(eps_inc),
+            "eps_legacy": round(eps_leg),
+            "speedup": round(speedup, 2),
+            "tiers": {str(n): t for n, t in tiers.items()},
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="ratio tier only (skip the 1e5/1e6 throughput runs)")
+    main(smoke=ap.parse_args().smoke)

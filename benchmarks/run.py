@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         bench_placement,
         bench_replication,
         bench_router,
+        bench_simperf,
         bench_speculation,
         bench_tuning,
         bench_workload,
@@ -55,6 +56,8 @@ def main(argv=None) -> None:
          lambda: bench_autoscale.main(smoke=opts.smoke)),
         ("claim12: class reservation + hedged duplicate dispatch",
          lambda: bench_hedge.main(smoke=opts.smoke)),
+        ("claim13: incremental decision views at million-request scale",
+         lambda: bench_simperf.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

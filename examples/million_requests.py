@@ -1,0 +1,82 @@
+"""A million requests through a 120-replica heterogeneous fleet (PR 7).
+
+The scale the incremental-view refactor exists for: ``fleet_million``
+replays 10^6 diurnal requests (peak:trough 1.7:0.3 around the mean rate)
+through 120 replicas of mixed hardware generations (1.0 / 0.7 / 0.4),
+three SLO classes riding along. The pre-refactor engine rebuilt every
+routing decision's view from scratch and turns superlinear here — tens of
+minutes for a few percent of this stream (``benchmarks/bench_simperf.py``
+asserts the ≥10x gap); the incremental engine holds thousands of
+events/sec for the whole replay.
+
+Run lean, the way the bench times it: no churn trace, no per-request
+records (10^6 of them are most of the allocation bill), cyclic GC off —
+per-class latency quantiles still work off the ``sojourns_by_class``
+fallback.
+
+    PYTHONPATH=src python examples/million_requests.py              # ~10 min
+    PYTHONPATH=src python examples/million_requests.py --n 100000   # a taste
+"""
+
+import argparse
+import gc
+import time
+
+from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+
+CLASS_NAMES = {0: "interactive", 1: "batch-soft", 2: "best-effort"}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=0,
+                    help="scale the request stream down (0 = full 10^6)")
+    ap.add_argument("--seed", type=int, default=0)
+    opts = ap.parse_args(argv)
+
+    spec = FLEET_PRESETS["fleet_million"]
+    if opts.n:
+        spec = FleetSpec(
+            **{
+                **{f: getattr(spec, f) for f in spec.__dataclass_fields__},
+                "n_requests": opts.n,
+            }
+        )
+    print(f"fleet_million: {spec.n_requests:,} {spec.arrival} requests, "
+          f"{len(spec.replica_rates)} replicas "
+          f"(rates {sorted(set(spec.replica_rates), reverse=True)}), "
+          f"mean interarrival {spec.mean_interarrival_s * 1e3:.0f}ms")
+
+    gc.disable()
+    t0 = time.perf_counter()
+    res = run_fleet(
+        spec,
+        seed=opts.seed,
+        router="capacity_weighted",
+        collect_trace=False,
+        collect_requests=False,
+    )
+    wall = time.perf_counter() - t0
+    gc.enable()
+
+    assert res.completed == spec.n_requests and res.stranded == 0
+    print(f"\n  completed        {res.completed:,} requests "
+          f"({res.n_events:,} loop events)")
+    print(f"  wall             {wall:,.1f}s  ->  "
+          f"{res.n_events / wall:,.0f} events/s, "
+          f"{res.completed / wall:,.0f} requests/s")
+    print(f"  sim makespan     {res.makespan:,.0f}s "
+          f"({res.makespan / wall:,.0f}x real time)")
+    print(f"  pool peak        {res.pool_peak} replicas online")
+    print(f"\n  {'class':13s} {'share':>6s} {'p50_s':>8s} {'p99_s':>9s}")
+    total = sum(len(v) for v in res.sojourns_by_class.values())
+    for cls in sorted(res.sojourns_by_class):
+        n_cls = len(res.sojourns_by_class[cls])
+        print(f"  {CLASS_NAMES.get(cls, str(cls)):13s} "
+              f"{n_cls / total:6.0%} "
+              f"{res.latency_quantile(0.5, slo_class=cls):8.1f} "
+              f"{res.latency_quantile(0.99, slo_class=cls):9.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Profile the fleet event loop: cProfile top-N over one preset replay.
+
+The tool that found every hot spot the PR-7 incremental-view refactor
+removed (brute view re-summation, list-head pops, per-view frozen-
+dataclass construction) — kept in-tree so the next regression is a
+one-liner to attribute:
+
+    PYTHONPATH=src python scripts/profile_fleet.py                 # hot loop
+    PYTHONPATH=src python scripts/profile_fleet.py --legacy        # old loop
+    PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_churny \\
+        --n 5000 --sort tottime --top 30
+
+Profiles with the observability tax off (no trace, no per-request
+records) and the cyclic GC disabled — the same configuration
+``benchmarks/bench_simperf.py`` times, so the profile explains the bench.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import gc
+import pstats
+import sys
+import time
+
+from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+
+
+def build_spec(preset: str, n: int | None) -> FleetSpec:
+    spec = FLEET_PRESETS[preset]
+    if n is None or n == spec.n_requests:
+        return spec
+    return FleetSpec(
+        **{
+            **{f: getattr(spec, f) for f in spec.__dataclass_fields__},
+            "n_requests": n,
+        }
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="fleet_million",
+                    choices=sorted(FLEET_PRESETS))
+    ap.add_argument("--n", type=int, default=20_000,
+                    help="override the preset's n_requests (0 = keep)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="profile the rebuild-on-demand engine instead")
+    ap.add_argument("--top", type=int, default=25,
+                    help="rows of the profile to print")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"])
+    opts = ap.parse_args(argv)
+
+    spec = build_spec(opts.preset, opts.n or None)
+    gc.disable()
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    res = run_fleet(
+        spec,
+        seed=0,
+        legacy_views=opts.legacy,
+        collect_trace=False,
+        collect_requests=False,
+    )
+    prof.disable()
+    wall = time.perf_counter() - t0
+    gc.enable()
+
+    engine = "legacy" if opts.legacy else "incremental"
+    print(f"{opts.preset} @ {spec.n_requests:,} requests, {engine} engine: "
+          f"{res.n_events:,} events in {wall:.2f}s "
+          f"({res.n_events / wall:,.0f} events/s, profiler overhead included)")
+    stats = pstats.Stats(prof, stream=sys.stdout)
+    stats.strip_dirs().sort_stats(opts.sort).print_stats(opts.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,14 +45,18 @@ python -m pytest -q tests/test_docs.py
 echo "== [4/4] benchmark smoke path =="
 # claim 8 (elastic re-mesh under churn), claim 9 (SLO-aware admission),
 # claim 10 (cross-replica routing + re-dispatch), claim 11 (replica
-# autoscaling) and claim 12 (class reservation + hedged dispatch) run
-# standalone first so a recovery/admission/routing/scaling/hedging
-# regression is attributed before the full sweep, then the whole sweep
+# autoscaling), claim 12 (class reservation + hedged dispatch) and claim
+# 13 (incremental-view events/sec floor) run standalone first so a
+# recovery/admission/routing/scaling/hedging/throughput regression is
+# attributed before the full sweep, then the whole sweep
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_elastic.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_admission.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_router.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_autoscale.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_hedge.py --smoke
+# claim 13's smoke tier is the asserted events/sec floor: both engines
+# replay the same fleet_million slice head-to-head (~90s, legacy-dominated)
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_simperf.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

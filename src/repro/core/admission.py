@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import copy
 import math
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Optional, Union
 
@@ -106,6 +107,38 @@ def trailing_class_p99(hist: Mapping[int, "list[float]"]) -> dict[int, float]:
     return {
         cls: quantile(h[-CLASS_P99_WINDOW:], 0.99) for cls, h in hist.items()
     }
+
+
+class ClassP99Window:
+    """Incremental producer of the :func:`trailing_class_p99` signal
+    (PR 7): per-class ``deque(maxlen=CLASS_P99_WINDOW)`` instead of an
+    unbounded sojourn history re-sliced per snapshot. ``snapshot()``
+    recomputes only after a :meth:`note` and always hands out a **new**
+    dict, so a view built earlier keeps the numbers it was built with.
+    Values and class insertion order match the brute-force path exactly
+    (a maxlen deque *is* the trailing window)."""
+
+    __slots__ = ("_hist", "_dirty", "_snap")
+
+    def __init__(self) -> None:
+        self._hist: dict[int, deque] = {}
+        self._dirty = False
+        self._snap: dict[int, float] = {}
+
+    def note(self, slo_class: int, sojourn_s: float) -> None:
+        h = self._hist.get(slo_class)
+        if h is None:
+            h = self._hist[slo_class] = deque(maxlen=CLASS_P99_WINDOW)
+        h.append(sojourn_s)
+        self._dirty = True
+
+    def snapshot(self) -> dict[int, float]:
+        if self._dirty:
+            self._snap = {
+                cls: quantile(list(h), 0.99) for cls, h in self._hist.items()
+            }
+            self._dirty = False
+        return self._snap
 
 
 @dataclass(frozen=True)
@@ -157,12 +190,16 @@ class AdmissionPolicy:
     name = "base"
 
     def __init__(self) -> None:
-        self._deferred: list[JobRequest] = []
+        # deque, not list: TokenBucket drains strictly FIFO and paid O(n)
+        # per release as a list (the PR-3 serve.py fix, finally applied
+        # to the policy layer); SloClasses' EDF removals stay O(n) either
+        # way but are bounded by the deferred depth, not the run length
+        self._deferred: deque = deque()
 
     # -- per-run lifecycle ----------------------------------------------
     def reset(self) -> None:
         """Clear per-run runtime state (subclasses extend; tuning stays)."""
-        self._deferred = []
+        self._deferred = deque()
 
     def fresh(self) -> "AdmissionPolicy":
         """A reset copy with the same tuning. Policies are stateful
@@ -297,10 +334,10 @@ class TokenBucketPolicy(AdmissionPolicy):
         while self._deferred:
             head = self._deferred[0]
             if head.total_work > self._burst:  # fleet shrank under the job
-                out.append((self._deferred.pop(0), REJECT))
+                out.append((self._deferred.popleft(), REJECT))
             elif self._tokens >= head.total_work:
                 self._tokens -= head.total_work
-                out.append((self._deferred.pop(0), ADMIT))
+                out.append((self._deferred.popleft(), ADMIT))
             else:
                 break
         return out

@@ -75,6 +75,7 @@ from __future__ import annotations
 import copy
 import math
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Callable, Mapping, Optional, Sequence, Union
 
 from repro.core.admission import JobRequest
@@ -108,28 +109,34 @@ class PoolView:
     n_warming: int = 0
     class_p99: Mapping[int, float] = field(default_factory=dict)
 
-    @property
+    # cached_property, not property: a PoolView is an immutable snapshot,
+    # but decide() implementations read these aggregates several times per
+    # tick — each re-walk of ``replicas`` is pure waste at 100+ replicas.
+    # (functools.cached_property stores into the instance ``__dict__``, so
+    # it coexists with ``frozen=True``; the values are identical floats —
+    # same sum, same order — just computed once.)
+    @cached_property
     def routable(self) -> list[ReplicaView]:
         """Replicas a router would currently consider (alive, not draining)."""
         return [v for v in self.replicas if v.alive]
 
-    @property
+    @cached_property
     def pool_size(self) -> int:
         """Committed serving capacity in replicas: routable + warming.
         Draining/pronounced replicas are on their way out and don't count."""
         return len(self.routable) + self.n_warming
 
-    @property
+    @cached_property
     def live_capacity(self) -> float:
         return sum(v.capacity for v in self.routable)
 
-    @property
+    @cached_property
     def backlog_work(self) -> float:
         """All outstanding work, including what draining replicas still
         hold — it occupies the fleet either way."""
         return sum(v.backlog_work for v in self.replicas)
 
-    @property
+    @cached_property
     def backlog_s(self) -> float:
         """Seconds of fleet backlog at the live measured rate — the same
         currency admission's ``threshold`` gates on and the router's

@@ -214,13 +214,25 @@ class CapacityWeightedRouter(Router):
     name = "capacity_weighted"
 
     def __init__(self) -> None:
-        self._credit: dict[int, float] = {}
+        # credit balances in a flat list aligned to the live-id roster
+        # (PR 7): the steady state — same fleet membership pick after
+        # pick — runs one fused credit/total/argmax loop over the views
+        # with no per-pick set, dict, or key-lambda allocation. The float
+        # arithmetic is the original's, op for op (credit then total in
+        # view order, first-max tie to the lower id, debit by the total),
+        # so replayed traces are bit-identical. Membership change (spawn,
+        # retire, death, re-registration) remaps balances by id: survivors
+        # keep theirs, vanished ids are dropped — a re-registered replica
+        # rejoins at parity rather than with a stale debt.
+        self._ids: list[int] = []
+        self._bal: list[float] = []
 
     def reset(self) -> None:
-        self._credit = {}
+        self._ids = []
+        self._bal = []
 
     def pick(self, req, views):
-        live = [v for v in _routable(views) if v.capacity > _EPS]
+        live = [v for v in views if v.alive and v.capacity > _EPS]
         if not live:
             # nothing measured yet (a real fleet before its first decode):
             # no proportions to weight by — spread by least-loaded so the
@@ -232,16 +244,25 @@ class CapacityWeightedRouter(Router):
                 any_live,
                 key=lambda v: (v.queue_depth, v.backlog_work, v.replica_id),
             ).replica_id
-        ids = {v.replica_id for v in live}
-        self._credit = {r: c for r, c in self._credit.items() if r in ids}
-        total = sum(v.capacity for v in live)
-        for v in live:
-            self._credit[v.replica_id] = (
-                self._credit.get(v.replica_id, 0.0) + v.capacity
-            )
-        best = max(live, key=lambda v: (self._credit[v.replica_id], -v.replica_id))
-        self._credit[best.replica_id] -= total
-        return best.replica_id
+        ids, bal = self._ids, self._bal
+        if len(live) != len(ids) or any(
+            v.replica_id != ids[k] for k, v in enumerate(live)
+        ):
+            old = dict(zip(ids, bal))
+            ids = self._ids = [v.replica_id for v in live]
+            bal = self._bal = [old.get(r, 0.0) for r in ids]
+        total = 0.0
+        best_k = 0
+        best_c = -math.inf
+        best_id = -1
+        for k, v in enumerate(live):
+            c = bal[k] + v.capacity
+            bal[k] = c
+            total += v.capacity
+            if c > best_c or (c == best_c and v.replica_id < best_id):
+                best_k, best_c, best_id = k, c, v.replica_id
+        bal[best_k] = best_c - total
+        return best_id
 
 
 class ShortestBacklogRouter(Router):
@@ -304,6 +325,17 @@ class ClassReservedRouter(Router):
 
     def __init__(self, reserve_frac: float = 0.5) -> None:
         self.reserve_frac = reserve_frac
+        # reserve-prefix cache (PR 7): the reserve set is pure arithmetic
+        # over (id, measured capacity) of the live fleet, which only moves
+        # on churn — re-sorting the fleet per request is waste. Keyed on
+        # the full (id, capacity) roster, so any membership or re-rate
+        # change rebuilds; same snapshot, same set, recomputed or not.
+        self._reserve_key: Optional[tuple] = None
+        self._reserve: set[int] = set()
+
+    def reset(self) -> None:
+        self._reserve_key = None
+        self._reserve = set()
 
     def pick(self, req, views):
         live = _routable(views)
@@ -314,7 +346,11 @@ class ClassReservedRouter(Router):
                 live,
                 key=lambda v: (v.queue_depth, v.backlog_work, v.replica_id),
             ).replica_id
-        reserve = reserve_ids(live, self.reserve_frac)
+        key = tuple((v.replica_id, v.capacity) for v in live)
+        if key != self._reserve_key:
+            self._reserve_key = key
+            self._reserve = reserve_ids(live, self.reserve_frac)
+        reserve = self._reserve
         if req.slo_class == 0:
             pool = live
         else:

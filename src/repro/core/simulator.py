@@ -55,7 +55,7 @@ from repro.core.admission import (
     JobRequest,
     get_policy,
     quantile as _quantile,
-    trailing_class_p99,
+    ClassP99Window,
 )
 from repro.core.heartbeat import Heartbeat, HeartbeatMonitor
 from repro.core.placement import Grain, PlacementPlan
@@ -568,6 +568,14 @@ class SimCluster:
             if job.job_id in jrs:
                 raise ValueError(f"duplicate job_id {job.job_id}")
             jrs[job.job_id] = _JobRun(job)
+        # incremental-view bookkeeping (PR 7): jobs still carrying work, in
+        # jrs insertion order, popped at the completion that finishes them —
+        # cluster_view walks this instead of re-testing every job per
+        # snapshot. A zero-grain job is born finished and never launches,
+        # so it is excluded here exactly as the per-snapshot test did.
+        unfinished: dict[int, _JobRun] = {
+            jid: jr for jid, jr in jrs.items() if not jr.finished()
+        }
         total_tasks = sum(len(jr.gmap) for jr in jrs.values())
         # tasks the run must complete before it can stop; rejections shrink it
         expected_tasks = [total_tasks]
@@ -595,7 +603,7 @@ class SimCluster:
         n_admitted = n_rejected = n_deferred = 0
         adm_reqs: dict[int, JobRequest] = {}
         deferred_ids: set[int] = set()
-        class_hist: dict[int, list[float]] = {}  # completed sojourns per class
+        p99win = ClassP99Window()  # completed-sojourn window per class
         total_nameplate = sum(w.rate for w in self.workers.values())
         heap: list[tuple[float, int, str, object]] = []
         seq = [0]
@@ -820,7 +828,7 @@ class SimCluster:
             )
 
         def cluster_view(t: float) -> ClusterView:
-            running = [jr for jr in jrs.values() if jr.arrived and not jr.finished()]
+            running = [jr for jr in unfinished.values() if jr.arrived]
             free = sum(
                 1
                 for loc, w in self.workers.items()
@@ -835,7 +843,7 @@ class SimCluster:
                 backlog_work=sum(jr.remaining_work for jr in running),
                 deferred_depth=len(deferred_ids),
                 deferred_work=sum(adm_reqs[j].total_work for j in deferred_ids),
-                class_p99=trailing_class_p99(class_hist),
+                class_p99=p99win.snapshot(),
             )
 
         def admit_job(jid: int, t: float) -> None:
@@ -1117,9 +1125,10 @@ class SimCluster:
                     n_spec_won += 1
                 if jr.finished():
                     jr.finish_t = t
+                    unfinished.pop(a.job, None)
                     if adm is not None:
                         sojourn = t - jr.job.submit_t
-                        class_hist.setdefault(jr.job.slo_class, []).append(sojourn)
+                        p99win.note(jr.job.slo_class, sojourn)
                         adm.on_job_done(t, adm_reqs[a.job], sojourn)
                 for other in jr.attempts_of.get(a.task, []):
                     if other is not a:

@@ -63,6 +63,21 @@ a hedge target is standing idle when critical work arrives.
 ``fleet_straggler`` is the claim-12 regime (benchmarks/bench_hedge.py):
 hedging + reservation must cut class-0 p99 below the claim-10
 re-dispatch baseline at a duplicate-work tax ≤ 15%.
+
+PR 7 makes the engine itself the measured artifact: decision views are
+assembled from per-replica accumulators patched at
+enqueue/dispatch/complete/re-rate time (deque FIFOs, incremental
+backlog-work, lazy-deletion oldest-dispatch heap, event-dirty view
+memo) instead of rebuilt by re-summation — O(replicas) per decision,
+bit-identical to the old loop, which survives as
+``run_fleet(legacy_views=True)`` (the golden-trace oracle;
+``check_views=True`` re-derives every accumulator by brute force and
+asserts agreement). Arrival streams of ≥4096 requests generate through
+numpy. ``fleet_million`` (10^6 diurnal requests, 120 replicas) is the
+claim-13 regime: benchmarks/bench_simperf.py asserts the incremental
+engine clears ≥10× the legacy loop's events/sec. The accumulator
+contract — which events must touch which bookkeeping — is documented in
+docs/architecture.md ("The incremental view contract").
 """
 
 from __future__ import annotations
@@ -70,18 +85,24 @@ from __future__ import annotations
 import heapq
 import math
 import random
+from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Optional, Union
+
+try:  # vectorized arrival generation for large-n fleet streams
+    import numpy as _np
+except Exception:  # pragma: no cover - numpy ships with the toolchain
+    _np = None
 
 from repro.core.admission import (
     ADMIT,
     DEFER,
     AdmissionPolicy,
+    ClassP99Window,
     ClusterView,
     JobRequest,
     get_policy,
     quantile as _quantile,
-    trailing_class_p99,
 )
 from repro.core.autoscale import (
     GROW,
@@ -458,11 +479,79 @@ class FleetSpec:
         return len(self.replica_rates)
 
 
+# Streams below this length keep the scalar ``random.Random`` path so
+# every existing preset replays its pre-PR-7 rng sequence bit-identically;
+# longer bursty/diurnal streams (fleet_million) use the vectorized numpy
+# generator, a distinct-but-deterministic stream seeded the same way.
+_VECTOR_MIN = 4096
+
+
+def _generate_fleet_requests_np(spec: FleetSpec, seed: int) -> list[JobRequest]:
+    """Vectorized (numpy) request generation for large bursty/diurnal
+    streams: one ``PCG64(seed)`` stream end to end, deterministic for a
+    given (spec, seed). Burst heads land exactly on their
+    ``b × burst_gap_s`` epoch (the segmented cumsum subtracts the head's
+    own prefix, so the offset is exactly zero there)."""
+    n = spec.n_requests
+    rng = _np.random.Generator(_np.random.PCG64(seed))
+    if spec.arrival == "bursty":
+        bl = max(spec.burst_len, 1)
+        gaps = rng.exponential(spec.mean_interarrival_s, n)
+        rids = _np.arange(n)
+        heads = rids % bl == 0
+        gaps[heads] = 0.0
+        cs = _np.cumsum(gaps)
+        b = rids // bl
+        arrivals = b * spec.burst_gap_s + (cs - cs[heads][b])
+    else:  # diurnal: rate at t depends on t, so only the draws vectorize
+        unit = rng.exponential(1.0, n).tolist()
+        arrivals = []
+        t = 0.0
+        two_pi = 2.0 * math.pi
+        amp, period = spec.diurnal_amp, spec.period_s
+        base = spec.mean_interarrival_s
+        for u in unit:
+            arrivals.append(t)
+            swing = 1.0 + amp * math.sin(two_pi * t / period)
+            t += u * (base / max(swing, 1e-6))
+    lo, hi = spec.work_per_request
+    works = rng.uniform(lo, hi, n).tolist()
+    if spec.slo_mix is not None:
+        w = _np.array([x for x, _, _ in spec.slo_mix], dtype=float)
+        cum = _np.cumsum(w / w.sum())
+        picks = _np.minimum(
+            _np.searchsorted(cum, rng.random(n), side="right"),
+            len(spec.slo_mix) - 1,
+        ).tolist()
+        classes = [spec.slo_mix[k][1] for k in picks]
+        deadlines = [spec.slo_mix[k][2] for k in picks]
+    else:
+        classes = [0] * n
+        deadlines = [math.inf] * n
+    at = arrivals if isinstance(arrivals, list) else arrivals.tolist()
+    return [
+        JobRequest(
+            job_id=rid, arrive_t=at[rid], n_tasks=1, total_work=works[rid],
+            slo_class=classes[rid], deadline_s=deadlines[rid],
+        )
+        for rid in range(n)
+    ]
+
+
 def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
     """Seeded request stream: arrivals, token budgets, optional SLO draws —
     ``random.Random(seed)`` end to end, so the same (spec, seed) pair is a
     bit-identical stream (the fleet-level mirror of
-    :func:`generate_workload`)."""
+    :func:`generate_workload`). Bursty/diurnal streams of
+    ``_VECTOR_MIN``-plus requests switch to the vectorized numpy generator
+    (same determinism contract, different — but fixed — stream); every
+    stream short enough to have a pre-PR-7 golden keeps the scalar path."""
+    if (
+        _np is not None
+        and spec.n_requests >= _VECTOR_MIN
+        and spec.arrival in ("bursty", "diurnal")
+    ):
+        return _generate_fleet_requests_np(spec, seed)
     rng = random.Random(seed)
     if spec.arrival == "bursty":
         # clumps of burst_len requests, burst_gap_s apart: each burst
@@ -604,8 +693,21 @@ class FleetResult:
     n_retired: int = 0  # replicas drained and removed by scale_down
     pool_peak: int = 0  # max simultaneously-online replicas
     replica_seconds: float = 0.0  # Σ per-replica online time (cost currency)
+    # simulator-throughput accounting (PR 7): loop events processed, and —
+    # when per-request records are skipped (collect_requests=False) — the
+    # per-class sojourn lists that keep latency_quantile working anyway
+    n_events: int = 0
+    sojourns_by_class: Optional[dict[int, list[float]]] = None
 
     def latencies(self, slo_class: Optional[int] = None) -> list[float]:
+        if not self.requests and self.sojourns_by_class is not None:
+            if slo_class is None:
+                out = [
+                    x for xs in self.sojourns_by_class.values() for x in xs
+                ]
+            else:
+                out = list(self.sojourns_by_class.get(slo_class, []))
+            return sorted(out)
         return sorted(
             r.latency
             for r in self.requests
@@ -691,7 +793,62 @@ FLEET_PRESETS: dict[str, FleetSpec] = {
         spawn_rate=1.0, warmup_s=15.0, scale_check_s=5.0,
         description="sinusoidal offered load over a 10-minute period",
     ),
+    # The claim-13 scale regime (benchmarks/bench_simperf.py): a million
+    # diurnal requests over 120 mixed-generation replicas (Σ nameplate
+    # 84 work/s), offered slightly above capacity at the mean so the
+    # above-capacity half of each one-hour cycle ratchets a deep fleet-wide
+    # backlog — exactly the regime where per-decision O(R×queue) view
+    # re-summation dominated the pre-PR-7 loop. No faults: this preset
+    # measures the loop itself, not the churn chain. bench_simperf's smoke
+    # tier runs a 10⁵-request slice of the same stream in both engines and
+    # asserts the incremental loop clears ≥10× the legacy events/sec.
+    "fleet_million": FleetSpec(
+        replica_rates=tuple(
+            (1.0, 0.7, 0.4)[i % 3] for i in range(120)
+        ),
+        n_requests=1_000_000,
+        arrival="diurnal", mean_interarrival_s=0.105,
+        period_s=3600.0, diurnal_amp=0.7,
+        work_per_request=(4.0, 16.0),
+        slo_mix=((0.2, 0, 600.0), (0.5, 1, 1800.0), (0.3, 2, math.inf)),
+        description="10^6 diurnal requests over 120 replicas: the simulator-throughput regime",
+    ),
 }
+
+
+# Queues at or below this depth re-sum their work accumulator exactly
+# (left-to-right, the same order as the brute-force sum), so every preset
+# whose queues stay shallow — all the golden-pinned ones — replays
+# bit-identically under the incremental engine; only queues deeper than
+# this (fleet_million's ratcheted backlog) carry the running value, where
+# ulp drift is tolerated because no golden covers that regime.
+_EXACT_RESUM_LEN = 128
+
+
+class _ListQueue(list):
+    """Pre-refactor queue shim for ``run_fleet(legacy_views=True)``: a
+    plain list whose ``popleft``/``appendleft`` are the O(n) ``pop(0)`` /
+    ``insert(0, ·)`` the loop shipped with, so the legacy arm of
+    bench_simperf pays the real pre-PR-7 drain cost while sharing one
+    call-site API with the deque the incremental engine uses."""
+
+    def popleft(self):
+        return self.pop(0)
+
+    def appendleft(self, rid) -> None:
+        self.insert(0, rid)
+
+
+class _NullTrace:
+    """``collect_trace=False`` sink: rare churn sites keep their plain
+    ``trace.append(...)`` calls and this swallows them; the hot per-request
+    sites guard on the flag explicitly so they skip even building the
+    event."""
+
+    __slots__ = ()
+
+    def append(self, ev) -> None:
+        pass
 
 
 class _ReplicaState:
@@ -703,18 +860,36 @@ class _ReplicaState:
     its view reports ``alive=False``, but it keeps serving its queue), and
     an empty drained replica retires (``retired``; it leaves the views and
     stops accruing replica-seconds).
+
+    ``queued_work`` and ``age_heap`` are the PR-7 incremental-view
+    accumulators (see docs/architecture.md, "incremental view contract"):
+    Σ work of the queued (unstarted) requests, and a lazy-deletion min-heap
+    of ``(dispatch_t, rid)`` entries over this replica's open attempts.
+    Every queue mutation must go through the engine's ``q_*`` helpers to
+    keep them in sync.
     """
 
     __slots__ = (
         "worker", "queue", "serving", "done_work", "seg_start", "cur_rate",
         "version", "observed", "pronounced",
         "online", "draining", "retired", "online_t", "offline_t",
+        "queued_work", "age_heap", "oldest_rid", "oldest_t0", "nameplate",
     )
 
     def __init__(self, worker: SimWorker, online: bool = True,
-                 online_t: float = 0.0):
+                 online_t: float = 0.0, legacy: bool = False):
         self.worker = worker
-        self.queue: list[int] = []  # rids waiting, FIFO
+        self.nameplate = worker.rate  # static; cached off the view hot loop
+        # rids waiting, FIFO (deque; the legacy engine keeps the old list)
+        self.queue = _ListQueue() if legacy else deque()
+        self.queued_work = 0.0  # Σ total_work over self.queue
+        self.age_heap: list[tuple[float, int]] = []
+        # memo of the last *validated* heap top (rid, dispatch_t): spares
+        # the per-view validity probe; close_attempt clears it when that
+        # attempt closes. New dispatches never beat it (sim time is
+        # monotone, so a new entry's t is >= the cached minimum).
+        self.oldest_rid = -1
+        self.oldest_t0 = 0.0
         self.serving: Optional[int] = None
         self.done_work = 0.0  # work done on the in-service request
         self.seg_start = 0.0  # when the current rate segment began
@@ -771,6 +946,10 @@ def run_fleet(
     late_factor: Optional[float] = None,
     autoscale: Union[str, Autoscaler, None] = None,
     hedge: bool = False,
+    legacy_views: bool = False,
+    check_views: bool = False,
+    collect_trace: bool = True,
+    collect_requests: bool = True,
 ) -> FleetResult:
     """Replay a request stream through N heterogeneous sim-replicas.
 
@@ -835,6 +1014,22 @@ def run_fleet(
     :class:`FleetResult` — routing decisions, re-dispatches, completions,
     the trace — is bit-identical across replays of the same arguments,
     autoscaling and hedging included.
+
+    PR 7 makes the loop itself a measured hot path. The default engine
+    keeps *incremental* decision views — per-replica queued-work
+    accumulators, a lazy-deletion oldest-dispatch heap, an event-dirtied
+    view cache, an O(1) outstanding counter — so ``replica_views`` is O(R)
+    assembly instead of O(R×queue) re-summation (the contract, and which
+    events must touch which accumulators, is documented in
+    docs/architecture.md). ``legacy_views=True`` runs the pre-refactor
+    rebuild-on-demand arithmetic (brute-force sums, list-backed ``pop(0)``
+    queues, full inflight rebuilds per probe) — the measured baseline
+    bench_simperf's ≥10× events/sec floor is asserted against.
+    ``check_views=True`` cross-checks every incremental view against the
+    brute force at build time (the property-test hook). At bench scale,
+    ``collect_trace=False`` / ``collect_requests=False`` skip building the
+    churn trace / per-request records; summary counters, ``n_events`` and
+    ``latency_quantile`` (via ``sojourns_by_class``) still work.
     """
     spec = (
         FLEET_PRESETS[spec_or_name]
@@ -861,12 +1056,19 @@ def run_fleet(
         if spec.replica_recover_s is not None:
             workers[i].recover_at = fail_t + spec.replica_recover_s
 
-    repl = [_ReplicaState(w) for w in workers]
+    legacy = legacy_views
+    repl = [_ReplicaState(w, legacy=legacy) for w in workers]
     rs = {r.job_id: _ReqState(r) for r in reqs}
-    trace: list[ChurnEvent] = []
+    trace_out: list[ChurnEvent] = []
+    trace = trace_out if collect_trace else _NullTrace()
     parked: list[int] = []  # admitted but unroutable (no live replica)
     deferred_ids: set[int] = set()
-    class_hist: dict[int, list[float]] = {}
+    p99win = ClassP99Window()
+    # per-class sojourns kept only when per-request records are skipped,
+    # so latency_quantile stays available at bench scale
+    sojourns: dict[int, list[float]] = {}
+    n_events = [0]
+    n_outstanding = [0]  # admitted, unfinished (the ClusterView depth)
     completed = [0]
     n_rejected = [0]
     n_deferred = [0]
@@ -894,6 +1096,81 @@ def run_fleet(
         seq[0] += 1
         heapq.heappush(heap, (t, seq[0], kind, payload))
 
+    # ---- incremental view bookkeeping (PR 7) ---------------------------
+    # The "incremental view contract" (docs/architecture.md): every queue
+    # mutation flows through q_push/q_pushleft/q_pop/q_remove so the
+    # per-replica queued-work accumulator stays in sync, every dispatch
+    # registers on the oldest-dispatch heap, and every state change that a
+    # view could observe bumps the dirty counter that invalidates the view
+    # cache. At shallow depth the accumulator is re-summed exactly
+    # (left-to-right, the brute-force order), so golden-pinned presets
+    # replay bit-identically; deeper queues carry the running value.
+    dirty = [0]
+
+    def touch() -> None:
+        dirty[0] += 1
+
+    def _resum(st: _ReplicaState) -> None:
+        if len(st.queue) <= _EXACT_RESUM_LEN:
+            acc = 0.0
+            for r in st.queue:
+                acc += rs[r].req.total_work
+            st.queued_work = acc
+
+    def q_push(i: int, rid: int) -> None:
+        # no re-sum needed on a tail append: if the accumulator equals the
+        # exact left-to-right queue sum before the push, then acc + w IS
+        # the left-to-right sum of the longer queue — exactness is
+        # preserved by construction. Only head/middle removals and head
+        # inserts (pop/remove/pushleft) can de-align the float order.
+        st = repl[i]
+        st.queue.append(rid)
+        st.queued_work += rs[rid].req.total_work
+        touch()
+
+    def q_pushleft(i: int, rid: int) -> None:
+        st = repl[i]
+        st.queue.appendleft(rid)
+        st.queued_work += rs[rid].req.total_work
+        _resum(st)
+        touch()
+
+    def q_pop(i: int) -> int:
+        st = repl[i]
+        rid = st.queue.popleft()
+        st.queued_work -= rs[rid].req.total_work
+        _resum(st)
+        touch()
+        return rid
+
+    def q_remove(i: int, rid: int) -> None:
+        st = repl[i]
+        st.queue.remove(rid)
+        st.queued_work -= rs[rid].req.total_work
+        _resum(st)
+        touch()
+
+    def note_dispatch(i: int, rid: int, t: float) -> None:
+        heapq.heappush(repl[i].age_heap, (t, rid))
+
+    def oldest_dispatch_t(i: int) -> Optional[float]:
+        """Exact min dispatch-t over the open attempts on replica ``i``:
+        lazy deletion — an entry whose attempt slot has since closed or
+        moved no longer matches the request's live slot state and is
+        discarded on read. No arithmetic, so the min equals the brute
+        ``min(attempt_dispatch_t(r, i) for r in outstanding)`` bit for
+        bit."""
+        h = repl[i].age_heap
+        while h:
+            t0, rid = h[0]
+            r = rs[rid]
+            if (r.replica == i and r.dispatch_t == t0) or (
+                r.hedge_replica == i and r.hedge_dispatch_t == t0
+            ):
+                return t0
+            heapq.heappop(h)
+        return None
+
     # ---- replica service mechanics ------------------------------------
     def done_est(i: int, t: float) -> float:
         st = repl[i]
@@ -904,13 +1181,13 @@ def run_fleet(
 
     def outstanding_on(i: int) -> list[int]:
         st = repl[i]
-        return ([st.serving] if st.serving is not None else []) + st.queue
+        return ([st.serving] if st.serving is not None else []) + list(st.queue)
 
     def start_service(i: int, t: float) -> None:
         st = repl[i]
         if st.serving is not None or not st.queue or not st.worker.alive(t):
             return
-        rid = st.queue.pop(0)
+        rid = q_pop(i)
         st.serving = rid
         st.done_work = 0.0
         st.seg_start = t
@@ -951,61 +1228,163 @@ def run_fleet(
             r.hedge_replica = None
         elif r.replica == i:
             r.replica = None
+        st_i = repl[i]
+        if st_i.oldest_rid == rid:
+            st_i.oldest_rid = -1  # memoized oldest just closed: re-derive
 
     # ---- views ---------------------------------------------------------
     def backlog_work_of(i: int, t: float) -> float:
         st = repl[i]
-        backlog = sum(rs[r].req.total_work for r in st.queue)
+        if legacy:
+            backlog = sum(rs[r].req.total_work for r in st.queue)
+        else:
+            backlog = st.queued_work
         if st.serving is not None:
             backlog += rs[st.serving].req.total_work - done_est(i, t)
         return backlog
 
+    def check_view(i: int, st: _ReplicaState, t: float,
+                   depth: int, t0: Optional[float]) -> None:
+        """check_views=True: the incremental accumulators must equal the
+        brute-force recomputation at this event boundary — exactly inside
+        the re-sum regime, to float tolerance beyond it."""
+        rids = outstanding_on(i)
+        assert depth == len(rids), (i, depth, len(rids))
+        brute_t0 = (
+            min(attempt_dispatch_t(r, i) for r in rids) if rids else None
+        )
+        assert t0 == brute_t0, (i, t0, brute_t0)
+        brute_q = sum(rs[r].req.total_work for r in st.queue)
+        if len(st.queue) <= _EXACT_RESUM_LEN:
+            assert st.queued_work == brute_q, (i, st.queued_work, brute_q)
+        else:
+            assert math.isclose(
+                st.queued_work, brute_q, rel_tol=1e-9, abs_tol=1e-6
+            ), (i, st.queued_work, brute_q)
+
+    views_cache: list = [-1.0, -1, None]  # [t, dirty stamp, views]
+
     def replica_views(t: float) -> list[ReplicaView]:
+        if legacy:
+            # pre-refactor arithmetic: re-sum every queue, re-min every
+            # attempt age, rebuild every snapshot — the measured baseline
+            # bench_simperf's events/sec floor is asserted against
+            out = []
+            for i, st in enumerate(repl):
+                if not st.online or st.retired:
+                    continue  # warming or retired: not in the fleet yet
+                rids = outstanding_on(i)
+                backlog = backlog_work_of(i, t)
+                oldest = (
+                    max(t - min(attempt_dispatch_t(r, i) for r in rids), 0.0)
+                    if rids
+                    else 0.0
+                )
+                out.append(
+                    ReplicaView(
+                        replica_id=i,
+                        capacity=st.observed,
+                        nameplate=st.worker.rate,
+                        backlog_work=backlog,
+                        queue_depth=len(rids),
+                        oldest_age_s=oldest,
+                        alive=not st.pronounced and not st.draining,
+                    )
+                )
+            return out
+        if views_cache[0] == t and views_cache[1] == dirty[0]:
+            return views_cache[2]  # no event since: the snapshot stands
+        # O(R) assembly, and a hot one (once per routing decision at 100+
+        # replicas), so the loop is hand-flattened: done_est and
+        # oldest_dispatch_t are inlined with their float ops in the
+        # original order (the min/max idioms below reproduce the builtins
+        # branch for branch), and views are built by filling the frozen
+        # dataclass's __dict__ directly — same immutable ReplicaView,
+        # without paying object.__setattr__ seven times per replica.
         out = []
+        out_append = out.append
+        rv_new = ReplicaView.__new__
+        heappop = heapq.heappop
         for i, st in enumerate(repl):
             if not st.online or st.retired:
                 continue  # warming or retired: not part of the fleet yet
-            rids = outstanding_on(i)
-            backlog = backlog_work_of(i, t)
-            oldest = (
-                max(t - min(attempt_dispatch_t(r, i) for r in rids), 0.0)
-                if rids
-                else 0.0
-            )
-            out.append(
-                ReplicaView(
-                    replica_id=i,
-                    capacity=st.observed,
-                    nameplate=st.worker.rate,
-                    backlog_work=backlog,
-                    queue_depth=len(rids),
-                    oldest_age_s=oldest,
-                    # draining reads as not-alive: the router stops picking
-                    # it (and re-dispatch may rescue off it) while it
-                    # finishes its own queue
-                    alive=not st.pronounced and not st.draining,
-                )
-            )
+            serving = st.serving
+            if serving is None:
+                depth = len(st.queue)
+                backlog = st.queued_work
+            else:
+                depth = len(st.queue) + 1
+                work = rs[serving].req.total_work
+                done = st.done_work + (t - st.seg_start) * st.cur_rate
+                if work < done:  # = min(work, done): service can't overrun
+                    done = work
+                backlog = st.queued_work + (work - done)
+            oldest = 0.0
+            if st.oldest_rid >= 0:  # memoized validated heap top
+                t0 = st.oldest_t0
+                if t > t0:  # = max(t - t0, 0.0)
+                    oldest = t - t0
+            else:
+                h = st.age_heap
+                while h:  # lazy-deletion min (see oldest_dispatch_t)
+                    t0, rid0 = h[0]
+                    r0 = rs[rid0]
+                    if (r0.replica == i and r0.dispatch_t == t0) or (
+                        r0.hedge_replica == i and r0.hedge_dispatch_t == t0
+                    ):
+                        st.oldest_rid = rid0
+                        st.oldest_t0 = t0
+                        if t > t0:  # = max(t - t0, 0.0)
+                            oldest = t - t0
+                        break
+                    heappop(h)
+            if check_views:
+                check_view(i, st, t, depth, oldest_dispatch_t(i))
+            v = rv_new(ReplicaView)
+            d = v.__dict__
+            d["replica_id"] = i
+            d["capacity"] = st.observed
+            d["nameplate"] = st.nameplate
+            d["backlog_work"] = backlog
+            d["queue_depth"] = depth
+            d["oldest_age_s"] = oldest
+            # draining reads as not-alive: the router stops picking it
+            # (and re-dispatch may rescue off it) while it finishes its
+            # own queue
+            d["alive"] = not st.pronounced and not st.draining
+            out_append(v)
+        views_cache[0] = t
+        views_cache[1] = dirty[0]
+        views_cache[2] = out
         return out
 
     def cluster_view(t: float) -> ClusterView:
         views = replica_views(t)
         live_cap = sum(v.capacity for v in views if v.alive)
-        outstanding = [
-            r for r in rs.values()
-            if r.decision == "admitted" and r.finish_t < 0
-        ]
+        if legacy:
+            outstanding = [
+                r for r in rs.values()
+                if r.decision == "admitted" and r.finish_t < 0
+            ]
+            depth = len(outstanding)
+        else:
+            depth = n_outstanding[0]
+            if check_views:
+                assert depth == sum(
+                    1 for r in rs.values()
+                    if r.decision == "admitted" and r.finish_t < 0
+                )
         backlog = sum(v.backlog_work for v in views)
         return ClusterView(
             time=t,
             live_capacity=live_cap,
             total_capacity=total_nameplate(),
             free_slots=sum(1 for v in views if v.alive and v.idle),
-            queue_depth=len(outstanding),
+            queue_depth=depth,
             backlog_work=backlog,
             deferred_depth=adm.n_deferred if adm is not None else 0,
             deferred_work=adm.deferred_work if adm is not None else 0.0,
-            class_p99=trailing_class_p99(class_hist),
+            class_p99=p99win.snapshot(),
         )
 
     def signal_capacity(t: float) -> None:
@@ -1033,7 +1412,8 @@ def run_fleet(
             r.hedge_dispatch_t = t
             r.hedge_est_s = est
         r.dispatches.append(Dispatch(replica=dst, t=t))
-        repl[dst].queue.append(rid)
+        q_push(dst, rid)
+        note_dispatch(dst, rid, t)
         start_service(dst, t)
         arm_probe(t)
 
@@ -1044,9 +1424,10 @@ def run_fleet(
             parked.append(rid)
             trace.append(ChurnEvent(t, "route_parked", {"request": rid}))
             return
-        trace.append(
-            ChurnEvent(t, "route", {"request": rid, "replica": choice})
-        )
+        if collect_trace:
+            trace.append(
+                ChurnEvent(t, "route", {"request": rid, "replica": choice})
+            )
         dispatch(rid, choice, t)
         if not hedge:
             return
@@ -1079,7 +1460,8 @@ def run_fleet(
         r = rs[rid]
         r.decision = "admitted"
         r.admit_t = t
-        if adm is not None:
+        n_outstanding[0] += 1
+        if adm is not None and collect_trace:
             trace.append(
                 ChurnEvent(t, "request_admitted", {
                     "request": rid,
@@ -1127,9 +1509,10 @@ def run_fleet(
             progress = done_est(i, t)
             st.serving = None
             st.version += 1
+            touch()
             start_service(i, t)
         else:
-            st.queue.remove(rid)
+            q_remove(i, rid)
         if outcome == "hedge_loss":
             duplicate[0] += progress
         else:
@@ -1138,10 +1521,43 @@ def run_fleet(
         if st.draining:  # a rescue can drain a degraded replica dry
             maybe_retire(i, t)
 
+    def _probe_rearm(t: float) -> bool:
+        # re-arm only while probing can still change something: with
+        # re-dispatch off, a request stranded on a dead replica must not
+        # keep the monitor (and the run) alive forever
+        if legacy:
+            outstanding = any(outstanding_on(i) for i in range(len(repl)))
+        else:
+            outstanding = any(
+                st.serving is not None or st.queue for st in repl
+            )
+        can_progress = any(
+            w.alive(t) or (w.recover_at is not None and w.recover_at > t)
+            for w in workers
+        )
+        return bool(((redispatch and outstanding) or parked) and can_progress)
+
+    def rescue_possible(views: list[ReplicaView]) -> bool:
+        """Mirror of :func:`plan_redispatch`'s two early-outs: no eligible
+        idle target, or no degraded replica to be stuck on, means the plan
+        is ``[]`` — so the probe can skip building the inflight snapshot
+        entirely. Must stay in lockstep with the router's filters."""
+        if not any(v.degraded for v in views):
+            return False
+        return any(
+            v.alive and v.idle and not v.degraded and v.capacity > 1e-9
+            for v in views
+        )
+
     def probe(t: float) -> None:
         next_probe[0] = math.inf
         if redispatch:
             views = replica_views(t)
+            if not legacy and not rescue_possible(views):
+                retry_parked(t)
+                if _probe_rearm(t):
+                    arm_probe(t)
+                return
             inflight = []
             for i in range(len(repl)):
                 for rid in outstanding_on(i):
@@ -1174,15 +1590,7 @@ def run_fleet(
                 )
                 dispatch(rid, dst, t)
         retry_parked(t)
-        outstanding = any(outstanding_on(i) for i in range(len(repl)))
-        can_progress = any(
-            w.alive(t) or (w.recover_at is not None and w.recover_at > t)
-            for w in workers
-        )
-        # re-arm only while probing can still change something: with
-        # re-dispatch off, a request stranded on a dead replica must not
-        # keep the monitor (and the run) alive forever
-        if ((redispatch and outstanding) or parked) and can_progress:
+        if _probe_rearm(t):
             arm_probe(t)
 
     # ---- pool lifecycle (PR 5 autoscaling) ------------------------------
@@ -1193,16 +1601,21 @@ def run_fleet(
             n_warming=sum(
                 1 for st in repl if not st.online and not st.retired
             ),
-            class_p99=trailing_class_p99(class_hist),
+            class_p99=p99win.snapshot(),
         )
 
     def maybe_retire(i: int, t: float) -> None:
         st = repl[i]
-        if st.draining and not st.retired and not outstanding_on(i):
+        if legacy:
+            busy = bool(outstanding_on(i))
+        else:
+            busy = st.serving is not None or bool(st.queue)
+        if st.draining and not st.retired and not busy:
             st.retired = True
             st.online = False
             st.offline_t = t
             n_retired[0] += 1
+            touch()
             trace.append(ChurnEvent(t, "replica_retired", {"replica": i}))
             signal_capacity(t)
 
@@ -1212,10 +1625,11 @@ def run_fleet(
         workers.append(w)
         # billed from the decision (online_t=t): the warmup lag is paid
         # capacity, which is exactly why scaling policies need cooldowns
-        st = _ReplicaState(w, online=False, online_t=t)
+        st = _ReplicaState(w, online=False, online_t=t, legacy=legacy)
         repl.append(st)
         served_by[i] = 0
         n_spawned[0] += 1
+        touch()
         warm_at = t + spec.warmup_s
         trace.append(
             ChurnEvent(t, "scale_up", {
@@ -1268,7 +1682,7 @@ def run_fleet(
             finish_here = (backlog_work_of(i, t) + w) / my_rate
             if finish_here >= donor_bs:
                 break  # the move no longer helps anyone: queues are even
-            repl[donor].queue.remove(rid)
+            q_remove(donor, rid)
             slot = "hedge" if rs[rid].hedge_replica == donor else "primary"
             close_attempt(rid, donor, t, "cancelled")
             trace.append(
@@ -1282,6 +1696,7 @@ def run_fleet(
 
     def drain(i: int, t: float, reason: str) -> None:
         repl[i].draining = True
+        touch()
         trace.append(
             ChurnEvent(t, "scale_down", {"replica": i, "reason": reason})
         )
@@ -1332,11 +1747,19 @@ def run_fleet(
         # probe's can-progress guard: with every replica dead for good the
         # policies can never act (no measured capacity → HOLD), so parked
         # work must not keep the scale-check chain — and the run — alive.
-        live_work = any(
-            st.online and not st.retired and st.worker.alive(t)
-            and outstanding_on(i)
-            for i, st in enumerate(repl)
-        )
+        if legacy:
+            live_work = any(
+                st.online and not st.retired and st.worker.alive(t)
+                and outstanding_on(i)
+                for i, st in enumerate(repl)
+            )
+        else:
+            live_work = any(
+                st.online and not st.retired
+                and (st.serving is not None or st.queue)
+                and st.worker.alive(t)
+                for st in repl
+            )
         can_progress = any(
             not st.retired and (
                 st.worker.alive(t)
@@ -1373,9 +1796,13 @@ def run_fleet(
     # ---- the event loop -------------------------------------------------
     while heap and completed[0] + n_rejected[0] < len(reqs):
         t, _, kind, payload = heapq.heappop(heap)
+        n_events[0] += 1
         if kind == "arrival":
             rid = payload
-            trace.append(ChurnEvent(t, "request_arrival", {"request": rid}))
+            if collect_trace:
+                trace.append(
+                    ChurnEvent(t, "request_arrival", {"request": rid})
+                )
             if asc is not None:
                 asc.note_request(rs[rid].req)  # deadline/budget learning
             if adm is None:
@@ -1404,6 +1831,7 @@ def run_fleet(
             rid = st.serving
             st.serving = None
             st.version += 1
+            touch()
             r = rs[rid]
             # resolve a hedge race first: identify the losing sibling (if
             # any) before the winner's close clears the attempt slots
@@ -1431,15 +1859,18 @@ def run_fleet(
                         })
                     )
             completed[0] += 1
+            n_outstanding[0] -= 1
             served_by[i] += 1
             makespan[0] = max(makespan[0], t)
             sojourn = t - r.req.arrive_t
-            class_hist.setdefault(r.req.slo_class, []).append(sojourn)
-            trace.append(
-                ChurnEvent(t, "request_done", {
-                    "request": rid, "replica": i, "latency_s": sojourn,
-                })
-            )
+            p99win.note(r.req.slo_class, sojourn)
+            sojourns.setdefault(r.req.slo_class, []).append(sojourn)
+            if collect_trace:
+                trace.append(
+                    ChurnEvent(t, "request_done", {
+                        "request": rid, "replica": i, "latency_s": sojourn,
+                    })
+                )
             if adm is not None:
                 adm.on_job_done(t, r.req, sojourn)
             start_service(i, t)
@@ -1453,6 +1884,7 @@ def run_fleet(
             new_rate = w.rate_at(t)
             slowed = new_rate < w.rate
             st.observed = new_rate
+            touch()
             trace.append(
                 ChurnEvent(t, "straggler_on" if slowed else "straggler_off",
                            {"replica": i, "factor": new_rate / w.rate})
@@ -1463,6 +1895,7 @@ def run_fleet(
                 st.seg_start = t
                 st.cur_rate = max(new_rate, 1e-9)
                 st.version += 1
+                touch()
                 remaining = rs[st.serving].req.total_work - st.done_work
                 push(t + remaining / st.cur_rate, "svc_done", (i, st.version))
         elif kind == "replica_fail":
@@ -1476,11 +1909,13 @@ def run_fleet(
                 st.seg_start = t
                 st.cur_rate = 0.0
             st.version += 1  # invalidate any scheduled completion
+            touch()
         elif kind == "pronounce":
             i = payload
             st = repl[i]
             if not st.worker.alive(t) and not st.pronounced:
                 st.pronounced = True
+                touch()
                 trace.append(ChurnEvent(t, "replica_dead", {"replica": i}))
                 signal_capacity(t)
         elif kind == "recover":
@@ -1489,6 +1924,7 @@ def run_fleet(
             was_pronounced = st.pronounced
             st.pronounced = False
             st.observed = st.worker.rate_at(t)
+            touch()
             trace.append(
                 ChurnEvent(
                     t,
@@ -1508,7 +1944,7 @@ def run_fleet(
                 wasted[0] += st.done_work
                 rid = st.serving
                 st.serving = None
-                st.queue.insert(0, rid)
+                q_pushleft(i, rid)
             st.version += 1
             start_service(i, t)
             signal_capacity(t)
@@ -1524,6 +1960,7 @@ def run_fleet(
             if not st.retired:  # warmup landed: the replica joins the fleet
                 st.online = True
                 st.observed = st.worker.rate
+                touch()
                 trace.append(ChurnEvent(t, "replica_warm", {"replica": i}))
                 pool_peak[0] = max(
                     pool_peak[0],
@@ -1544,7 +1981,15 @@ def run_fleet(
     # ---- wrap up --------------------------------------------------------
     stranded = 0
     results = []
-    for rid in sorted(rs):
+    if not collect_requests:
+        stranded = sum(
+            1 for r in rs.values()
+            if r.decision == "admitted" and r.finish_t < 0
+        )
+        rid_iter = ()
+    else:
+        rid_iter = sorted(rs)
+    for rid in rid_iter:
         r = rs[rid]
         dispatches = [
             replace(d, outcome="stranded")
@@ -1583,7 +2028,7 @@ def run_fleet(
         late_factor=late_f,
         makespan=makespan[0],
         requests=results,
-        trace=trace,
+        trace=trace_out,
         completed=completed[0],
         n_rejected=n_rejected[0],
         n_deferred=n_deferred[0],
@@ -1600,4 +2045,6 @@ def run_fleet(
         n_retired=n_retired[0],
         pool_peak=pool_peak[0],
         replica_seconds=replica_seconds,
+        n_events=n_events[0],
+        sojourns_by_class=sojourns,
     )

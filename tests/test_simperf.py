@@ -1,0 +1,536 @@
+"""Bit-identical-replay + perf-contract suite for the incremental-view
+engines (PR 7).
+
+The incremental-view refactor of ``run_fleet``/``run_workload`` (per-replica
+backlog accumulators, deque queues, event-invalidated view cache, lazy
+oldest-dispatch heaps — docs/architecture.md §"The incremental view
+contract") is an *optimization*: it must not drift a single churn event.
+This suite is the guard:
+
+* **Golden trace hashes** — every ``FLEET_PRESETS``/``PRESETS`` entry, run
+  across the (router, admission, autoscale, hedge) combinations the claims
+  exercise, is pinned to a sha256 fingerprint of its full trace + per-request
+  (or per-job) outcome, captured **pre-refactor** at the PR-7 base commit.
+  The incremental engine must reproduce every fingerprint bit-identically.
+  (``fleet_million`` post-dates the refactor, so it has no pre-refactor
+  hash; its guard is the legacy-vs-incremental identity below.)
+* **Legacy-engine identity** — ``run_fleet(legacy_views=True)`` keeps the
+  pre-refactor rebuild-on-demand path alive (it is also the honest baseline
+  ``benchmarks/bench_simperf.py`` measures the ≥10× events/sec floor
+  against); both paths must emit identical traces for any (spec, seed).
+* **Accumulator ≡ brute force** — ``run_fleet(check_views=True)`` asserts,
+  at every view build, that the incremental backlog/oldest-dispatch
+  bookkeeping equals brute-force re-summation over the queues; a hypothesis
+  sweep drives it through seeded churn.
+
+Capture mode (how the goldens were produced, at the pre-refactor commit)::
+
+    PYTHONPATH=src python tests/test_simperf.py --capture
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workload import (
+    FLEET_PRESETS,
+    PRESETS,
+    FleetSpec,
+    build_sim,
+    generate_fleet_requests,
+    run_fleet,
+)
+
+# --------------------------------------------------------------- fingerprints
+
+
+def _canon(v) -> str:
+    """Canonical token for a trace-detail value (repr is deterministic for
+    the int/float/str/bool payloads churn events carry)."""
+    return repr(v)
+
+
+def _trace_lines(events) -> list[str]:
+    return [
+        f"{e.time!r}|{e.kind}|"
+        + ",".join(f"{k}={_canon(v)}" for k, v in sorted(e.detail.items()))
+        for e in events
+    ]
+
+
+def fleet_fingerprint(res) -> str:
+    """sha256 over the full observable outcome of a fleet run: the churn
+    trace, every per-request decision/attempt record, and the summary
+    counters. Two runs with equal fingerprints made identical decisions at
+    identical times — the bit-identical-replay currency."""
+    lines = _trace_lines(res.trace)
+    for r in res.requests:
+        lines.append(
+            f"req {r.rid}|{r.decision}|{r.admit_t!r}|{r.finish_t!r}"
+            f"|{r.served_by}|"
+            + ";".join(
+                f"{d.replica}:{d.t!r}:{d.end_t!r}:{d.outcome}:{d.progress!r}"
+                for d in r.dispatches
+            )
+        )
+    lines.append(
+        f"sum {res.makespan!r}|{res.completed}|{res.n_rejected}"
+        f"|{res.n_deferred}|{res.n_redispatched}|{res.stranded}"
+        f"|{res.wasted_work!r}|{res.n_hedged}|{res.n_hedge_wins}"
+        f"|{res.duplicate_work!r}|{res.n_spawned}|{res.n_retired}"
+        f"|{res.pool_peak}|{res.replica_seconds!r}"
+        f"|{sorted(res.served_by.items())!r}"
+    )
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def workload_fingerprint(res) -> str:
+    """The run_workload mirror of :func:`fleet_fingerprint`: churn trace +
+    per-job outcomes + summary counters."""
+    lines = _trace_lines(res.churn)
+    for j in res.jobs:
+        lines.append(
+            f"job {j.job_id}|{j.decision}|{j.admit_t!r}|{j.submit_t!r}"
+            f"|{j.first_launch_t!r}|{j.finish_t!r}|{j.completed}|{j.n_tasks}"
+        )
+    lines.append(
+        f"sum {res.makespan!r}|{res.completed}|{res.wasted_work!r}"
+        f"|{res.moved_bytes!r}|{res.cross_pod_bytes!r}|{res.n_speculative}"
+        f"|{res.n_spec_won}|{res.reassigned_after_failure}"
+        f"|{res.re_replicated_bytes!r}|{res.re_replication_s!r}"
+        f"|{res.n_re_replicated}|{res.n_admitted}|{res.n_rejected}"
+        f"|{res.n_deferred}"
+    )
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+# ------------------------------------------------------------- golden cases
+#
+# One row per (preset × policy-combination) the claims exercise; every
+# FLEET_PRESETS / PRESETS entry appears at least once (checked below).
+# kwargs are run_fleet / run_workload arguments.
+
+FLEET_CASES: dict[str, tuple[str, dict]] = {
+    "hetero/cw": ("fleet_hetero", dict(router="capacity_weighted")),
+    "hetero/rr": ("fleet_hetero", dict(router="round_robin")),
+    "hetero/sb": ("fleet_hetero", dict(router="shortest_backlog")),
+    "hetero/cw+admit_all": ("fleet_hetero", dict(admission="admit_all")),
+    "hetero/cw+threshold": ("fleet_hetero", dict(admission="threshold")),
+    "straggler/cw+rd": ("fleet_straggler", dict(router="capacity_weighted")),
+    "straggler/rr-no-rd": (
+        "fleet_straggler",
+        dict(router="round_robin", redispatch=False),
+    ),
+    "straggler/reserved+hedge": (
+        "fleet_straggler",
+        dict(router="class_reserved", hedge=True),
+    ),
+    "straggler/cw+rd/seed1": (
+        "fleet_straggler",
+        dict(router="capacity_weighted", seed=1),
+    ),
+    "churny/cw+token_bucket": (
+        "fleet_churny",
+        dict(router="capacity_weighted", admission="token_bucket"),
+    ),
+    "churny/sb+slo_classes": (
+        "fleet_churny",
+        dict(router="shortest_backlog", admission="slo_classes"),
+    ),
+    "churny/reserved+hedge": (
+        "fleet_churny",
+        dict(router="class_reserved", hedge=True),
+    ),
+    "churny/cw+token_bucket/seed1": (
+        "fleet_churny",
+        dict(router="capacity_weighted", admission="token_bucket", seed=1),
+    ),
+    "bursty/cw+backlog_threshold": (
+        "fleet_bursty",
+        dict(autoscale="backlog_threshold"),
+    ),
+    "bursty/token_bucket+backlog_threshold": (
+        "fleet_bursty",
+        dict(admission="token_bucket", autoscale="backlog_threshold"),
+    ),
+    "bursty/cw+fixed": ("fleet_bursty", dict(autoscale="fixed")),
+    "diurnal/cw+backlog_threshold": (
+        "fleet_diurnal",
+        dict(autoscale="backlog_threshold"),
+    ),
+    "diurnal/sb+deadline_aware": (
+        "fleet_diurnal",
+        dict(router="shortest_backlog", autoscale="deadline_aware"),
+    ),
+}
+
+WORKLOAD_CASES: dict[str, tuple[str, dict]] = {
+    "hetero_2pod/fifo": ("hetero_2pod", dict(scheduler="fifo")),
+    "hetero_2pod/capacity": ("hetero_2pod", dict(scheduler="capacity")),
+    "homogeneous/capacity": ("homogeneous", dict(scheduler="capacity")),
+    "shuffle_heavy/fifo": ("shuffle_heavy", dict(scheduler="fifo")),
+    "faulty/capacity": ("faulty", dict(scheduler="capacity")),
+    "churny_3pod/capacity+static": (
+        "churny_3pod",
+        dict(scheduler="capacity", elastic="static"),
+    ),
+    "churny_3pod/capacity+reproportion": (
+        "churny_3pod",
+        dict(scheduler="capacity", elastic="reproportion"),
+    ),
+    "overload_2pod/admit_all": (
+        "overload_2pod",
+        dict(scheduler="capacity", admission="admit_all"),
+    ),
+    "overload_2pod/slo_classes": (
+        "overload_2pod",
+        dict(scheduler="capacity", admission="slo_classes"),
+    ),
+    "churny_3pod_slo/token_bucket+reproportion": (
+        "churny_3pod_slo",
+        dict(scheduler="capacity", admission="token_bucket", elastic=True),
+    ),
+}
+
+
+def _run_fleet_case(case: str):
+    preset, kwargs = FLEET_CASES[case]
+    kwargs = dict(kwargs)
+    seed = kwargs.pop("seed", 0)
+    return run_fleet(preset, seed=seed, **kwargs)
+
+
+def _run_workload_case(case: str):
+    preset, kwargs = WORKLOAD_CASES[case]
+    seed = dict(kwargs).pop("seed", 0)
+    sim, jobs = build_sim(preset, seed=seed)
+    kwargs = {k: v for k, v in kwargs.items() if k != "seed"}
+    return sim.run_workload(jobs, **kwargs)
+
+
+# Captured pre-refactor (PR-7 base commit, 9150401) via `--capture`; the
+# incremental engine must reproduce every hash bit-identically.
+FLEET_GOLDEN: dict[str, str] = {
+    "bursty/cw+backlog_threshold":
+        "4faee53629ade1ae73e3e2296173b7fa0f5b0dcb4b71737bec16bffede4997eb",
+    "bursty/cw+fixed":
+        "aa8a0359298942dd1dc27d7e69971c6dc1bc552b333e157e83e5f28f4bfa67ee",
+    "bursty/token_bucket+backlog_threshold":
+        "48e04dc4f9bb9ad22bd60f3ee932ccdec27d67dd761979966e36ec03b27f5a35",
+    "churny/cw+token_bucket":
+        "738fad60a058e0a0d270ba757178178df76e1765248b88725caf6fc98c71d472",
+    "churny/cw+token_bucket/seed1":
+        "e9deee7f188a4a13b262bb7245bd021a9a02caf652d89bc1db6c3a077ad6f6be",
+    "churny/reserved+hedge":
+        "782ccfbccae1468b49c9e479b4353f6460d9bd4d1ed511e681b0f0b10c80a62b",
+    "churny/sb+slo_classes":
+        "0da6d1d3925c4ca05068bfac9e7315c8a8d2ddd9a2f9cc037f6bb1e5f10c0ea4",
+    "diurnal/cw+backlog_threshold":
+        "62d37117e41b947475a0cf9333ecf3a5af3d2609d34ae1ffd307fde9c11d0338",
+    "diurnal/sb+deadline_aware":
+        "33abf27bbe48ed14d821c23440c6f32d7089737f73a350ffe0e9058203511e7d",
+    "hetero/cw":
+        "073aa34a64fac974d5a7eb8de43e238daaa749dbc8bec036760a7b1889417fbe",
+    "hetero/cw+admit_all":
+        "ba9c25f0edd88195f13061671d96ff892dcc807d70f4723c50b8d84c5e7a6a86",
+    "hetero/cw+threshold":
+        "ba9c25f0edd88195f13061671d96ff892dcc807d70f4723c50b8d84c5e7a6a86",
+    "hetero/rr":
+        "dce9a3d456b6e2b5f0cc1b05dabdcca06add71f56d6ca20b6f8021e64b31b966",
+    "hetero/sb":
+        "daec49a55fe69c0ebc474a7186839e78050107e2d4c8d27e4db9392f6da80f57",
+    "straggler/cw+rd":
+        "85154c9f4e93a1bdd3d965beeba651c837b7a9ec6a4366d894d0489392ba919f",
+    "straggler/cw+rd/seed1":
+        "7bbf6167be4d8550f5a9da879307c36ea616339229ee7cea067e901e17d6872c",
+    "straggler/reserved+hedge":
+        "59367e26363714610c32ea5de74f99654802f67e4a3d5644ff80b3455b0c55c4",
+    "straggler/rr-no-rd":
+        "70fc9046eb91e56a4d107b36a793a9c3087c725b3b0658a5bf147e79cb8ce5b0",
+}
+WORKLOAD_GOLDEN: dict[str, str] = {
+    "churny_3pod/capacity+reproportion":
+        "c3271dfb971e05a226fc688a7ad40001f9511a67b9a7206cc259bf5afe94bbea",
+    "churny_3pod/capacity+static":
+        "405519e6f09d1ad40aed09228b5d5c74a86d9dcc6aa95e3740ef60321d77bae3",
+    "churny_3pod_slo/token_bucket+reproportion":
+        "862cdee96ac6c3203c162a8e2cd831ffe211e5d2da71ca50fb335722132255fe",
+    "faulty/capacity":
+        "72acc544596143e2b401beeaf020304712e3ea3c7cac37a620b40cd9813355c9",
+    "hetero_2pod/capacity":
+        "1d73701cf9b3b9252ae9e7ec63f55fead4a49dcb456b00bf2c6cb30b6d9aa78e",
+    "hetero_2pod/fifo":
+        "9acc40d1e22aa41c9aa9c917754f19e41b028ec3b34eb6ef425b8db85bd65dbf",
+    "homogeneous/capacity":
+        "7012db091a0580c192e8fca82b509484df5bb680fc75ed2588246472ac167e5a",
+    "overload_2pod/admit_all":
+        "c7b40a3c94d7b997fd26fbc86f960a8166c232889cb526ebeb51a8e9acf94694",
+    "overload_2pod/slo_classes":
+        "0df2662700487d901d05cbc999c9250d1448ccd81a438d88fd5a74f6f3fbc43f",
+    "shuffle_heavy/fifo":
+        "20efb26164bfc374f40e56e831f1af8c885d93ef5540184f90986789ea0ee9e0",
+}
+
+
+def test_golden_cases_cover_every_preset():
+    """Every preset is pinned. ``fleet_million`` post-dates the refactor
+    (no pre-refactor hash can exist); its replay guard is the
+    legacy-vs-incremental identity test instead."""
+    fleet_covered = {preset for preset, _ in FLEET_CASES.values()}
+    assert fleet_covered | {"fleet_million"} >= set(FLEET_PRESETS)
+    assert {p for p, _ in WORKLOAD_CASES.values()} == set(PRESETS)
+    assert set(FLEET_GOLDEN) == set(FLEET_CASES)
+    assert set(WORKLOAD_GOLDEN) == set(WORKLOAD_CASES)
+
+
+@pytest.mark.parametrize("case", sorted(FLEET_CASES))
+def test_fleet_golden_replay(case):
+    assert fleet_fingerprint(_run_fleet_case(case)) == FLEET_GOLDEN[case], (
+        f"fleet trace drifted on {case}: the incremental-view engine made "
+        "a different decision somewhere in this replay"
+    )
+
+
+@pytest.mark.parametrize("case", sorted(WORKLOAD_CASES))
+def test_workload_golden_replay(case):
+    assert (
+        workload_fingerprint(_run_workload_case(case)) == WORKLOAD_GOLDEN[case]
+    ), (
+        f"workload churn drifted on {case}: the incremental-view engine "
+        "made a different decision somewhere in this replay"
+    )
+
+
+# ------------------------------------------------- legacy-engine identity
+
+
+@pytest.mark.parametrize(
+    "case",
+    ["straggler/reserved+hedge", "churny/cw+token_bucket",
+     "bursty/cw+backlog_threshold", "diurnal/sb+deadline_aware"],
+)
+def test_legacy_views_identical_on_claim_combos(case):
+    """The retained pre-refactor path (``legacy_views=True``) and the
+    incremental engine must be observably the same engine."""
+    preset, kwargs = FLEET_CASES[case]
+    kwargs = dict(kwargs)
+    seed = kwargs.pop("seed", 0)
+    fast = run_fleet(preset, seed=seed, **kwargs)
+    slow = run_fleet(preset, seed=seed, legacy_views=True, **kwargs)
+    assert fleet_fingerprint(fast) == fleet_fingerprint(slow)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from(
+        ["round_robin", "capacity_weighted", "shortest_backlog",
+         "class_reserved"]
+    ),
+)
+def test_legacy_views_identical_property(seed, router):
+    fast = run_fleet("fleet_churny", seed=seed, router=router, hedge=True)
+    slow = run_fleet(
+        "fleet_churny", seed=seed, router=router, hedge=True,
+        legacy_views=True,
+    )
+    assert fleet_fingerprint(fast) == fleet_fingerprint(slow)
+
+
+def test_fleet_million_legacy_identity_smoke():
+    """``fleet_million`` has no pre-refactor golden (the preset is new);
+    pin it by replaying a scaled-down slice through both engines."""
+    spec = FLEET_PRESETS["fleet_million"]
+    small = FleetSpec(
+        **{
+            **{f: getattr(spec, f) for f in spec.__dataclass_fields__},
+            "n_requests": 600,
+        }
+    )
+    fast = run_fleet(small, seed=0)
+    slow = run_fleet(small, seed=0, legacy_views=True)
+    assert fleet_fingerprint(fast) == fleet_fingerprint(slow)
+    assert fast.completed == 600
+
+
+# --------------------------------------- accumulator ≡ brute-force property
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_accumulators_equal_bruteforce(seed):
+    """``check_views=True`` re-sums every queue at every view build and
+    asserts the incremental accumulators (backlog work, queue depth,
+    oldest dispatch) match — driven through straggler + death + recovery
+    churn with hedging, the paths that mutate queues hardest."""
+    run_fleet("fleet_churny", seed=seed, router="class_reserved",
+              hedge=True, check_views=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_accumulators_equal_bruteforce_autoscale(seed):
+    """Same invariant through the autoscale pool lifecycle (spawn /
+    rebalance / drain / retire) — rebalance moves queued rids between
+    replicas, the hardest accumulator path."""
+    run_fleet("fleet_bursty", seed=seed, autoscale="backlog_threshold",
+              admission="token_bucket", check_views=True)
+
+
+# --------------------------------------------------- satellite regressions
+
+
+def test_deque_dispatch_order_unchanged():
+    """Satellite: queues moved from list.pop(0) to deque.popleft — FIFO
+    order must be observably unchanged: on a fault-free run each replica
+    completes its requests in exactly dispatch order."""
+    res = run_fleet("fleet_hetero", seed=3, router="round_robin")
+    assert res.completed == len(res.requests)
+    by_replica_dispatch: dict[int, list[tuple[float, int]]] = {}
+    by_replica_finish: dict[int, list[tuple[float, int]]] = {}
+    for r in res.requests:
+        assert len(r.dispatches) == 1  # no faults: exactly one attempt
+        d = r.dispatches[0]
+        by_replica_dispatch.setdefault(d.replica, []).append((d.t, r.rid))
+        by_replica_finish.setdefault(r.served_by, []).append(
+            (r.finish_t, r.rid)
+        )
+    for i, dispatched in by_replica_dispatch.items():
+        order_in = [rid for _, rid in sorted(dispatched)]
+        order_out = [rid for _, rid in sorted(by_replica_finish[i])]
+        assert order_in == order_out, f"replica {i} served out of FIFO order"
+
+
+def test_oldest_dispatch_incremental_equivalence():
+    """Satellite: stuck-age tracking moved from a per-view min() over all
+    in-flight attempts to a lazy min-heap; ``check_views=True`` pins the
+    equivalence at every view build on the preset whose re-dispatch /
+    death / recovery churn exercises stale heap entries hardest."""
+    res = run_fleet("fleet_straggler", seed=0, router="class_reserved",
+                    hedge=True, check_views=True)
+    assert res.n_redispatched > 0 or res.n_hedged > 0
+    res = run_fleet("fleet_churny", seed=2, check_views=True)
+    assert res.completed == len(res.requests)
+
+
+# ----------------------------------------------- vectorized arrival streams
+
+
+def test_vectorized_arrivals_deterministic_and_shaped():
+    """The numpy fast path (large-n bursty/diurnal streams) is seeded and
+    deterministic, emits monotone non-negative arrivals, and engages only
+    above the small-n cutoff — presets below it keep the original
+    ``random.Random`` sequences that the golden hashes pin."""
+    from repro.core import workload as w
+
+    spec = FLEET_PRESETS["fleet_million"]
+    big = FleetSpec(
+        **{
+            **{f: getattr(spec, f) for f in spec.__dataclass_fields__},
+            "n_requests": max(w._VECTOR_MIN, 8192),
+        }
+    )
+    a = generate_fleet_requests(big, seed=7)
+    b = generate_fleet_requests(big, seed=7)
+    c = generate_fleet_requests(big, seed=8)
+    assert len(a) == big.n_requests
+    assert [r.arrive_t for r in a] == [r.arrive_t for r in b]
+    assert [r.total_work for r in a] == [r.total_work for r in b]
+    assert [r.arrive_t for r in a] != [r.arrive_t for r in c]
+    ts = [r.arrive_t for r in a]
+    assert all(t2 >= t1 for t1, t2 in zip(ts, ts[1:]))
+    assert ts[0] == 0.0
+    lo, hi = big.work_per_request
+    assert all(lo <= r.total_work <= hi for r in a)
+    # the slo mix draw must hit every declared class
+    assert {r.slo_class for r in a} == {c for _, c, _ in big.slo_mix}
+    # bursty large-n path too
+    bursty = FleetSpec(
+        replica_rates=(1.0, 1.0), n_requests=max(w._VECTOR_MIN, 8192),
+        arrival="bursty", mean_interarrival_s=0.5, burst_len=64,
+        burst_gap_s=120.0,
+    )
+    x = generate_fleet_requests(bursty, seed=1)
+    y = generate_fleet_requests(bursty, seed=1)
+    assert [r.arrive_t for r in x] == [r.arrive_t for r in y]
+    xt = [r.arrive_t for r in x]
+    assert all(t2 >= t1 for t1, t2 in zip(xt, xt[1:]))
+    # burst heads land exactly on their epoch
+    assert xt[64] == 120.0 and xt[128] == 240.0
+
+
+def test_small_n_arrivals_keep_python_rng_sequence():
+    """Below the cutoff the original sequential ``random.Random`` stream is
+    used verbatim — a reference reimplementation must match exactly (this
+    is what keeps the pre-refactor preset goldens valid)."""
+    import random
+
+    spec = FLEET_PRESETS["fleet_diurnal"]
+    got = [r.arrive_t for r in generate_fleet_requests(spec, seed=5)]
+    rng = random.Random(5)
+    t, want = 0.0, []
+    for _ in range(spec.n_requests):
+        want.append(t)
+        swing = 1.0 + spec.diurnal_amp * math.sin(
+            2.0 * math.pi * t / spec.period_s
+        )
+        mean = spec.mean_interarrival_s / max(swing, 1e-6)
+        t += rng.expovariate(1.0 / mean)
+    assert got == want
+
+
+# ------------------------------------------------------- fleet_million shape
+
+
+def test_fleet_million_preset_shape():
+    spec = FLEET_PRESETS["fleet_million"]
+    assert spec.n_requests == 1_000_000
+    assert spec.n_replicas >= 100
+    assert spec.arrival == "diurnal"
+
+
+def test_collect_flags_preserve_summary():
+    """``collect_trace=False`` / ``collect_requests=False`` (the
+    million-request memory knobs) must not change any decision — only what
+    is recorded."""
+    full = run_fleet("fleet_straggler", seed=0)
+    lean = run_fleet("fleet_straggler", seed=0, collect_trace=False,
+                     collect_requests=False)
+    assert lean.trace == []
+    assert lean.requests == []
+    assert lean.makespan == full.makespan
+    assert lean.completed == full.completed
+    assert lean.n_redispatched == full.n_redispatched
+    assert lean.wasted_work == full.wasted_work
+    assert lean.served_by == full.served_by
+    assert lean.n_events == full.n_events > 0
+    # latency quantiles survive without per-request records
+    assert lean.latency_quantile(0.99) == full.latency_quantile(0.99)
+    assert lean.latency_quantile(0.5, slo_class=0) == full.latency_quantile(
+        0.5, slo_class=0
+    )
+
+
+# ------------------------------------------------------------- capture mode
+
+
+def _capture() -> None:  # pragma: no cover - capture tooling, run by hand
+    print("FLEET_GOLDEN = {")
+    for case in sorted(FLEET_CASES):
+        print(f'    "{case}":\n        "{fleet_fingerprint(_run_fleet_case(case))}",')
+    print("}")
+    print("WORKLOAD_GOLDEN = {")
+    for case in sorted(WORKLOAD_CASES):
+        print(f'    "{case}":\n        "{workload_fingerprint(_run_workload_case(case))}",')
+    print("}")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    import sys
+
+    if "--capture" in sys.argv:
+        _capture()

@@ -1,0 +1,259 @@
+"""Claim 14 (continuous batching): token-level slot-arena decode holds one
+dispatch per step under mixed-length traffic, beating the PR-3 cohort path
+by an asserted tok/s multiple exactly where cohorts degrade to ~batch-1.
+
+``ServeLoop`` serves the same request sets through its two batched decode
+paths (docs/architecture.md §"The serving loop"):
+
+* **arena** — one fixed-capacity stacked KV arena, a free-slot allocator,
+  per-slot position vector + active mask into a single fused
+  ``decode_step``+argmax dispatch per step, joins/leaves via index writes;
+* **cohort** — position-grouped stacked caches: uniform lengths share one
+  group (its best case, the baseline's ~3.7× claim), mixed prompt lengths
+  split into per-position groups that each pay their own dispatch every
+  step (its worst case, and the regime real traffic lives in).
+
+Two regimes, each over a seed sweep (admission off — this is a throughput
+bench, not a policy bench; both modes warm every distinct prompt length
+before the clock opens, the PR-3 rule):
+
+* **uniform** — identical prompt lengths, the cohort path's best case;
+  asserts arena seed-mean tok/s ≥ cohort's (continuous batching must not
+  tax the regime cohorts already handle; arena's fused argmax + allocator
+  replace the cohort's merge scan + logits round-trip).
+* **mixed** — cycling prompt lengths, one per slot; asserts arena ≥
+  ``MIXED_FLOOR``× cohort seed-mean (measured ~3× on the seed box: cohort
+  pays ~batch dispatches per step, the arena pays one — ``decode_calls``
+  and ``slot_occupancy`` in the stats are printed as the mechanism check).
+
+Plus a **kernel-level roofline fraction**: the arena decode step is the
+bandwidth-bound hot loop (one streaming pass over params + KV per token),
+so the bench times the jitted step standalone, divides bytes-streamed by
+the wall, and reports the fraction of this host's measured stream
+bandwidth (numpy copy, same-size working set) the decode path achieves —
+the measured-capacity twin of the analytic roofline in
+``benchmarks/roofline.py``. Reported, not asserted: the smoke config is
+dispatch-bound on purpose (tiny model, big batch effect).
+
+Results append to ``BENCH_decode.json`` so the tok/s trajectory across
+PRs stays visible; ``launch/fleet.py`` consumes the faster replica for
+free — the measured-capacity signal every routing/autoscale claim prices
+against now reflects a genuinely fast node (the paper's §IV.a discipline:
+capacity is measured, never assumed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+MIXED_FLOOR = 1.5  # asserted arena/cohort tok/s multiple, mixed lengths
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_decode.json"
+
+ARCH = "qwen3-1.7b-smoke"
+BATCH = 4
+UNIFORM_LENS = (16,)
+MIXED_LENS = (8, 12, 16, 20)
+
+
+def _build(seed: int):
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig
+    from repro.models import model as M
+
+    cfg = get_config(ARCH)
+    run = RunConfig(remat="none", attention_impl="xla", ssd_chunk=32)
+    params = M.init_model(jax.random.PRNGKey(seed), cfg)
+    return cfg, run, params
+
+
+def _requests(cfg, n: int, gen: int, lens: tuple[int, ...], seed: int):
+    from repro.data.dataset import SyntheticCorpus
+    from repro.launch.serve import Request
+
+    corpus = SyntheticCorpus(cfg.vocab_size, max(lens), seed)
+    return [
+        Request(i, corpus.grain_tokens(i, 1)[0][: lens[i % len(lens)]], gen)
+        for i in range(n)
+    ]
+
+
+def _run_mode(cfg, run, params, mode, reqs, lens, max_len) -> dict:
+    from repro.launch.serve import ServeLoop
+
+    loop = ServeLoop(
+        cfg, run, params, batch=BATCH, max_len=max_len,
+        admission=None, mode=mode,
+    )
+    for length in sorted(set(lens)):
+        loop.warm(length)
+    loop.start(reqs, t0=time.perf_counter())
+    while loop.tick() != "done":
+        pass
+    return loop.stats()
+
+
+def _roofline_fraction(cfg, run, params, max_len: int) -> dict:
+    """Achieved decode-step bandwidth vs this host's measured stream rate.
+
+    Bytes per step ≈ one pass over the params plus the live KV arena —
+    the decode loop's streaming working set (activations are noise at
+    batch 4). The peak is measured the same way the step is (wall-clock
+    around a memory-bound op), so the fraction compares like with like.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.serve import ServeLoop
+    from repro.models import model as M
+
+    loop = ServeLoop(
+        cfg, run, params, batch=BATCH, max_len=max_len, admission=None,
+        mode="arena",
+    )
+    loop.warm(max(UNIFORM_LENS))
+    arena = M.init_cache(cfg, BATCH, max_len)
+    toks = jnp.zeros((BATCH, 1), jnp.int32)
+    act = jnp.ones((BATCH,), bool)
+    loop._decode_arena(loop.params, arena, toks, act)  # compile
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out, arena = loop._decode_arena(loop.params, arena, toks, act)
+    jax.block_until_ready(out)
+    step_s = (time.perf_counter() - t0) / reps
+
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(params))
+    nbytes += sum(x.nbytes for x in jax.tree.leaves(arena))
+    achieved = nbytes / step_s
+
+    # measured stream peak: same-size numpy copy (beyond-cache working set)
+    src = np.zeros(max(nbytes, 64 << 20), np.uint8)
+    dst = np.empty_like(src)
+    t0 = time.perf_counter()
+    np.copyto(dst, src)
+    peak = 2 * src.nbytes / (time.perf_counter() - t0)  # read + write
+    return {
+        "step_us": round(step_s * 1e6, 1),
+        "bytes_per_step": nbytes,
+        "achieved_gbps": round(achieved / 1e9, 3),
+        "stream_peak_gbps": round(peak / 1e9, 2),
+        "roofline_fraction": round(achieved / peak, 4),
+    }
+
+
+def _append_trajectory(record: dict) -> None:
+    history = []
+    if TRAJECTORY.exists():
+        try:
+            history = json.loads(TRAJECTORY.read_text())
+        except (ValueError, OSError):
+            history = []  # a corrupt artifact must not fail the bench
+    history.append(record)
+    TRAJECTORY.write_text(json.dumps(history, indent=1) + "\n")
+
+
+def main(smoke: bool = False) -> list[str]:
+    seeds = (0, 1) if smoke else (0, 1, 2)
+    n_req, gen = (8, 16) if smoke else (12, 32)
+    max_len = max(MIXED_LENS) + gen + 1
+    rows: list[str] = []
+    regime_means: dict[str, dict[str, float]] = {}
+    mech: dict[str, dict] = {}
+
+    print(f"{ARCH} batch={BATCH} requests={n_req} gen={gen} seeds={seeds}")
+
+    # burn-in: the process's first serving session absorbs one-time host
+    # warm-up (allocator growth, frequency scaling) that would land on
+    # whichever (regime, mode, seed) cell happened to run first
+    cfg, run, params = _build(seeds[0])
+    _run_mode(cfg, run, params, "arena",
+              _requests(cfg, BATCH, 4, UNIFORM_LENS, 0), UNIFORM_LENS, max_len)
+
+    print(f"{'regime':8s} {'mode':7s} {'seed':>4s} {'tok/s':>8s} "
+          f"{'calls':>6s} {'occupancy':>9s}")
+    for regime, lens in (("uniform", UNIFORM_LENS), ("mixed", MIXED_LENS)):
+        rates: dict[str, list[float]] = {"arena": [], "cohort": []}
+        for seed in seeds:
+            cfg, run, params = _build(seed)
+            # alternate order across seeds so slow host drift cancels
+            modes = ("arena", "cohort") if seed % 2 == 0 else ("cohort", "arena")
+            for mode in modes:
+                reqs = _requests(cfg, n_req, gen, lens, seed)
+                st = _run_mode(cfg, run, params, mode, reqs, lens, max_len)
+                assert st["completed"] == n_req, (regime, mode, st)
+                rates[mode].append(st["tokens_per_s"])
+                mech[f"{regime}/{mode}"] = {
+                    "decode_calls": st["decode_calls"],
+                    "decode_steps": st["decode_steps"],
+                    "slot_occupancy": round(st["slot_occupancy"], 3),
+                }
+                print(f"{regime:8s} {mode:7s} {seed:>4d} "
+                      f"{st['tokens_per_s']:>8.1f} {st['decode_calls']:>6d} "
+                      f"{st['slot_occupancy']:>9.2f}")
+        means = {m: sum(v) / len(v) for m, v in rates.items()}
+        regime_means[regime] = means
+        ratio = means["arena"] / means["cohort"]
+        print(f"{regime:8s} seed-mean arena {means['arena']:.1f} tok/s vs "
+              f"cohort {means['cohort']:.1f} → {ratio:.2f}x")
+        for m in ("arena", "cohort"):
+            rows.append(
+                f"decode/{regime}/{m},{1e6 / means[m]:.0f},tok_per_s={means[m]:.1f}"
+            )
+
+    # the mechanism behind the ratio: one dispatch per step, full occupancy
+    mixed_arena = mech["mixed/arena"]
+    assert mixed_arena["decode_calls"] < mixed_arena["decode_steps"], mech
+
+    uni = regime_means["uniform"]
+    mix = regime_means["mixed"]
+    assert uni["arena"] >= uni["cohort"], (
+        f"claim 14: arena {uni['arena']:.1f} tok/s fell below the cohort "
+        f"path's {uni['cohort']:.1f} on uniform lengths — continuous "
+        "batching must not tax the cohort path's best case"
+    )
+    mixed_ratio = mix["arena"] / mix["cohort"]
+    assert mixed_ratio >= MIXED_FLOOR, (
+        f"claim 14: arena cleared only {mixed_ratio:.2f}x the cohort path "
+        f"on mixed lengths — the asserted floor is {MIXED_FLOOR}x"
+    )
+
+    cfg, run, params = _build(0)
+    roof = _roofline_fraction(cfg, run, params, max_len)
+    print(f"kernel roofline: {roof['achieved_gbps']} GB/s of "
+          f"{roof['stream_peak_gbps']} GB/s stream peak "
+          f"({roof['roofline_fraction']:.1%}) at {roof['step_us']} us/step")
+    rows.append(
+        f"decode/roofline,{roof['step_us']:.0f},"
+        f"fraction={roof['roofline_fraction']:.4f}"
+    )
+
+    _append_trajectory({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": smoke,
+        "arch": ARCH,
+        "batch": BATCH,
+        "gen": gen,
+        "requests": n_req,
+        "seeds": list(seeds),
+        "tok_per_s": {
+            r: {m: round(v, 2) for m, v in ms.items()}
+            for r, ms in regime_means.items()
+        },
+        "mixed_ratio": round(mixed_ratio, 3),
+        "mechanism": mech,
+        "roofline": roof,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer seeds/requests (the verify-gate tier)")
+    main(smoke=ap.parse_args().smoke)

@@ -4,8 +4,11 @@ Prints a ``name,us_per_call,derived`` CSV block at the end, per the repo
 convention. The dry-run/roofline section reads whatever cells exist under
 results/dryrun (produced by `python -m repro.launch.dryrun --all`).
 
-``--smoke`` runs the fast policy-level sections only (no JAX kernel
-compiles, reduced workload sizes) — the path scripts/verify.sh gates on.
+``--smoke`` runs the fast policy-level sections plus claim 14 at reduced
+sizes — the path scripts/verify.sh gates on. Claim 14 is the one smoke
+section that compiles JAX (it measures the real replica's decode loop;
+there is no simulator stand-in for a dispatch-count claim); every other
+smoke section stays compile-free.
 """
 
 from __future__ import annotations
@@ -24,6 +27,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_admission,
         bench_autoscale,
+        bench_decode,
         bench_elastic,
         bench_heartbeat,
         bench_hedge,
@@ -58,6 +62,8 @@ def main(argv=None) -> None:
          lambda: bench_hedge.main(smoke=opts.smoke)),
         ("claim13: incremental decision views at million-request scale",
          lambda: bench_simperf.main(smoke=opts.smoke)),
+        ("claim14: token-level continuous batching on the real replica",
+         lambda: bench_decode.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

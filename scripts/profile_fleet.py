@@ -1,18 +1,24 @@
-"""Profile the fleet event loop: cProfile top-N over one preset replay.
+"""Profile the simulator event loops: cProfile top-N over one preset replay.
 
 The tool that found every hot spot the PR-7 incremental-view refactor
 removed (brute view re-summation, list-head pops, per-view frozen-
-dataclass construction) — kept in-tree so the next regression is a
-one-liner to attribute:
+dataclass construction) and the PR-8 attempt-index refactor retired
+(per-heartbeat full scans over the attempt history in ``run_workload``) —
+kept in-tree so the next regression is a one-liner to attribute:
 
     PYTHONPATH=src python scripts/profile_fleet.py                 # hot loop
     PYTHONPATH=src python scripts/profile_fleet.py --legacy        # old loop
     PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_churny \\
         --n 5000 --sort tottime --top 30
+    PYTHONPATH=src python scripts/profile_fleet.py --engine workload \\
+        --preset overload_2pod --repeat 20   # run_workload attempt loop
 
 Profiles with the observability tax off (no trace, no per-request
 records) and the cyclic GC disabled — the same configuration
 ``benchmarks/bench_simperf.py`` times, so the profile explains the bench.
+The ``workload`` engine replays a ``PRESETS`` scenario through
+``SimCluster.run_workload`` (``--repeat`` loops it: the scenarios are
+small, so one pass under-samples the per-event scans).
 """
 
 from __future__ import annotations
@@ -24,7 +30,7 @@ import pstats
 import sys
 import time
 
-from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+from repro.core.workload import FLEET_PRESETS, PRESETS, FleetSpec, build_sim, run_fleet
 
 
 def build_spec(preset: str, n: int | None) -> FleetSpec:
@@ -41,38 +47,64 @@ def build_spec(preset: str, n: int | None) -> FleetSpec:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--preset", default="fleet_million",
-                    choices=sorted(FLEET_PRESETS))
+    ap.add_argument("--engine", default="fleet", choices=["fleet", "workload"],
+                    help="fleet = run_fleet event loop; workload = "
+                         "SimCluster.run_workload (the attempt loop)")
+    ap.add_argument("--preset", default=None,
+                    help="FLEET_PRESETS name (fleet engine, default "
+                         "fleet_million) or PRESETS name (workload engine, "
+                         "default overload_2pod)")
     ap.add_argument("--n", type=int, default=20_000,
-                    help="override the preset's n_requests (0 = keep)")
+                    help="fleet engine: override the preset's n_requests "
+                         "(0 = keep)")
+    ap.add_argument("--repeat", type=int, default=10,
+                    help="workload engine: replays of the scenario")
     ap.add_argument("--legacy", action="store_true",
-                    help="profile the rebuild-on-demand engine instead")
+                    help="fleet engine: profile the rebuild-on-demand "
+                         "engine instead")
     ap.add_argument("--top", type=int, default=25,
                     help="rows of the profile to print")
     ap.add_argument("--sort", default="cumulative",
                     choices=["cumulative", "tottime", "ncalls"])
     opts = ap.parse_args(argv)
 
-    spec = build_spec(opts.preset, opts.n or None)
     gc.disable()
     prof = cProfile.Profile()
-    t0 = time.perf_counter()
-    prof.enable()
-    res = run_fleet(
-        spec,
-        seed=0,
-        legacy_views=opts.legacy,
-        collect_trace=False,
-        collect_requests=False,
-    )
-    prof.disable()
-    wall = time.perf_counter() - t0
-    gc.enable()
-
-    engine = "legacy" if opts.legacy else "incremental"
-    print(f"{opts.preset} @ {spec.n_requests:,} requests, {engine} engine: "
-          f"{res.n_events:,} events in {wall:.2f}s "
-          f"({res.n_events / wall:,.0f} events/s, profiler overhead included)")
+    if opts.engine == "workload":
+        preset = opts.preset or "overload_2pod"
+        if preset not in PRESETS:
+            ap.error(f"--preset must name a PRESETS scenario: {sorted(PRESETS)}")
+        sim, jobs = build_sim(preset, seed=0)
+        t0 = time.perf_counter()
+        prof.enable()
+        for _ in range(opts.repeat):
+            res = sim.run_workload(jobs, scheduler="capacity")
+        prof.disable()
+        wall = time.perf_counter() - t0
+        gc.enable()
+        print(f"{preset} × {opts.repeat} replays, run_workload: "
+              f"{res.completed:,} tasks/replay in {wall:.2f}s "
+              f"({opts.repeat * res.completed / wall:,.0f} tasks/s, "
+              f"profiler overhead included)")
+    else:
+        spec = build_spec(opts.preset or "fleet_million", opts.n or None)
+        t0 = time.perf_counter()
+        prof.enable()
+        res = run_fleet(
+            spec,
+            seed=0,
+            legacy_views=opts.legacy,
+            collect_trace=False,
+            collect_requests=False,
+        )
+        prof.disable()
+        wall = time.perf_counter() - t0
+        gc.enable()
+        engine = "legacy" if opts.legacy else "incremental"
+        print(f"{opts.preset or 'fleet_million'} @ {spec.n_requests:,} "
+              f"requests, {engine} engine: {res.n_events:,} events in "
+              f"{wall:.2f}s ({res.n_events / wall:,.0f} events/s, "
+              f"profiler overhead included)")
     stats = pstats.Stats(prof, stream=sys.stdout)
     stats.strip_dirs().sort_stats(opts.sort).print_stats(opts.top)
 

@@ -57,6 +57,9 @@ PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_hedge.py --smoke
 # claim 13's smoke tier is the asserted events/sec floor: both engines
 # replay the same fleet_million slice head-to-head (~90s, legacy-dominated)
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_simperf.py --smoke
+# claim 14 runs the real replica's decode loop (arena vs cohort tok/s,
+# asserted mixed-length multiple) — the one smoke section that compiles JAX
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_decode.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

@@ -308,6 +308,14 @@ class RunConfig:
 
     # attention implementation: xla | chunked | pallas | pallas_interpret
     attention_impl: str = "chunked"
+    # decode-step attention (the serving hot loop, one token vs KV cache):
+    #   einsum           — masked-softmax einsum over the full cache; the
+    #                      CPU/reference fallback and the default
+    #   kernel           — Pallas flash-decode (kernels/decode_attention.py),
+    #                      one streaming pass over K/V with the per-slot
+    #                      ring/partial-fill valid mask; TPU only
+    #   kernel_interpret — same kernel in interpret mode (CPU parity tests)
+    decode_attention_impl: str = "einsum"
     attention_chunk: int = 1024
     ssd_chunk: int = 256  # SSD/mLSTM chunk length
     # unroll inner (attention/ssd) scans — used by dry-run cost probes so

@@ -325,7 +325,13 @@ class NaiveSpeculation(SpeculationPolicy):
         for a in running:
             if a.job in mean_by_job:
                 continue
-            ps = [x.progress(t) for x in sim._attempts if x.job == a.job and not x.killed]
+            # per-job attempt index in launch order — the same subsequence
+            # (and float summation order) the full-history scan produced
+            ps = [
+                x.progress(t)
+                for x in sim._attempts_by_job.get(a.job, ())
+                if not x.killed
+            ]
             mean_by_job[a.job] = sum(ps) / max(len(ps), 1)
         for a in running:
             if (
@@ -466,16 +472,22 @@ class SimCluster:
         self.heartbeat_s = heartbeat_s
         self.dead_after_s = dead_after_s
         self._attempts: list[Attempt] = []
+        # incremental attempt indices (PR-8, same discipline as the PR-7
+        # fleet accumulators): run_workload maintains these at every
+        # launch / kill / finish transition so policy queries stop scanning
+        # the full attempt history per heartbeat. Append order everywhere
+        # mirrors ``self._attempts`` (launch order), so any float summation
+        # over a filtered view reproduces the old full-scan order exactly.
+        self._attempts_by_job: dict[int, list[Attempt]] = {}
+        self._backup_count: dict[tuple[int, int], int] = {}  # live backups per key
+        self._n_live_backups = 0
 
     # ------------------------------------------------------------------
     def has_backup(self, job: int, task: int) -> bool:
-        return any(
-            a.job == job and a.task == task and a.speculative and not a.done and not a.killed
-            for a in self._attempts
-        )
+        return self._backup_count.get((job, task), 0) > 0
 
     def active_backups(self) -> int:
-        return sum(1 for a in self._attempts if a.speculative and not a.done and not a.killed)
+        return self._n_live_backups
 
     # ------------------------------------------------------------------
     def run_job(
@@ -563,6 +575,17 @@ class SimCluster:
         pol = POLICIES[policy]()
         adm = get_policy(admission)
         self._attempts = []
+        self._attempts_by_job = {}
+        self._backup_count = {}
+        self._n_live_backups = 0
+        # live-attempt view (PR-8): exactly the not-done-not-killed subset of
+        # ``self._attempts`` in launch order (dict removal keeps the order of
+        # the survivors), so the speculation scan per free worker is O(live)
+        # instead of O(every attempt ever launched). ``attempts_on`` is the
+        # per-worker index of the same history (append-only, launch order)
+        # for the requeue/kill sweeps that fire on failure and pronounce.
+        live_attempts: dict[int, Attempt] = {}
+        attempts_on: dict[Location, list[Attempt]] = {w: [] for w in self.workers}
         jrs: dict[int, _JobRun] = {}
         for job in jobs:
             if job.job_id in jrs:
@@ -718,9 +741,7 @@ class SimCluster:
             """Re-queue every task whose only attempts ran on ``loc`` and
             died with it (conservation: completed + requeued == total)."""
             nonlocal reassigned
-            for a in self._attempts:
-                if a.worker != loc:
-                    continue
+            for a in attempts_on[loc]:
                 jr = jrs[a.job]
                 if a.task in jr.done or a.task in jr.pending:
                     continue
@@ -757,12 +778,17 @@ class SimCluster:
             a = Attempt(gid, wloc, t, pipe_bytes, compute_s,
                         work=jr.gmap[gid].work, speculative=speculative, job=jid)
             self._attempts.append(a)
+            self._attempts_by_job.setdefault(jid, []).append(a)
+            live_attempts[id(a)] = a
+            attempts_on[wloc].append(a)
             jr.attempts_of.setdefault(gid, []).append(a)
             if jr.first_launch_t < 0:
                 jr.first_launch_t = t
             busy[wloc] = a
             if speculative:
                 n_spec += 1
+                self._n_live_backups += 1
+                self._backup_count[a.key] = self._backup_count.get(a.key, 0) + 1
             if dist > 0:
                 moved += jr.gmap[gid].nbytes
             if dist == 2:
@@ -775,11 +801,23 @@ class SimCluster:
                 a.finish_t = a.compute_start + compute_s
                 push(a.finish_t, "finish", a)
 
+        def retire(a: Attempt) -> None:
+            """Drop a from the live view (it just became done or killed)."""
+            live_attempts.pop(id(a), None)
+            if a.speculative:
+                self._n_live_backups -= 1
+                n = self._backup_count[a.key] - 1
+                if n:
+                    self._backup_count[a.key] = n
+                else:
+                    del self._backup_count[a.key]
+
         def kill(a: Attempt, t: float) -> None:
             nonlocal wasted
             if a.done or a.killed:
                 return
             a.killed = True
+            retire(a)
             # work units (fraction × task work), same currency as done_work —
             # comparable across policies and presets
             wasted += a.progress(t) * a.work
@@ -812,7 +850,9 @@ class SimCluster:
                     slo_class=jr.job.slo_class,
                     deadline_t=jr.job.submit_t + jr.job.deadline_s,
                 )
-                for jid, jr in jrs.items()
+                # unfinished preserves jrs insertion order; a finished job
+                # has empty pending, so the filtered view is identical
+                for jid, jr in unfinished.items()
                 if jr.arrived and jr.pending
             ]
 
@@ -917,12 +957,13 @@ class SimCluster:
                     jr.pending.remove(gid)
                     launch(wloc, jid, gid, t, False)
                 else:
+                    # live_attempts is already the not-done-not-killed set in
+                    # launch order, and only arrived jobs ever launch — the
+                    # remaining filter is done-but-unreported duplicates
                     live = [
                         a
-                        for a in self._attempts
-                        if not a.done and not a.killed
-                        and jrs[a.job].arrived
-                        and a.task not in jrs[a.job].done
+                        for a in live_attempts.values()
+                        if a.task not in jrs[a.job].done
                     ]
                     if not live:
                         continue
@@ -1049,8 +1090,8 @@ class SimCluster:
                 churn.append(
                     ChurnEvent(t, "worker_fail", {"worker": name_of[payload]})
                 )
-                for a in list(self._attempts):
-                    if a.worker == payload and not a.done and not a.killed:
+                for a in attempts_on[payload]:
+                    if not a.done and not a.killed:
                         kill(a, t)  # work lost immediately; requeue on pronounce
             elif kind == "pronounce_check":
                 if payload not in dead:
@@ -1112,6 +1153,7 @@ class SimCluster:
                 if not w.alive(t):
                     continue
                 a.done = True
+                retire(a)
                 makespan = max(makespan, t)
                 busy_time[a.worker] += t - a.start
                 busy[a.worker] = None

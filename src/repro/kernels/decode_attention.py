@@ -63,7 +63,16 @@ def _decode_kernel(
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
+    # Masked probabilities must be written as zero, not left to exp
+    # underflow: while m_new is still NEG_INF (no valid key seen yet) a
+    # masked entry's exponent is NEG_INF - NEG_INF = 0, so exp() returns 1
+    # and the block contributes phantom weight to l/acc. A later valid
+    # block cancels it through corr = exp(NEG_INF - m) = 0, but a row whose
+    # valid keys all live past the first blocks — or an all-invalid row,
+    # or the zero-padded seq_len % block_k remainder of the last block —
+    # leaks the phantom mass into l (and, unnormalized, into the partials
+    # the cross-shard combine consumes).
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new[:, None]), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
     pv = jax.lax.dot_general(

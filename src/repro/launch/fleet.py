@@ -61,7 +61,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Sequence, Union
+from typing import Optional, Sequence, Union
 
 from repro.core.admission import (
     ADMIT,
@@ -649,6 +649,7 @@ def build_fleet(
     admission: Union[str, AdmissionPolicy, None] = "admit_all",
     batched: bool = True,
     autoscale: Union[str, Autoscaler, None] = None,
+    mode: Optional[str] = None,
     **kw,
 ) -> FleetLoop:
     """N identical ``ServeLoop`` replicas behind one :class:`FleetLoop`.
@@ -658,12 +659,15 @@ def build_fleet(
     admission layer enforces single-replica). The ``replica_factory``
     builds the same ``ServeLoop`` shape on demand, so a GROW decision
     spawns an identical replica (its compile/warmup is the cold-start
-    lag)."""
+    lag). ``mode`` selects the replica's decode batching (arena /
+    cohort / serial) — the fleet consumes whatever tok/s the replica
+    measures, so a faster decode path re-prices every capacity-gated
+    policy with no fleet-side change."""
 
     def factory():
         return ServeLoop(
             cfg, run, params, batch=batch, max_len=max_len,
-            admission=None, batched=batched,
+            admission=None, batched=batched, mode=mode,
         )
 
     replicas = [factory() for _ in range(n_replicas)]

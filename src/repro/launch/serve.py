@@ -13,28 +13,44 @@ from *measured* decode throughput, the paper's §IV.a capacity discipline.
 A policy tuned against the overload/churn presets drops in here unchanged
 (``--admission slo_classes``); there is no serve-private admit path.
 
-**Decode is genuinely batched**: slot caches live stacked along the batch
-axis, grouped by cache position, so one ``decode_step`` call advances every
-slot in a group per step (the continuous batching the docstring always
-promised — previously each slot paid its own dispatch). Position is the
-batching key because ``decode_step`` takes a single position scalar for
-the whole batch — so uniform-length prompts admitted together share one
-group (one dispatch per step, ~3.7× tok/s at batch 4), groups whose
-positions coincide later re-merge at step time, and mixed prompt lengths /
-staggered admits degrade gracefully toward per-slot dispatch
-(``decode_calls`` in the stats exposes how much batching a run actually
-got). ``--no-batch`` keeps per-slot groups as an escape hatch
-(bit-identical to the old loop).
+**Decode is token-level continuous batching** (``mode="arena"``, the
+default): the replica owns one fixed-capacity KV arena —
+``models.model.init_cache`` stacked ``batch`` slots wide — plus a free-slot
+allocator. ``decode_step`` takes a per-slot *position vector* and an
+active-slot mask, so every occupied slot advances in **one dispatch per
+step regardless of length mix**; a request joins by writing its prefilled
+cache into a free slot (``jax.lax.dynamic_update_slice`` on a traced slot
+index — no recompile, no ``_cat``/``jnp.take`` regroup churn) and leaves by
+marking the slot free at a token boundary. Greedy sampling (argmax) is
+fused into the jitted decode call, so the host round-trip per step is
+``batch`` token ids, not a logits tensor. ``stats()`` reports
+``decode_calls`` (== steps taken) and ``slot_occupancy`` (mean active
+fraction per call) so a run shows exactly how much batching it got.
+
+Two legacy modes remain selectable: ``mode="cohort"`` is the PR-3
+position-grouped path (uniform lengths batch well; mixed lengths degrade
+toward per-slot dispatch — the regime claim 14 in
+``benchmarks/bench_decode.py`` measures the arena against), and
+``mode="serial"`` (the ``--no-batch`` escape hatch) decodes each slot in
+its own dispatch — the bit-exact single-request reference the continuous-
+batching tests compare token streams against.
+
+Caveat: the arena masks *positions*, not expert routing — on MoE
+architectures parked slots still consume router capacity, so arena mode is
+exact for attention/SSM stacks and approximate under MoE capacity drops
+(the eval capacity factor leaves headroom; serving benches use attention
+architectures).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-smoke \
       --requests 16 --batch 4 --prompt-len 32 --gen 16 \
-      --admission slo_classes
+      --admission slo_classes --mode arena
 """
 
 from __future__ import annotations
 
 import argparse
+import heapq
 import math
 import time
 from collections import deque
@@ -102,14 +118,14 @@ class Request:
 
 
 class _Group:
-    """Slots whose caches share a position, stacked along the batch axis.
+    """Cohort-mode slots whose caches share a position, stacked along the
+    batch axis (the PR-3 path, kept as the claim-14 baseline).
 
     ``cache["layers"]`` leaves are ``(n_layer_periods, B, ...)`` (the layer
     dim comes from the prefill scan), so batch concatenation/indexing is on
-    axis 1. ``pos`` is tracked host-side and mirrors the scalar
-    ``cache["pos"]`` every member shares — the model's decode step takes
-    one position for the whole batch, which is exactly why grouping by
-    position is the correct batching key.
+    axis 1. ``pos`` is tracked host-side and mirrors the per-slot
+    ``cache["pos"]`` vector, whose entries a group keeps equal by
+    construction — that shared position is the grouping key.
     """
 
     __slots__ = ("pos", "rids", "cache", "last")
@@ -122,15 +138,33 @@ def _cat(a, b):
     layers = jax.tree.map(
         lambda x, y: jnp.concatenate([x, y], axis=1), a["layers"], b["layers"]
     )
-    return {"pos": a["pos"], "layers": layers}
+    return {"pos": jnp.concatenate([a["pos"], b["pos"]]), "layers": layers}
 
 
 def _take(cache, idx: list[int]):
     sel = jnp.asarray(idx)
     return {
-        "pos": cache["pos"],
+        "pos": jnp.take(cache["pos"], sel),
         "layers": jax.tree.map(lambda x: jnp.take(x, sel, axis=1), cache["layers"]),
     }
+
+
+def _slot_write(arena, one, slot):
+    """Write a freshly prefilled single-request cache into arena slot
+    ``slot`` — ``dynamic_update_slice`` on a *traced* slot index, so one
+    compile serves every slot and joins never trigger the `_cat`-shaped
+    recompile-and-regroup churn the cohort path pays."""
+    layers = jax.tree.map(
+        lambda a, o: jax.lax.dynamic_update_slice_in_dim(
+            a, o.astype(a.dtype), slot, axis=1
+        ),
+        arena["layers"],
+        one["layers"],
+    )
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        arena["pos"], one["pos"].astype(arena["pos"].dtype), slot, axis=0
+    )
+    return {"pos": pos, "layers": layers}
 
 
 class ServeLoop:
@@ -155,12 +189,21 @@ class ServeLoop:
         admission: Union[str, AdmissionPolicy, None] = "admit_all",
         batched: bool = True,
         warmup: bool = True,
+        mode: Optional[str] = None,
     ):
         self.cfg, self.run, self.params = cfg, run, params
         self.batch = batch
         self.max_len = max_len
         self.admission = admission
-        self.batched = batched
+        # mode: "arena" (token-level continuous batching, default) |
+        # "cohort" (PR-3 position groups) | "serial" (per-slot dispatch).
+        # `batched` is the legacy knob: batched=False is exactly "serial".
+        if mode is None:
+            mode = "arena" if batched else "serial"
+        if mode not in ("arena", "cohort", "serial"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+        self.mode = mode
+        self.batched = mode != "serial"
         self.warmup = warmup
         self.prefill = jax.jit(
             lambda p, toks: M.prefill(cfg, run, p, toks, max_len, None)
@@ -168,6 +211,15 @@ class ServeLoop:
         self.decode = jax.jit(
             lambda p, c, toks: M.decode_step(cfg, run, p, c, toks, None)
         )
+
+        def _arena_decode(p, c, toks, act):
+            logits, new_cache = M.decode_step(cfg, run, p, c, toks, None, active=act)
+            return jnp.argmax(logits[:, -1, :], axis=-1), new_cache
+
+        # greedy sampling fused into the dispatch: the per-step host
+        # round-trip is `batch` token ids, not a (B, 1, vocab) logits pull
+        self._decode_arena = jax.jit(_arena_decode)
+        self._write_slot = jax.jit(_slot_write)
 
     def _warm(self, prompt_len: int) -> None:
         """Compile prefill (B=1) and decode at every group width once,
@@ -177,6 +229,18 @@ class ServeLoop:
         act on permanently (an offer is final)."""
         tok = jnp.zeros((1, prompt_len), jnp.int32)
         _, cache = self.prefill(self.params, tok)
+        if self.mode == "arena":
+            # one decode width exists (the full arena) — compile the slot
+            # write and the fused decode+argmax once; a throwaway arena so
+            # repeated warms (one per distinct prompt length) stay cheap
+            arena = M.init_cache(self.cfg, self.batch, self.max_len)
+            arena = self._write_slot(arena, cache, 0)
+            self._decode_arena(
+                self.params, arena,
+                jnp.zeros((self.batch, 1), jnp.int32),
+                jnp.zeros((self.batch,), bool).at[0].set(True),
+            )
+            return
         widths = range(1, self.batch + 1) if self.batched else (1,)
         c = cache
         for b in widths:
@@ -224,6 +288,14 @@ class ServeLoop:
         self._ready: deque[Request] = deque()  # admitted, awaiting a slot
         self._rejected: list[Request] = []
         self._groups: list[_Group] = []
+        # arena state: rid per slot (None = free), last emitted token per
+        # slot, ascending free-slot heap (lowest slot wins — deterministic),
+        # and the stacked cache itself (lazy: first admit builds it)
+        self._slot_rid: list[Optional[int]] = [None] * self.batch
+        self._slot_last = np.zeros(self.batch, np.int64)
+        self._free_slots = list(range(self.batch))
+        self._arena = None
+        self._occ_sum = 0  # Σ active slots over decode calls
         self._done_hist: dict[int, list[float]] = {}  # sojourns per class
         self._decode_tokens = 0
         self._decode_calls = 0
@@ -254,14 +326,20 @@ class ServeLoop:
         return self._peak_rate
 
     def _active_count(self) -> int:
+        if self.mode == "arena":
+            return self.batch - len(self._free_slots)
         return sum(len(g.rids) for g in self._groups)
+
+    def _decoding_rids(self) -> list[int]:
+        """Rids currently holding a decode slot, slot/decode order."""
+        if self.mode == "arena":
+            return [rid for rid in self._slot_rid if rid is not None]
+        return [rid for g in self._groups for rid in g.rids]
 
     def outstanding_rids(self) -> list[int]:
         """Requests decoding or admitted-and-waiting, decode order first —
         what a fleet re-dispatch monitor watches for stuck entries."""
-        return [rid for g in self._groups for rid in g.rids] + [
-            r.rid for r in self._ready
-        ]
+        return self._decoding_rids() + [r.rid for r in self._ready]
 
     def queued_rids(self) -> list[int]:
         """Admitted-but-not-yet-decoding requests, queue order. These are
@@ -273,7 +351,7 @@ class ServeLoop:
     def backlog_tokens(self) -> float:
         """Remaining token budget across decoding + ready requests — the
         backlog the fleet's ``shortest_backlog`` router joins on."""
-        live = [self._by_id[rid] for g in self._groups for rid in g.rids]
+        live = [self._by_id[rid] for rid in self._decoding_rids()]
         return float(
             sum(r.max_new - len(r.tokens) for r in live)
             + sum(r.max_new for r in self._ready)
@@ -281,7 +359,7 @@ class ServeLoop:
 
     @property
     def idle(self) -> bool:
-        return not self._groups and not self._ready
+        return self._active_count() == 0 and not self._ready
 
     # -- fleet hooks -----------------------------------------------------
 
@@ -309,6 +387,15 @@ class ServeLoop:
                 self._ready.remove(r)
                 found = True
                 break
+        if not found and self.mode == "arena":
+            # mid-decode cancel (hedge loser / re-dispatch): just free the
+            # slot — the cache bytes stay until the next join overwrites
+            # them, which is the whole point of the allocator
+            for s, orid in enumerate(self._slot_rid):
+                if orid == rid:
+                    self._release_slot(s)
+                    found = True
+                    break
         if not found:
             for g in self._groups:
                 if rid in g.rids:
@@ -398,14 +485,28 @@ class ServeLoop:
 
     # -- decode mechanics -------------------------------------------------
 
+    def _release_slot(self, s: int) -> None:
+        self._slot_rid[s] = None
+        heapq.heappush(self._free_slots, s)
+
     def _admit(self, r: Request) -> None:
         r.submitted = self.now()
         logits, cache = self.prefill(self.params, jnp.asarray(r.prompt[None]))
         tok = int(jnp.argmax(logits[0, -1]))
         r.tokens.append(tok)
         r.first_token = self.now()
+        if self.mode == "arena":
+            # join at a token boundary: claim the lowest free slot, index-
+            # write the prefilled cache in — no regroup, no recompile
+            if self._arena is None:
+                self._arena = M.init_cache(self.cfg, self.batch, self.max_len)
+            s = heapq.heappop(self._free_slots)
+            self._slot_rid[s] = r.rid
+            self._slot_last[s] = tok
+            self._arena = self._write_slot(self._arena, cache, s)
+            return
         pos = int(r.prompt.shape[0])
-        if self.batched:
+        if self.mode == "cohort":
             for g in self._groups:
                 if g.pos == pos and len(g.rids) < self.batch:
                     g.cache = _cat(g.cache, cache)
@@ -433,14 +534,39 @@ class ServeLoop:
             head.last += g.last
             self._groups.remove(g)
 
-    def _step(self) -> None:
-        if self.batched and len(self._groups) > 1:
+    def _step_arena(self) -> None:
+        """One decode step for the whole arena: a single dispatch advances
+        every occupied slot, whatever mix of positions they sit at."""
+        act = np.array([rid is not None for rid in self._slot_rid])
+        toks = jnp.asarray(self._slot_last[:, None].astype(np.int32))
+        new_toks, self._arena = self._decode_arena(
+            self.params, self._arena, toks, jnp.asarray(act)
+        )
+        self._decode_calls += 1
+        self._occ_sum += int(act.sum())
+        new = np.asarray(new_toks)
+        t_step = self.now()
+        for s, rid in enumerate(list(self._slot_rid)):
+            if rid is None:
+                continue
+            r = self._by_id[rid]
+            tok = int(new[s])
+            r.tokens.append(tok)
+            self._slot_last[s] = tok
+            self._decode_tokens += 1
+            if len(r.tokens) >= r.max_new:
+                r.finished = t_step
+                self._on_done(r)
+                self._release_slot(s)
+
+    def _step_groups(self) -> None:
+        if self.mode == "cohort" and len(self._groups) > 1:
             self._merge_groups()
-        t_in, toks_in = time.perf_counter(), self._decode_tokens
         for g in list(self._groups):
             toks = jnp.asarray(np.asarray(g.last, np.int32)[:, None])
             logits, g.cache = self.decode(self.params, g.cache, toks)
             self._decode_calls += 1
+            self._occ_sum += len(g.rids)
             new = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
             t_step = self.now()
             keep: list[int] = []
@@ -463,6 +589,13 @@ class ServeLoop:
                     g.cache = _take(g.cache, keep)
                     g.rids = [g.rids[i] for i in keep]
                     g.last = [g.last[i] for i in keep]
+
+    def _step(self) -> None:
+        t_in, toks_in = time.perf_counter(), self._decode_tokens
+        if self.mode == "arena":
+            self._step_arena()
+        else:
+            self._step_groups()
         inst = (self._decode_tokens - toks_in) / max(
             time.perf_counter() - t_in, 1e-9
         )
@@ -483,20 +616,24 @@ class ServeLoop:
         Returns ``"step"`` (made progress), ``"wait"`` (deferred requests
         exist but the policy released nothing — the caller owns the
         wall-clock and decides whether to sleep), or ``"done"``."""
-        if not self._groups:
+        if self._active_count() == 0:
             if self._ready:
                 self._fill_slots()
                 return "step"
             if self._policy is not None and self._policy.n_deferred:
                 self._pump()
                 self._fill_slots()
-                return "step" if (self._groups or self._ready) else "wait"
+                return (
+                    "step"
+                    if (self._active_count() or self._ready)
+                    else "wait"
+                )
             if self._pending:
                 # endgame: nothing running or deferred but requests were
                 # never offered (the pre-measurement bound) — drain them
                 self._pump(force=True)
                 self._fill_slots()
-                if self._groups or self._ready:
+                if self._active_count() or self._ready:
                     return "step"
             return "done"
         self._step()
@@ -513,9 +650,18 @@ class ServeLoop:
             "rejected": len(self._rejected),
             "deferred_unserved": policy.n_deferred if policy else 0,
             "admission": policy.name if policy else "none",
+            "mode": self.mode,
             "wall_s": wall,
             "decode_steps": self._decode_tokens,
             "decode_calls": self._decode_calls,
+            # mean fraction of the batch doing useful work per dispatch —
+            # arena mode's whole claim is that this stays high under mixed
+            # lengths while decode_calls stays at one per step
+            "slot_occupancy": (
+                self._occ_sum / (self._decode_calls * self.batch)
+                if self._decode_calls
+                else 0.0
+            ),
             "cancelled": self._cancelled,
             "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
             "mean_ttft_s": float(np.mean([r.first_token - r.arrived for r in done])) if done else -1,
@@ -554,8 +700,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--admission", default="admit_all",
                     help="policy name from core.admission.ADMISSION")
+    ap.add_argument("--mode", default=None,
+                    choices=["arena", "cohort", "serial"],
+                    help="decode batching: arena (continuous, default), "
+                         "cohort (PR-3 position groups), serial (per-slot)")
     ap.add_argument("--no-batch", action="store_true",
-                    help="per-slot decode (escape hatch; old behaviour)")
+                    help="alias for --mode serial: per-slot decode, the "
+                         "bit-exact single-request reference path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -568,13 +719,15 @@ def main(argv=None) -> dict:
     ]
     loop = ServeLoop(
         cfg, run, params, args.batch, args.prompt_len + args.gen + 1,
-        admission=args.admission, batched=not args.no_batch,
+        admission=args.admission, batched=not args.no_batch, mode=args.mode,
     )
     stats = loop.run_requests(reqs)
     print(
         f"served {stats['completed']}/{args.requests} requests "
-        f"(rejected {stats['rejected']}, admission={stats['admission']})  "
-        f"{stats['tokens_per_s']:.1f} tok/s in {stats['decode_calls']} decode calls  "
+        f"(rejected {stats['rejected']}, admission={stats['admission']}, "
+        f"mode={stats['mode']})  "
+        f"{stats['tokens_per_s']:.1f} tok/s in {stats['decode_calls']} decode calls "
+        f"(occupancy {stats['slot_occupancy']:.2f})  "
         f"ttft={stats['mean_ttft_s']*1e3:.0f}ms  "
         f"latency={stats['mean_latency_s']*1e3:.0f}ms"
     )

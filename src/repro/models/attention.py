@@ -13,7 +13,13 @@ Implementations (``RunConfig.attention_impl``):
 Decode uses a ring-buffer KV cache (capacity = sliding window when set), with
 the cache sequence dimension sharded over the ``model`` mesh axis so that
 XLA's partial-softmax collectives implement cross-chip flash-decode (see
-DESIGN.md §3).
+DESIGN.md §3). The decode step takes a per-slot *position vector*, so one
+dispatch serves a continuous batch whose rows sit at different cache
+positions, and dispatches on ``RunConfig.decode_attention_impl``:
+``kernel`` / ``kernel_interpret`` route through the Pallas flash-decode
+kernel (`repro.kernels.decode_attention`) with the per-row ring/partial-fill
+``valid`` mask; ``einsum`` is the CPU/reference fallback, asserted bit-close
+in tests/test_models.py.
 """
 
 from __future__ import annotations
@@ -313,9 +319,13 @@ def attn_apply_step(
     pos: jax.Array,
     rules: Optional[ShardingRules],
 ):
-    """Single-token decode. x: (B, 1, D); pos: scalar int32 (tokens so far)."""
+    """Single-token decode. x: (B, 1, D); pos: (B,) int32 — tokens so far
+    *per slot*, so one dispatch serves a batch whose rows sit at different
+    cache positions (the continuous-batching contract; a scalar pos
+    broadcasts for the uniform case)."""
     dt = jnp.dtype(cfg.compute_dtype)
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos[:, None]  # (B, 1) — per-row RoPE phase
     q, k, v = _project_qkv(cfg, params, x, positions, rules)
 
     cap = cache["k"].shape[1]
@@ -326,28 +336,42 @@ def attn_apply_step(
     # bytes per layer per token); the select keeps every shard local.
     k = shard_constraint(k, rules, ("batch", None, None, None))
     v = shard_constraint(v, rules, ("batch", None, None, None))
-    idx = jnp.arange(cap)[None, :, None, None]
-    write = idx == slot
+    idx = jnp.arange(cap)
+    write = idx[None, :, None, None] == slot[:, None, None, None]
     new_k = jnp.where(write, k.astype(cache["k"].dtype), cache["k"])
     new_v = jnp.where(write, v.astype(cache["v"].dtype), cache["v"])
     new_k = shard_constraint(new_k, rules, attn_cache_axes()["k"])
     new_v = shard_constraint(new_v, rules, attn_cache_axes()["v"])
 
-    # validity: slots < pos+1 filled (full cache: monotone; ring: all once wrapped)
-    idx = jnp.arange(cap)
+    # validity, per row: slots < pos+1 filled (full cache: monotone; ring:
+    # all once wrapped) — (B, cap), exactly the mask shape the flash-decode
+    # kernel consumes for ring/partially-filled caches
     if cfg.sliding_window:
-        valid = (idx <= slot) | (pos >= cap)
+        valid = (idx[None, :] <= slot[:, None]) | (pos[:, None] >= cap)
     else:
-        valid = idx <= slot
+        valid = idx[None, :] <= slot[:, None]
 
-    kh = cfg.num_kv_heads
-    qg = _split_gqa(q, kh)  # (B,1,KH,G,D)
-    scores = jnp.einsum(
-        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), new_k.astype(jnp.float32)
-    ) * (1.0 / cfg.head_dim_**0.5)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, new_v.astype(jnp.float32))
-    out = out.reshape(q.shape).astype(dt)
+    scale = 1.0 / cfg.head_dim_**0.5
+    impl = run.decode_attention_impl
+    if impl in ("kernel", "kernel_interpret"):
+        from repro.kernels import ops as kops
+
+        out = kops.decode_attention(
+            q[:, 0], new_k, new_v, valid, softmax_scale=scale,
+            interpret=(impl == "kernel_interpret"),
+        )[:, None]  # (B, H, D) -> (B, 1, H, D)
+        out = out.astype(dt)
+    elif impl == "einsum":
+        kh = cfg.num_kv_heads
+        qg = _split_gqa(q, kh)  # (B,1,KH,G,D)
+        scores = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), new_k.astype(jnp.float32)
+        ) * scale
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, new_v.astype(jnp.float32))
+        out = out.reshape(q.shape).astype(dt)
+    else:
+        raise ValueError(f"unknown decode_attention_impl {impl!r}")
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
     return y, {"k": new_k, "v": new_v}

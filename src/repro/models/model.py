@@ -359,7 +359,12 @@ def prefill(
 
     h, layer_caches = jax.lax.scan(body, h, params["layers"], unroll=run.scan_unroll)
     logits = _head(cfg, params, h[:, -1:], rules)
-    cache = {"pos": jnp.asarray(seq, jnp.int32), "layers": layer_caches}
+    # per-slot position vector: every row of a fresh prefill sits at `seq`,
+    # but rows diverge once the cache joins a continuous decode batch
+    cache = {
+        "pos": jnp.full((h.shape[0],), seq, jnp.int32),
+        "layers": layer_caches,
+    }
     return logits, cache
 
 
@@ -370,23 +375,36 @@ def decode_step(
     cache: dict,
     tokens: jax.Array,
     rules: Optional[ShardingRules] = None,
+    active: Optional[jax.Array] = None,
 ):
-    """One decode step. tokens: (B, 1). Returns (logits, new cache)."""
+    """One decode step. tokens: (B, 1). Returns (logits, new cache).
+
+    ``cache["pos"]`` is a per-slot (B,) position vector, so rows of the
+    batch may sit at different cache positions (continuous batching).
+    ``active`` is an optional (B,) bool mask for ragged batches: inactive
+    slots neither advance their position nor overwrite their cache slot
+    (their logits are garbage the caller ignores; a slot-arena caller
+    re-prefills a slot on join, so parked slots stay cheap, not correct).
+    """
     h = _embed(cfg, params, tokens, rules)
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (tokens.shape[0],))
+    step_pos = pos if active is None else jnp.where(active, pos, -1)
     p = cfg.period
 
     def body(h, xs):
         pparams, pcache = xs
         new_caches = {}
         for j in range(p):
-            h, c = _apply_block_step(cfg, run, j, pparams[f"b{j}"], pcache[f"b{j}"], h, pos, rules)
+            h, c = _apply_block_step(
+                cfg, run, j, pparams[f"b{j}"], pcache[f"b{j}"], h, step_pos, rules
+            )
             new_caches[f"b{j}"] = c
         return h, new_caches
 
     h, new_layer_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"]), unroll=run.scan_unroll)
     logits = _head(cfg, params, h, rules)
-    return logits, {"pos": pos + 1, "layers": new_layer_caches}
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    return logits, {"pos": new_pos, "layers": new_layer_caches}
 
 
 # ---------------------------------------------------------------------------
@@ -432,7 +450,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
         f"b{j}": jax.tree.map(stack, _block_cache_template(cfg, j, batch, max_len))
         for j in range(p)
     }
-    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
 
 
 def cache_specs(cfg: ModelConfig, rules: Optional[ShardingRules], batch: int, max_len: int):

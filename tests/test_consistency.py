@@ -53,7 +53,7 @@ def test_prefill_decode_matches_forward(arch, tol):
         logits_t, cache = M.decode_step(cfg, RUN, params, cache, tokens[:, t : t + 1])
         err = float(jnp.abs(logits_t[:, 0] - logits_full[:, t]).max())
         assert err < tol, f"decode step {t}: err {err}"
-    assert int(cache["pos"]) == S
+    assert cache["pos"].tolist() == [S] * B  # per-slot position vector
 
 
 def test_decode_from_scratch_matches_forward():
@@ -79,6 +79,31 @@ def test_attention_impls_agree():
         outs[impl], _ = M.forward(cfg, run, params, tokens)
     assert float(jnp.abs(outs["xla"] - outs["chunked"]).max()) < 2e-5
     assert float(jnp.abs(outs["xla"] - outs["pallas_interpret"]).max()) < 2e-5
+
+
+def test_decode_attention_impls_agree():
+    """einsum (CPU fallback) vs Pallas flash-decode in interpret mode must
+    agree bit-close on the serving decode step, including partially-filled
+    caches and inactive rows — the tentpole's kernel-fallback contract."""
+    cfg = get_config("qwen3-1.7b").reduced(param_dtype="float32", compute_dtype="float32")
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 3, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for impl in ("einsum", "kernel_interpret"):
+        run = dataclasses.replace(RUN, decode_attention_impl=impl)
+        _, cache = M.prefill(cfg, run, params, tokens[:, :10], max_len=S)
+        active = jnp.array([True, True, False])  # a parked arena slot
+        logits = []
+        for t in range(10, 14):
+            lt, cache = M.decode_step(
+                cfg, run, params, cache, tokens[:, t : t + 1], active=active
+            )
+            logits.append(lt)
+        outs[impl] = jnp.stack(logits)
+        assert cache["pos"].tolist() == [14, 14, 10]  # active mask honoured
+    err = float(jnp.abs(outs["einsum"] - outs["kernel_interpret"]).max())
+    assert err < 2e-5, f"decode impl divergence: {err}"
 
 
 def test_chunked_ssd_matches_sequential():

@@ -72,6 +72,61 @@ def test_decode_attention_matches_ref(case, dtype, rng):
     assert float(jnp.abs(out.astype(jnp.float32) - exp.astype(jnp.float32)).max()) < tol
 
 
+def test_decode_ring_wraparound_at_full_capacity(rng):
+    """The serving arena's sliding-window rows mark the whole cache valid
+    once pos >= capacity (ring fully wrapped) — all-True valid must agree
+    with the reference at exactly-full capacity, both when S divides the
+    block and when a zero-padded remainder block trails it."""
+    B, H, KH, D = 2, 4, 2, 64
+    for S, bk in ((256, 128), (130, 64)):  # exact blocks | remainder block
+        q = _arr(rng, B, H, D)
+        k = _arr(rng, B, S, KH, D)
+        v = _arr(rng, B, S, KH, D)
+        valid = jnp.ones((B, S), bool)
+        out = ops.decode_attention(q, k, v, valid, block_k=bk, interpret=True)
+        exp = ref.decode_attention_ref(q, k, v, valid)
+        assert float(jnp.abs(out - exp).max()) < 2e-5, (S, bk)
+
+
+def test_decode_valid_only_in_remainder_block(rng):
+    """A row whose valid keys all live in the last (zero-padded) remainder
+    block is the regression case for the masked-probability bug: while no
+    valid key has been seen, masked entries exponentiate NEG_INF - NEG_INF
+    to 1 and leak phantom mass into l/acc unless written as zero."""
+    B, S, H, KH, D, bk = 2, 190, 4, 2, 64, 64  # 3 blocks, last holds 62 keys
+    q = _arr(rng, B, H, D)
+    k = _arr(rng, B, S, KH, D)
+    v = _arr(rng, B, S, KH, D)
+    idx = jnp.arange(S)
+    valid = jnp.stack([idx >= 2 * bk, idx >= S - 5])  # tail-only valid rows
+    out = ops.decode_attention(q, k, v, valid, block_k=bk, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, valid)
+    assert float(jnp.abs(out - exp).max()) < 2e-5
+
+
+def test_decode_all_invalid_row_returns_zero(rng):
+    """Contract for a row with no valid keys (an arena slot before its
+    prefill lands): the kernel emits exactly zero — never NaN/Inf — and its
+    partials are the logsumexp identity (m = -inf surrogate, l = 0), so a
+    cross-shard combine treats the row as contributing nothing. (The
+    einsum/ref path instead softmaxes uniform over NEG_INF scores; callers
+    mask inactive rows, so only finiteness is contractual there.)"""
+    B, S, H, KH, D = 2, 128, 4, 2, 64
+    q = _arr(rng, B, H, D)
+    k = _arr(rng, B, S, KH, D)
+    v = _arr(rng, B, S, KH, D)
+    valid = jnp.stack([jnp.ones(S, bool), jnp.zeros(S, bool)])
+    out = ops.decode_attention(q, k, v, valid, block_k=64, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    assert float(jnp.abs(out[1]).max()) == 0.0
+    exp = ref.decode_attention_ref(q, k, v, valid)
+    assert float(jnp.abs(out[0] - exp[0]).max()) < 2e-5
+    _, m, l = ops.decode_attention(
+        q, k, v, valid, block_k=64, return_partials=True, interpret=True
+    )
+    assert float(l[1].max()) == 0.0  # partials come back (B, H): row 1 empty
+
+
 def test_decode_partials_combine(rng):
     """Shard the cache in two, combine partials, compare to monolithic."""
     B, S, H, KH, D = 2, 256, 4, 2, 64

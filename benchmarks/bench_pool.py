@@ -1,0 +1,196 @@
+"""Claim 15 (cost-aware heterogeneous pool): typing the elastic tier buys
+dollars without selling the tail, and forecasting the diurnal crest buys
+tail without selling timing.
+
+The regime is ``fleet_diurnal`` stretched to three full periods (288
+requests over ~29 minutes of sinusoidal offered load, peak ~9x trough) on
+a 2x ``fast`` provisioned base, with a 150 s class-0 deadline and a 15 s
+spawn warmup. Three elastic policies face it, all sharing the exact same
+reactive thresholds (grow/shrink backlog-seconds, sustain, cooldown, pool
+bounds) so the comparisons isolate one decision each:
+
+* **all_fast** — ``backlog_threshold``: every spawn is on-demand capacity
+  at $1.00/replica-second. The baseline bill.
+* **cost_aware** — same grow *timing*, but each spawn is the best
+  nameplate-per-dollar catalog type under the risk budget: ``spot``
+  (1.0 work/s at $0.35/s, preemptible, mean life 600 s) until the
+  preemptible share hits ``spot_frac_max``, then non-preemptible
+  ``slow``. Preempted spots evict their queues through the rescue path
+  mid-run; ``keep_nonpreemptible=2`` pins the provisioned base so a
+  preemption wave can never take the whole fleet.
+* **predictive** — same spawns as all_fast ($1.00 on-demand), but timed
+  by the fitted arrival period: the autocorrelation fit recovers the
+  600 s cycle from the first period's bins, and from the second crest on
+  the policy spawns ``lead_s`` ahead of the predicted rate — the warmup
+  lands *before* the crest instead of inside it.
+
+Gated claims, on seed means (8 seeds; per-seed draws are noisy):
+
+* ``cost_aware`` spends **fewer dollars per on-time request** than
+  ``all_fast`` while holding class-0 p99 within **±5%** — the type
+  decision is (nearly) free tail-wise because grow timing is identical
+  and the reliability floor absorbs preemption.
+* ``predictive`` class-0 p99 is **under** ``all_fast``'s — the
+  crest-warmup penalty (reactive pools pay warmup lag exactly when the
+  backlog is steepest) is what the forecast removes.
+
+Results append to ``BENCH_pool.json`` so the trajectory across commits
+stays visible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+from datetime import datetime, timezone
+from pathlib import Path
+
+from repro.core.autoscale import (
+    BacklogThresholdScaler,
+    CostAwareScaler,
+    PredictiveScaler,
+)
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+PRESET = "fleet_diurnal"
+CYCLES = 3
+SEEDS = tuple(range(8))
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_pool.json"
+
+# shared reactive thresholds: every arm times its *reactive* actions
+# identically, so cost_aware isolates the type choice and predictive
+# isolates the forecast
+_SHARED = dict(
+    grow_backlog_s=30.0, shrink_backlog_s=4.0,
+    sustain_s=10.0, cooldown_s=30.0,
+    min_replicas=2, max_replicas=6,
+)
+
+P99_PARITY = 1.05  # cost_aware must hold class-0 p99 within ±5%
+
+
+def _spec():
+    base = FLEET_PRESETS[PRESET]
+    return replace(
+        base,
+        n_requests=96 * CYCLES,
+        replica_types=("fast",) * base.n_replicas,
+    )
+
+
+def _configs():
+    return (
+        ("all_fast", BacklogThresholdScaler(**_SHARED)),
+        ("cost_aware", CostAwareScaler(keep_nonpreemptible=2, **_SHARED)),
+        ("predictive", PredictiveScaler(
+            bin_s=20.0, lead_s=30.0, util_target=0.7, **_SHARED
+        )),
+    )
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def _append_trajectory(record: dict) -> None:
+    history = []
+    if TRAJECTORY.exists():
+        try:
+            history = json.loads(TRAJECTORY.read_text())
+        except (ValueError, OSError):
+            history = []  # a corrupt artifact must not fail the bench
+    history.append(record)
+    TRAJECTORY.write_text(json.dumps(history, indent=1) + "\n")
+
+
+def main(smoke: bool = False) -> list[str]:
+    seeds = SEEDS[:4] if smoke else SEEDS
+    spec = _spec()
+    rows: list[str] = []
+    print(f"(seed-mean over {len(seeds)} seeds; {CYCLES}x {PRESET} periods, "
+          f"{spec.n_requests} requests; deadline {spec.slo_mix[0][2]:.0f}s, "
+          f"warmup {spec.warmup_s:.0f}s, spot mean life "
+          f"{spec.spot_mean_life_s:.0f}s)")
+    print(f"{'policy':12s} {'p99_0_s':>8s} {'p50_s':>7s} {'cost_$':>8s} "
+          f"{'$/on_time':>9s} {'on_time':>7s} {'preempt':>7s} "
+          f"{'spawned':>7s} {'pool_peak':>9s}")
+    stats: dict[str, dict[str, float]] = {}
+    record_pol: dict[str, dict] = {}
+    for label, asc in _configs():
+        p99s, p50s, costs, dpos, onts, pres, sps, peaks, uss = (
+            [] for _ in range(9)
+        )
+        for seed in seeds:
+            t0 = time.perf_counter()
+            res = run_fleet(spec, seed=seed, autoscale=asc)
+            uss.append((time.perf_counter() - t0) * 1e6)
+            # conservation across preemptions: nothing lost, nothing stuck
+            assert res.completed == len(res.requests), (label, seed)
+            assert res.stranded == 0, (label, seed)
+            on_time = sum(
+                1 for r in res.requests
+                if r.finish_t >= 0
+                and r.finish_t - r.arrive_t <= r.deadline_s
+            )
+            p99s.append(res.latency_quantile(0.99, slo_class=0))
+            p50s.append(res.latency_quantile(0.5))
+            costs.append(res.cost)
+            dpos.append(res.cost / max(on_time, 1))
+            onts.append(on_time)
+            pres.append(res.n_preempted)
+            sps.append(res.n_spawned)
+            peaks.append(res.pool_peak)
+        stats[label] = {"p99": _mean(p99s), "dpo": _mean(dpos)}
+        record_pol[label] = {
+            "p99_0_s": round(_mean(p99s), 2),
+            "cost": round(_mean(costs), 1),
+            "dollars_per_on_time": round(_mean(dpos), 3),
+            "on_time": round(_mean(onts), 1),
+            "preempted": round(_mean(pres), 2),
+            "spawned": round(_mean(sps), 2),
+        }
+        print(f"{label:12s} {_mean(p99s):8.1f} {_mean(p50s):7.1f} "
+              f"{_mean(costs):8.1f} {_mean(dpos):9.3f} {_mean(onts):7.1f} "
+              f"{_mean(pres):7.1f} {_mean(sps):7.1f} {_mean(peaks):9.1f}")
+        rows.append(
+            f"pool/{PRESET}x{CYCLES}/{label},{_mean(uss):.0f}"
+            f",p99_0={_mean(p99s):.1f}s;cost=${_mean(costs):.0f}"
+            f";per_on_time=${_mean(dpos):.2f};preempted={_mean(pres):.1f}"
+        )
+    # the gated claims — loud failure if the typed pool chain regresses
+    assert stats["cost_aware"]["dpo"] < stats["all_fast"]["dpo"], (
+        "cost_aware did not beat all_fast on $-per-on-time-request: "
+        f"{stats['cost_aware']['dpo']:.3f} >= {stats['all_fast']['dpo']:.3f}"
+    )
+    assert stats["cost_aware"]["p99"] <= P99_PARITY * stats["all_fast"]["p99"], (
+        "cost_aware broke class-0 p99 parity (±5%): "
+        f"{stats['cost_aware']['p99']:.1f}s vs "
+        f"{stats['all_fast']['p99']:.1f}s"
+    )
+    assert stats["predictive"]["p99"] < stats["all_fast"]["p99"], (
+        "predictive did not cut the crest-warmup p99 penalty: "
+        f"{stats['predictive']['p99']:.1f}s >= "
+        f"{stats['all_fast']['p99']:.1f}s"
+    )
+    saving = 1.0 - stats["cost_aware"]["dpo"] / stats["all_fast"]["dpo"]
+    cut = 1.0 - stats["predictive"]["p99"] / stats["all_fast"]["p99"]
+    print(f"cost_aware serves on-time work {saving:.0%} cheaper at "
+          f"{stats['cost_aware']['p99'] / stats['all_fast']['p99']:.2f}x "
+          f"the all_fast p99; predictive cuts crest p99 by {cut:.0%}")
+    if not smoke:
+        _append_trajectory({
+            "ts": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+            "preset": f"{PRESET}x{CYCLES}",
+            "seeds": len(seeds),
+            "policies": record_pol,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="4 seeds instead of 8")
+    main(smoke=ap.parse_args().smoke)

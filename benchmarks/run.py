@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         bench_hedge,
         bench_namespace,
         bench_placement,
+        bench_pool,
         bench_replication,
         bench_router,
         bench_simperf,
@@ -64,6 +65,8 @@ def main(argv=None) -> None:
          lambda: bench_simperf.main(smoke=opts.smoke)),
         ("claim14: token-level continuous batching on the real replica",
          lambda: bench_decode.main(smoke=opts.smoke)),
+        ("claim15: cost-aware typed pool + predictive crest scaling",
+         lambda: bench_pool.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

@@ -10,6 +10,8 @@ kept in-tree so the next regression is a one-liner to attribute:
     PYTHONPATH=src python scripts/profile_fleet.py --legacy        # old loop
     PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_churny \\
         --n 5000 --sort tottime --top 30
+    PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_spot \\
+        # typed pool + spot preemption path, at the preset's own size
     PYTHONPATH=src python scripts/profile_fleet.py --engine workload \\
         --preset overload_2pod --repeat 20   # run_workload attempt loop
 
@@ -54,9 +56,12 @@ def main(argv=None) -> None:
                     help="FLEET_PRESETS name (fleet engine, default "
                          "fleet_million) or PRESETS name (workload engine, "
                          "default overload_2pod)")
-    ap.add_argument("--n", type=int, default=20_000,
+    ap.add_argument("--n", type=int, default=None,
                     help="fleet engine: override the preset's n_requests "
-                         "(0 = keep)")
+                         "(0 = keep; default 20000 for fleet_million, "
+                         "otherwise keep the preset's own — so e.g. "
+                         "--preset fleet_spot profiles the preemption "
+                         "path at its golden-trace size)")
     ap.add_argument("--repeat", type=int, default=10,
                     help="workload engine: replays of the scenario")
     ap.add_argument("--legacy", action="store_true",
@@ -87,7 +92,14 @@ def main(argv=None) -> None:
               f"({opts.repeat * res.completed / wall:,.0f} tasks/s, "
               f"profiler overhead included)")
     else:
-        spec = build_spec(opts.preset or "fleet_million", opts.n or None)
+        preset = opts.preset or "fleet_million"
+        if preset not in FLEET_PRESETS:
+            ap.error(f"--preset must name a FLEET_PRESETS scenario: "
+                     f"{sorted(FLEET_PRESETS)}")
+        n = opts.n
+        if n is None:
+            n = 20_000 if preset == "fleet_million" else 0
+        spec = build_spec(preset, n or None)
         t0 = time.perf_counter()
         prof.enable()
         res = run_fleet(

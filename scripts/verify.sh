@@ -60,6 +60,10 @@ PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_simperf.py --smoke
 # claim 14 runs the real replica's decode loop (arena vs cohort tok/s,
 # asserted mixed-length multiple) — the one smoke section that compiles JAX
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_decode.py --smoke
+# claim 15 replays the diurnal regime through the typed pool: cost_aware
+# must beat all_fast on $/on-time at p99 parity, predictive must cut the
+# crest-warmup p99 — asserted inside the bench
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_pool.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

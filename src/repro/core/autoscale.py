@@ -54,6 +54,18 @@ Policies, and the design rule each one operationalizes:
     maintains (:func:`~repro.core.admission.trailing_class_p99`). Grow
     when the estimate leaves the budget's target band, shrink only when it
     is comfortably inside.
+``cost_aware``
+    The D-SPACE4Cloud cost axis (PR 9): backlog-threshold *timing* with a
+    typed spawn decision — grow with the catalog type
+    (:data:`REPLICA_TYPES`: ``fast`` / ``slow`` / ``spot``, each a
+    nameplate rate and a $/replica-second price) that delivers the most
+    capacity per dollar, capped on the pool's preemptible-capacity share;
+    shrink victims via the shared price-aware rule.
+``predictive``
+    Fit the arrival trace's period (autocorrelation over binned arrivals
+    fed through ``note_request``) and spawn *before* the crest, hiding
+    the warmup lag reactive policies pay at every cycle's upswing;
+    reactive backlog-threshold behavior until a period is learned.
 
 Protocol (both consumers follow it):
 
@@ -74,7 +86,7 @@ from __future__ import annotations
 
 import copy
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import cached_property
 from typing import Callable, Mapping, Optional, Sequence, Union
 
@@ -86,6 +98,47 @@ SHRINK = "shrink"
 HOLD = "hold"
 
 _EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class ReplicaType:
+    """One entry in the replica-type catalog: a nameplate work rate, a
+    ``$ / replica-second`` price while online, and whether the cloud may
+    preempt it. ``price / rate`` is the $-per-unit-of-work a healthy
+    replica of this type delivers — the value metric ``cost_aware`` spawns
+    by and :func:`default_shrink_victim` sheds by."""
+
+    name: str
+    rate: float  # nameplate work rate (sim units / relative tok-s)
+    price: float  # $ per replica-second while online
+    preemptible: bool = False
+
+    @property
+    def value(self) -> float:
+        """Nameplate capacity per dollar-second — higher is cheaper work."""
+        return self.rate / max(self.price, _EPS)
+
+
+REPLICA_TYPES: dict[str, ReplicaType] = {
+    # "default" keeps untyped pools bit-identical: price 1.0 makes
+    # FleetResult.cost == replica_seconds, exactly the pre-typed currency.
+    "default": ReplicaType("default", rate=1.0, price=1.0),
+    "fast": ReplicaType("fast", rate=1.0, price=1.0),
+    "slow": ReplicaType("slow", rate=0.5, price=0.4),
+    "spot": ReplicaType("spot", rate=1.0, price=0.35, preemptible=True),
+}
+
+
+def get_replica_type(name: Optional[str]) -> ReplicaType:
+    """Resolve a type name (``None`` → ``default``) from the catalog."""
+    if name is None:
+        return REPLICA_TYPES["default"]
+    try:
+        return REPLICA_TYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown replica type {name!r}; known: {sorted(REPLICA_TYPES)}"
+        ) from None
 
 
 @dataclass(frozen=True)
@@ -143,6 +196,44 @@ class PoolView:
         ``shortest_backlog`` joins on."""
         return self.backlog_work / max(self.live_capacity, _EPS)
 
+    # -- typed aggregates (PR 9): what a cost-aware policy sizes against --
+    @cached_property
+    def count_by_type(self) -> dict[str, int]:
+        """Routable replica count per type name."""
+        out: dict[str, int] = {}
+        for v in self.routable:
+            out[v.rtype] = out.get(v.rtype, 0) + 1
+        return out
+
+    @cached_property
+    def capacity_by_type(self) -> dict[str, float]:
+        """Measured routable capacity per type name."""
+        out: dict[str, float] = {}
+        for v in self.routable:
+            out[v.rtype] = out.get(v.rtype, 0.0) + v.capacity
+        return out
+
+    @cached_property
+    def price_per_s(self) -> float:
+        """$/s the pool burns right now — every online replica bills while
+        it is up, draining or not, so this sums ``replicas``, not
+        ``routable``."""
+        return sum(v.price for v in self.replicas)
+
+    @cached_property
+    def preemptible_frac(self) -> float:
+        """Share of routable *nameplate* capacity on preemptible types —
+        nameplate, not measured, so a degraded spot still counts toward
+        the risk budget ``cost_aware`` caps."""
+        total = sum(v.nameplate for v in self.routable)
+        if total <= _EPS:
+            return 0.0
+        at_risk = sum(
+            v.nameplate for v in self.routable
+            if REPLICA_TYPES.get(v.rtype, REPLICA_TYPES["default"]).preemptible
+        )
+        return at_risk / total
+
 
 @dataclass(frozen=True)
 class ScaleDecision:
@@ -154,6 +245,10 @@ class ScaleDecision:
     action: str  # GROW | SHRINK | HOLD
     replica_id: Optional[int] = None
     reason: str = ""
+    # Which catalog type a GROW should spawn. ``None`` keeps the legacy
+    # untyped spawn (FleetSpec.spawn_rate / the plain replica_factory), so
+    # pre-typed policies and replays are bit-identical.
+    rtype: Optional[str] = None
 
 
 class Autoscaler:
@@ -204,16 +299,26 @@ class Autoscaler:
 
 
 def default_shrink_victim(view: PoolView) -> Optional[int]:
-    """The one drain-target rule every consumer shares: the slowest
-    measured routable replica; ties go to the *newest* (highest id), so an
-    elastic pool sheds its spawned replicas before the provisioned base.
-    Policies use it to name a victim; the engines
-    (``run_fleet``/``FleetLoop``) fall back to it when a policy names
-    none (or an invalid one) — one rule, three call sites, zero drift."""
+    """The one drain-target rule every consumer shares: the routable
+    replica delivering the least *measured capacity per dollar-second*
+    (``capacity / price``) — shedding it trims the bill the most per unit
+    of throughput lost. Ties (including every all-default-price pool,
+    where the value key degenerates to capacity and the ordering is
+    bit-identical to the pre-typed rule) go to the slowest measured, then
+    to the *newest* (highest id), so an elastic pool sheds its spawned
+    replicas before the provisioned base. Policies use it to name a
+    victim; the engines (``run_fleet``/``FleetLoop``) fall back to it when
+    a policy names none (or an invalid one) — one rule, three call sites,
+    zero drift."""
     cands = view.routable
     if not cands:
         return None
-    return min(cands, key=lambda v: (v.capacity, -v.replica_id)).replica_id
+    return min(
+        cands,
+        key=lambda v: (
+            v.capacity / max(v.price, _EPS), v.capacity, -v.replica_id,
+        ),
+    ).replica_id
 
 
 class FixedPool(Autoscaler):
@@ -475,10 +580,230 @@ class DeadlineAwareScaler(Autoscaler):
         return ScaleDecision(HOLD)
 
 
+class CostAwareScaler(BacklogThresholdScaler):
+    """Backlog-threshold timing, cost-aware *type* choice: when the pool
+    must grow, spawn the catalog type with the best nameplate-capacity per
+    dollar-second (``ReplicaType.value``), capped on preemption risk.
+
+    The D-SPACE4Cloud objective — meet the deadline at minimum cost —
+    splits into *when* and *what*. The *when* is inherited unchanged from
+    :class:`BacklogThresholdScaler` (sustained backlog-seconds, cooldowns,
+    pool bounds), so head-to-head comparisons against an all-``fast``
+    backlog-threshold pool isolate the type decision. The *what* ranks
+    ``types`` by value (``spot`` at 1.0 work/s for $0.35/s beats ``fast``
+    at $1.00/s); preemptible types are skipped while the pool's
+    preemptible nameplate share (:attr:`PoolView.preemptible_frac`) is at
+    or above ``spot_frac_max`` — the risk budget that keeps a preemption
+    wave from taking out the whole elastic tier at once.
+
+    Shrink follows the price-aware :func:`default_shrink_victim` rule —
+    with one reliability override: the last ``keep_nonpreemptible``
+    non-preemptible replicas are never named as victims while a
+    preemptible one exists. The raw $-per-capacity ordering would shed
+    the expensive on-demand base *first* and leave an all-spot pool; one
+    preemption wave later the fleet is gone with work still parked. The
+    floor is the on-demand base every spot deployment keeps.
+    """
+
+    name = "cost_aware"
+
+    def __init__(
+        self,
+        types: Sequence[str] = ("spot", "slow", "fast"),
+        spot_frac_max: float = 0.6,
+        keep_nonpreemptible: int = 1,
+        **kwargs,
+    ) -> None:
+        self.types = tuple(types)
+        self.spot_frac_max = spot_frac_max
+        self.keep_nonpreemptible = keep_nonpreemptible
+        super().__init__(**kwargs)
+
+    def _pick_type(self, view: PoolView) -> str:
+        cands = [get_replica_type(n) for n in self.types]
+        if view.preemptible_frac >= self.spot_frac_max - _EPS:
+            safe = [rt for rt in cands if not rt.preemptible]
+            cands = safe or cands  # all-preemptible catalog: spawn anyway
+        best = max(cands, key=lambda rt: (rt.value, -rt.price, rt.name))
+        return best.name
+
+    def _pick_victim(self, view: PoolView) -> Optional[int]:
+        cands = view.routable
+        if not cands:
+            return None
+        pre = [
+            v for v in cands if get_replica_type(v.rtype).preemptible
+        ]
+        nonpre_left = len(cands) - len(pre)
+        pool = cands
+        if pre and nonpre_left <= self.keep_nonpreemptible:
+            pool = pre  # protect the on-demand floor: shed spots instead
+        return min(
+            pool,
+            key=lambda v: (
+                v.capacity / max(v.price, _EPS), v.capacity, -v.replica_id,
+            ),
+        ).replica_id
+
+    def decide(self, view):
+        d = super().decide(view)
+        if d.action == SHRINK:
+            victim = self._pick_victim(view)
+            if victim is not None:
+                return replace(d, replica_id=victim)
+            return d
+        if d.action != GROW:
+            return d
+        rtype = self._pick_type(view)
+        return replace(d, rtype=rtype, reason=f"{d.reason} → spawn {rtype}")
+
+
+class PredictiveScaler(BacklogThresholdScaler):
+    """Fit the arrival trace's period and spawn *before* the crest, so
+    the warmup lag is paid while the pool is still quiet instead of while
+    the backlog it was meant to absorb piles up (the crest-warmup p99
+    penalty claim 11 measures on reactive scaling).
+
+    ``note_request`` bins arrivals (``bin_s`` buckets); once enough
+    history exists the period is fit by autocorrelation over the
+    mean-centered bin counts (or pinned via ``period_s``). ``decide``
+    then forecasts seasonal-naively — the predicted arrival-work rate over
+    the next ``lead_s`` is last cycle's observed rate at the same phase —
+    and grows whenever committed capacity (live + warming) cannot carry
+    that rate at ``util_target`` utilization. ``lead_s`` must exceed the
+    consumer's warmup lag for the spawn to land before the crest does.
+    Until a period is known the policy behaves exactly like its
+    :class:`BacklogThresholdScaler` base (reactive), so the first cycle
+    is served no worse while it is being learned; shrink stays reactive
+    (shedding late costs replica-seconds, not tail latency).
+
+    ``rtype`` optionally types every spawn; ``None`` keeps the untyped
+    legacy spawn so the policy drops into pre-typed fleets unchanged.
+    """
+
+    name = "predictive"
+
+    def __init__(
+        self,
+        period_s: Optional[float] = None,
+        bin_s: float = 20.0,
+        lead_s: float = 30.0,
+        util_target: float = 0.7,
+        min_period_s: float = 120.0,
+        max_period_s: float = 7200.0,
+        min_corr: float = 0.2,
+        rtype: Optional[str] = None,
+        **kwargs,
+    ) -> None:
+        self.period_s = period_s
+        self.bin_s = bin_s
+        self.lead_s = lead_s
+        self.util_target = util_target
+        self.min_period_s = min_period_s
+        self.max_period_s = max_period_s
+        self.min_corr = min_corr
+        self.rtype = rtype
+        super().__init__(**kwargs)
+
+    def reset(self) -> None:
+        super().reset()
+        self._bins: list[int] = []
+        self._work_sum: float = 0.0
+        self._n_seen: int = 0
+        self._fit_period: Optional[int] = None  # period in bins
+        self._fit_at: int = 0  # len(_bins) when last fit ran
+
+    def note_request(self, req: JobRequest) -> None:
+        i = int(req.arrive_t / self.bin_s)
+        bins = self._bins
+        if i >= len(bins):
+            bins.extend([0] * (i + 1 - len(bins)))
+        bins[i] += 1
+        self._work_sum += req.total_work
+        self._n_seen += 1
+
+    def _autocorr_fit(self) -> Optional[int]:
+        """Argmax-autocovariance lag over the candidate period range, or
+        ``None`` when no lag clears ``min_corr`` (normalized)."""
+        x = self._bins
+        n = len(x)
+        lo = max(2, int(round(self.min_period_s / self.bin_s)))
+        hi = min(int(round(self.max_period_s / self.bin_s)), n // 2)
+        if hi < lo:
+            return None
+        mean = sum(x) / n
+        xc = [v - mean for v in x]
+        var = sum(v * v for v in xc) / n
+        if var <= _EPS:
+            return None
+        best, best_score = None, self.min_corr
+        for lag in range(lo, hi + 1):
+            m = n - lag
+            score = sum(xc[i] * xc[i + lag] for i in range(m)) / (m * var)
+            if score > best_score:
+                best, best_score = lag, score
+        return best
+
+    def _period_bins(self) -> Optional[int]:
+        if self.period_s is not None:
+            return max(1, int(round(self.period_s / self.bin_s)))
+        # refit only when the history grew ≥25% since the last fit — the
+        # fit is O(bins²) and decide() runs on the scale cadence
+        if self._fit_period is None or len(self._bins) >= self._fit_at * 5 // 4:
+            self._fit_period = self._autocorr_fit()
+            self._fit_at = len(self._bins)
+        return self._fit_period
+
+    def _forecast_grow(self, view: PoolView) -> Optional[ScaleDecision]:
+        t = view.time
+        if not self._cooled(t) or view.pool_size >= self.max_replicas:
+            return None
+        period = self._period_bins()
+        if period is None or self._n_seen == 0:
+            return None
+        bins = self._bins
+        j0 = int(t / self.bin_s) - period
+        j1 = int((t + self.lead_s) / self.bin_s) - period
+        window = [bins[j] for j in range(j0, j1 + 1) if 0 <= j < len(bins)]
+        if not window:
+            return None  # first cycle: no same-phase history yet
+        mean_work = self._work_sum / self._n_seen
+        pred_rate = max(window) * mean_work / self.bin_s
+        spawn_cap = get_replica_type(self.rtype).rate
+        committed = view.live_capacity + view.n_warming * spawn_cap
+        needed = pred_rate / max(self.util_target, _EPS)
+        if committed + _EPS >= needed:
+            return None
+        self._undo = (self._last_action_t, self._above_since,
+                      self._below_since)
+        self._last_action_t = t
+        self._above_since = None
+        return ScaleDecision(
+            GROW, rtype=self.rtype,
+            reason=(
+                f"predicted {pred_rate:.2f} work/s within {self.lead_s:.0f}s "
+                f"> {committed:.2f} committed @ {self.util_target:.0%} util "
+                f"(period {period * self.bin_s:.0f}s)"
+            ),
+        )
+
+    def decide(self, view):
+        self._undo = None  # a veto only applies to the decision below
+        d = self._forecast_grow(view)
+        if d is not None:
+            return d
+        d = super().decide(view)
+        if d.action == GROW and self.rtype is not None and d.rtype is None:
+            d = replace(d, rtype=self.rtype)
+        return d
+
+
 AUTOSCALE: dict[str, Callable[[], Autoscaler]] = {
     "fixed": FixedPool,
     "backlog_threshold": BacklogThresholdScaler,
     "deadline_aware": DeadlineAwareScaler,
+    "cost_aware": CostAwareScaler,
+    "predictive": PredictiveScaler,
 }
 
 

@@ -104,6 +104,8 @@ class ReplicaView:
     queue_depth: int  # outstanding requests (queued + in service)
     oldest_age_s: float  # age of the oldest outstanding dispatch
     alive: bool = True  # not pronounced dead
+    rtype: str = "default"  # replica type name (core.autoscale.REPLICA_TYPES)
+    price: float = 1.0  # $/replica-second while online
 
     @property
     def backlog_s(self) -> float:

@@ -111,6 +111,7 @@ from repro.core.autoscale import (
     PoolView,
     default_shrink_victim,
     get_autoscaler,
+    get_replica_type,
 )
 from repro.core.placement import Grain, plan_placement
 from repro.core.router import (
@@ -472,6 +473,16 @@ class FleetSpec:
     # class-0 reserve share (PR 6): consumed by the class_reserved router/
     # scheduler and by hedged duplicate dispatch (run_fleet(hedge=True))
     reserve_frac: float = 0.5
+    # typed replica pool (PR 9): per-replica type names from
+    # core.autoscale.REPLICA_TYPES, parallel to replica_rates. None means
+    # every replica is "default" (price 1.0, never preempted) — the
+    # pre-typed pool, bit-identical. Preemptible replicas (type "spot")
+    # live ~Exp(spot_mean_life_s) from birth, get spot_notice_s of notice
+    # (routing stops), then are killed: queued + in-service work is
+    # re-dispatched through the cancel/route rescue path.
+    replica_types: Optional[tuple[str, ...]] = None
+    spot_mean_life_s: float = 600.0
+    spot_notice_s: float = 5.0
     description: str = ""
 
     @property
@@ -688,11 +699,19 @@ class FleetResult:
     duplicate_work: float = 0.0  # losing attempts' progress (the hedge tax)
     # autoscaling outcome (PR 5); with autoscale=None the pool is static,
     # so spawned/retired are 0 and replica_seconds = n_replicas × makespan
+    # — minus any replica that dies for good or is spot-preempted, which
+    # stops billing at its death/kill time (the PR-9 billing fix)
     autoscaler: str = "none"
     n_spawned: int = 0  # replicas added by scale_up decisions
     n_retired: int = 0  # replicas drained and removed by scale_down
     pool_peak: int = 0  # max simultaneously-online replicas
     replica_seconds: float = 0.0  # Σ per-replica online time (cost currency)
+    # typed-pool billing (PR 9): Σ billed-seconds × the replica type's
+    # $/replica-second price. With an untyped pool every price is 1.0, so
+    # cost == replica_seconds and cost_by_type == {"default": cost}.
+    cost: float = 0.0
+    cost_by_type: Optional[dict[str, float]] = None
+    n_preempted: int = 0  # spot replicas killed mid-run
     # simulator-throughput accounting (PR 7): loop events processed, and —
     # when per-request records are skipped (collect_requests=False) — the
     # per-class sojourn lists that keep latency_quantile working anyway
@@ -793,6 +812,21 @@ FLEET_PRESETS: dict[str, FleetSpec] = {
         spawn_rate=1.0, warmup_s=15.0, scale_check_s=5.0,
         description="sinusoidal offered load over a 10-minute period",
     ),
+    # The typed-pool preemption regime (PR 9): half the fleet is cheap
+    # preemptible capacity that dies mid-run with short notice. Each kill
+    # evicts a queue through the cancel/route rescue path while the
+    # stream is still arriving — the conservation + typed-replay tests
+    # (tests/test_pool.py) and the fleet_spot goldens replay this preset.
+    "fleet_spot": FleetSpec(
+        replica_rates=(1.0, 1.0, 1.0, 1.0),
+        replica_types=("fast", "fast", "spot", "spot"),
+        n_requests=64,
+        arrival="poisson", mean_interarrival_s=4.0,
+        work_per_request=(4.0, 16.0),
+        slo_mix=((1.0, 0, 150.0),),
+        spot_mean_life_s=120.0, spot_notice_s=5.0,
+        description="two fast + two spot replicas; spots preempt mid-run",
+    ),
     # The claim-13 scale regime (benchmarks/bench_simperf.py): a million
     # diurnal requests over 120 mixed-generation replicas (Σ nameplate
     # 84 work/s), offered slightly above capacity at the mean so the
@@ -874,12 +908,22 @@ class _ReplicaState:
         "version", "observed", "pronounced",
         "online", "draining", "retired", "online_t", "offline_t",
         "queued_work", "age_heap", "oldest_rid", "oldest_t0", "nameplate",
+        "rtype", "price", "view",
     )
 
     def __init__(self, worker: SimWorker, online: bool = True,
                  online_t: float = 0.0, legacy: bool = False):
         self.worker = worker
         self.nameplate = worker.rate  # static; cached off the view hot loop
+        self.rtype = "default"  # catalog type name (REPLICA_TYPES)
+        self.price = 1.0  # $/replica-second while billed
+        # per-replica pooled ReplicaView (PR 9): the incremental engine
+        # rebuilds views by overwriting this one object's __dict__ in
+        # place instead of allocating ~R fresh frozen dataclasses per
+        # decision — the fleet_million allocation hotspot. Safe because
+        # every consumer reads views synchronously within one event
+        # handler and nothing retains them across rebuilds.
+        self.view = None
         # rids waiting, FIFO (deque; the legacy engine keeps the old list)
         self.queue = _ListQueue() if legacy else deque()
         self.queued_work = 0.0  # Σ total_work over self.queue
@@ -1058,6 +1102,20 @@ def run_fleet(
 
     legacy = legacy_views
     repl = [_ReplicaState(w, legacy=legacy) for w in workers]
+    if spec.replica_types is not None:
+        if len(spec.replica_types) != len(spec.replica_rates):
+            raise ValueError(
+                "replica_types must parallel replica_rates: "
+                f"{len(spec.replica_types)} != {len(spec.replica_rates)}"
+            )
+        for st, name in zip(repl, spec.replica_types):
+            rt = get_replica_type(name)
+            st.rtype = rt.name
+            st.price = rt.price
+    # preemption lifetimes draw from their own stream, so typed pools with
+    # preemption off — and every untyped pool — never perturb the main
+    # rng sequence the goldens pin
+    spot_rng = random.Random(seed ^ 0x5EED5)
     rs = {r.job_id: _ReqState(r) for r in reqs}
     trace_out: list[ChurnEvent] = []
     trace = trace_out if collect_trace else _NullTrace()
@@ -1081,6 +1139,7 @@ def run_fleet(
     served_by = {i: 0 for i in range(len(workers))}
     n_spawned = [0]
     n_retired = [0]
+    n_preempted = [0]
     pool_peak = [len(workers)]
     last_arrival_t = max((r.arrive_t for r in reqs), default=0.0)
 
@@ -1090,11 +1149,38 @@ def run_fleet(
         )
 
     heap: list[tuple[float, int, str, object]] = []
-    seq = [0]
+    # arrivals stream into the heap lazily (PR 9): each popped arrival
+    # pushes the next, so the heap holds dozens of events instead of the
+    # full 10⁶ front-loaded stream (the fleet_million cache-residency
+    # tax). Sequence numbers are pre-assigned in rid order (arrival rid →
+    # seq rid+1, dynamic events start at n_requests+1) — exactly the seqs
+    # the eager push-all loop handed out, so same-t tie-breaking and
+    # every replay stay bit-identical.
+    seq = [len(reqs)]
+    arr_order = sorted(range(len(reqs)), key=lambda k: (reqs[k].arrive_t, k))
+    arr_next = [0]
 
     def push(t: float, kind: str, payload) -> None:
         seq[0] += 1
         heapq.heappush(heap, (t, seq[0], kind, payload))
+
+    def push_next_arrival() -> None:
+        k = arr_next[0]
+        if k < len(arr_order):
+            arr_next[0] = k + 1
+            rid = arr_order[k]
+            heapq.heappush(
+                heap, (reqs[rid].arrive_t, rid + 1, "arrival", rid)
+            )
+
+    def arm_preemption(i: int, birth_t: float) -> None:
+        """Draw a preemptible replica's lifetime and schedule its notice +
+        kill. Called at birth (setup for base replicas, spawn for elastic
+        ones), so the draw order — and the replay — is deterministic."""
+        life = spot_rng.expovariate(1.0 / max(spec.spot_mean_life_s, 1e-9))
+        kill_t = birth_t + life
+        push(max(birth_t, kill_t - spec.spot_notice_s), "spot_notice", i)
+        push(kill_t, "spot_kill", i)
 
     # ---- incremental view bookkeeping (PR 7) ---------------------------
     # The "incremental view contract" (docs/architecture.md): every queue
@@ -1289,6 +1375,8 @@ def run_fleet(
                         queue_depth=len(rids),
                         oldest_age_s=oldest,
                         alive=not st.pronounced and not st.draining,
+                        rtype=st.rtype,
+                        price=st.price,
                     )
                 )
             return out
@@ -1298,9 +1386,15 @@ def run_fleet(
         # replicas), so the loop is hand-flattened: done_est and
         # oldest_dispatch_t are inlined with their float ops in the
         # original order (the min/max idioms below reproduce the builtins
-        # branch for branch), and views are built by filling the frozen
-        # dataclass's __dict__ directly — same immutable ReplicaView,
-        # without paying object.__setattr__ seven times per replica.
+        # branch for branch), and each replica's view is one *pooled*
+        # frozen ReplicaView whose __dict__ is overwritten in place (PR 9)
+        # — the static fields (id, nameplate, type, price) are written
+        # once at pool time, the dynamic ones per rebuild. Rebuilding used
+        # to allocate ~R objects + dicts per decision, the dominant
+        # fleet_million allocator hotspot; pooling is safe because every
+        # consumer reads views synchronously inside one event handler
+        # (routers cache by value, never by view identity) and no handler
+        # holds a views list across a rebuild.
         out = []
         out_append = out.append
         rv_new = ReplicaView.__new__
@@ -1340,11 +1434,18 @@ def run_fleet(
                     heappop(h)
             if check_views:
                 check_view(i, st, t, depth, oldest_dispatch_t(i))
-            v = rv_new(ReplicaView)
-            d = v.__dict__
-            d["replica_id"] = i
+            v = st.view
+            if v is None:
+                v = rv_new(ReplicaView)
+                d = v.__dict__
+                d["replica_id"] = i
+                d["nameplate"] = st.nameplate
+                d["rtype"] = st.rtype
+                d["price"] = st.price
+                st.view = v
+            else:
+                d = v.__dict__
             d["capacity"] = st.observed
-            d["nameplate"] = st.nameplate
             d["backlog_work"] = backlog
             d["queue_depth"] = depth
             d["oldest_age_s"] = oldest
@@ -1531,9 +1632,21 @@ def run_fleet(
             outstanding = any(
                 st.serving is not None or st.queue for st in repl
             )
+        # retired replicas are *gone* — a drained or preempted replica's
+        # worker still reads alive(t), but it can never serve again, so it
+        # must not keep the monitor chain (and the run) alive. Without the
+        # retired check an all-preempted pool with parked work re-arms the
+        # probe forever (the scale chain below already guards this way).
         can_progress = any(
-            w.alive(t) or (w.recover_at is not None and w.recover_at > t)
-            for w in workers
+            not st.retired
+            and (
+                st.worker.alive(t)
+                or (
+                    st.worker.recover_at is not None
+                    and st.worker.recover_at > t
+                )
+            )
+            for st in repl
         )
         return bool(((redispatch and outstanding) or parked) and can_progress)
 
@@ -1619,24 +1732,32 @@ def run_fleet(
             trace.append(ChurnEvent(t, "replica_retired", {"replica": i}))
             signal_capacity(t)
 
-    def spawn(t: float, reason: str) -> None:
+    def spawn(t: float, reason: str, rtype: Optional[str] = None) -> None:
         i = len(repl)
-        w = SimWorker(Location(0, i), spec.spawn_rate)
+        # a typed GROW (ScaleDecision.rtype) spawns at the catalog type's
+        # nameplate rate and price; an untyped one keeps the legacy
+        # spec.spawn_rate replica — bit-identical pre-typed replays
+        rt = get_replica_type(rtype) if rtype is not None else None
+        w = SimWorker(Location(0, i), rt.rate if rt else spec.spawn_rate)
         workers.append(w)
         # billed from the decision (online_t=t): the warmup lag is paid
         # capacity, which is exactly why scaling policies need cooldowns
         st = _ReplicaState(w, online=False, online_t=t, legacy=legacy)
+        if rt is not None:
+            st.rtype = rt.name
+            st.price = rt.price
         repl.append(st)
         served_by[i] = 0
         n_spawned[0] += 1
         touch()
         warm_at = t + spec.warmup_s
-        trace.append(
-            ChurnEvent(t, "scale_up", {
-                "replica": i, "warm_at": warm_at, "reason": reason,
-            })
-        )
+        detail = {"replica": i, "warm_at": warm_at, "reason": reason}
+        if rt is not None:
+            detail["rtype"] = rt.name
+        trace.append(ChurnEvent(t, "scale_up", detail))
         push(warm_at, "replica_warm", i)
+        if rt is not None and rt.preemptible:
+            arm_preemption(i, t)
 
     def rebalance_to(i: int, t: float) -> None:
         """Pull *queued* (unstarted) requests from the deepest
@@ -1732,7 +1853,7 @@ def run_fleet(
         next_scale[0] = math.inf
         d = asc.decide(pool_view(t))
         if d.action == GROW:
-            spawn(t, d.reason)
+            spawn(t, d.reason, d.rtype)
             asc.note_action_done(t)  # instantaneous in sim-time
         elif d.action == SHRINK:
             victim = shrink_target(t, d.replica_id)
@@ -1775,8 +1896,7 @@ def run_fleet(
             arm_scale(t)
 
     # ---- event timers ---------------------------------------------------
-    for r in reqs:
-        push(r.arrive_t, "arrival", r.job_id)
+    push_next_arrival()  # the rest of the stream feeds lazily, pop by pop
     for i, w in enumerate(workers):
         if w.slow_at is not None:
             push(w.slow_at, "rate_change", i)
@@ -1789,6 +1909,9 @@ def run_fleet(
                 push(pronounce_t, "pronounce", i)
             if w.recover_at is not None:
                 push(max(w.recover_at, w.fail_at), "recover", i)
+    for i, st in enumerate(repl):
+        if get_replica_type(st.rtype).preemptible:
+            arm_preemption(i, 0.0)
     if asc is not None:
         next_scale[0] = 0.0
         push(0.0, "scale_check", None)
@@ -1799,6 +1922,7 @@ def run_fleet(
         n_events[0] += 1
         if kind == "arrival":
             rid = payload
+            push_next_arrival()
             if collect_trace:
                 trace.append(
                     ChurnEvent(t, "request_arrival", {"request": rid})
@@ -1902,6 +2026,13 @@ def run_fleet(
             i = payload
             st = repl[i]
             trace.append(ChurnEvent(t, "replica_fail", {"replica": i}))
+            if st.worker.recover_at is None:
+                # billing fix (PR 9): a replica dead for good stops
+                # accruing replica-seconds at its death, not at makespan —
+                # the instance is gone, nobody pays for the corpse. A
+                # failure with a recovery ahead keeps billing through the
+                # outage: the instance is still held.
+                st.offline_t = min(st.offline_t, t)
             if st.serving is not None:
                 # progress freezes with the replica; the request stays
                 # assigned (stuck) until re-dispatch or recovery
@@ -1969,6 +2100,57 @@ def run_fleet(
                 signal_capacity(t)
                 retry_parked(t)
                 rebalance_to(i, t)
+        elif kind == "spot_notice":
+            # the cloud's heads-up: routing stops (the view reads
+            # alive=False, like a scale_down drain) but the replica keeps
+            # serving through the notice window — work it finishes before
+            # the kill is work the rescue never has to move
+            i = payload
+            st = repl[i]
+            if not st.retired:
+                st.draining = True
+                touch()
+                trace.append(ChurnEvent(t, "spot_notice", {"replica": i}))
+                signal_capacity(t)
+        elif kind == "spot_kill":
+            i = payload
+            st = repl[i]
+            if st.retired:
+                continue  # drained dry inside the notice window: released
+            evicted = list(st.queue)
+            serving = st.serving
+            # retire first so the eviction cancels below cannot restart
+            # service or double-retire through maybe_retire
+            st.retired = True
+            st.online = False
+            st.offline_t = min(st.offline_t, t)  # billing stops at the kill
+            n_preempted[0] += 1
+            for rid in evicted:
+                cancel(rid, i, t)  # queued: zero progress discarded
+            if serving is not None:
+                cancel(serving, i, t)  # in-service progress → wasted_work
+            st.version += 1  # invalidate any scheduled completion
+            touch()
+            trace.append(
+                ChurnEvent(t, "spot_preempt", {
+                    "replica": i,
+                    "evicted": len(evicted) + (1 if serving is not None else 0),
+                })
+            )
+            signal_capacity(t)
+            # re-dispatch the in-flight work through the rescue path: a
+            # hedged request whose sibling attempt is still racing keeps
+            # that attempt and is NOT re-routed (the sibling is its
+            # backup; a preempted attempt is never resurrected)
+            if serving is not None:
+                evicted.append(serving)
+            for rid in evicted:
+                r = rs[rid]
+                if (
+                    r.replica is None and r.hedge_replica is None
+                    and r.finish_t < 0
+                ):
+                    route(rid, t)
         elif kind == "scale_check":
             if asc is not None:
                 scale_tick(t)
@@ -2014,13 +2196,20 @@ def run_fleet(
             )
         )
     # replica-seconds: each replica is billed from its spawn decision
-    # (warmup included) until it retires or the last completion lands —
-    # the cost side of the claim-11 trade (a peak-sized fixed pool pays
-    # this for every idle trough)
+    # (warmup included) until it retires, dies for good, is preempted, or
+    # the last completion lands — the cost side of the claim-11 trade (a
+    # peak-sized fixed pool pays this for every idle trough). Dollars are
+    # the same seconds × the replica type's $/replica-second price.
     end_t = makespan[0]
-    replica_seconds = sum(
-        max(0.0, min(st.offline_t, end_t) - st.online_t) for st in repl
-    )
+    replica_seconds = 0.0
+    cost = 0.0
+    cost_by_type: dict[str, float] = {}
+    for st in repl:
+        sec = max(0.0, min(st.offline_t, end_t) - st.online_t)
+        replica_seconds += sec
+        c = sec * st.price
+        cost += c
+        cost_by_type[st.rtype] = cost_by_type.get(st.rtype, 0.0) + c
     return FleetResult(
         router=rtr.name,
         admission=adm.name if adm is not None else "none",
@@ -2045,6 +2234,9 @@ def run_fleet(
         n_retired=n_retired[0],
         pool_peak=pool_peak[0],
         replica_seconds=replica_seconds,
+        cost=cost,
+        cost_by_type=cost_by_type,
+        n_preempted=n_preempted[0],
         n_events=n_events[0],
         sojourns_by_class=sojourns,
     )

@@ -61,7 +61,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional, Sequence, Union
+from typing import Mapping, Optional, Sequence, Union
 
 from repro.core.admission import (
     ADMIT,
@@ -78,6 +78,7 @@ from repro.core.autoscale import (
     PoolView,
     default_shrink_victim,
     get_autoscaler,
+    get_replica_type,
 )
 from repro.core.router import (
     InflightView,
@@ -104,14 +105,35 @@ class FleetLoop:
         probe_s: float = 0.25,
         headroom: float = 0.85,
         autoscale: Union[str, Autoscaler, None] = None,
-        replica_factory=None,  # () -> ServeLoop-compatible, for grow
+        # () -> ServeLoop-compatible, for grow — or a typed registry
+        # {type name: factory} so a GROW decision's ``rtype`` picks which
+        # kind of replica to spawn (the PR-9 typed-pool contract)
+        replica_factory=None,
         scale_check_s: float = 0.5,
         hedge: bool = False,
         reserve_frac: float = 0.5,
+        # catalog type names (core.autoscale.REPLICA_TYPES) for the
+        # *initial* replicas, parallel to ``replicas``; None = all default
+        replica_types: Optional[Sequence[str]] = None,
     ):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         self.replicas = list(replicas)
+        if replica_types is not None and len(replica_types) != len(
+            self.replicas
+        ):
+            raise ValueError(
+                "replica_types must parallel replicas: "
+                f"{len(replica_types)} != {len(self.replicas)}"
+            )
+        self._rtype: dict[int, str] = {
+            i: get_replica_type(
+                replica_types[i] if replica_types is not None else None
+            ).name
+            for i in range(len(self.replicas))
+        }
+        self._online_t: dict[int, float] = {}
+        self._offline_t: dict[int, float] = {}
         self.router = router
         self.admission = admission
         self.redispatch = redispatch
@@ -131,26 +153,43 @@ class FleetLoop:
 
     # -- pool lifecycle (PR 5 autoscaling) --------------------------------
 
-    def add_replica(self):
+    def add_replica(self, rtype: Optional[str] = None):
         """Spawn a replica via ``replica_factory`` and register it.
 
         Called mid-run by the autoscaler's GROW decision (or by the owner
-        before a run). The cold start — compile + warmup — happens here,
-        synchronously: on the hardware path that *is* the warmup lag the
-        simulator's ``warmup_s`` models — and while it runs, no replica
-        ticks, so every in-flight request pauses with it (the single-host
-        cooperative-interleaving trade; a multi-host deployment would
-        spawn out-of-band). The run loop compensates: the policy's
-        cooldown restarts from *completion* (``note_action_done``) and the
-        next scale check is a full cadence after the stall, so a compile
-        longer than ``cooldown_s`` cannot cascade into repeated
-        fleet-freezing spawns. Returns the new replica index.
+        before a run). With a typed factory registry (``replica_factory``
+        a mapping of type name → factory), ``rtype`` selects which kind
+        of replica to build — a typed ``ScaleDecision`` picks cheap spot
+        capacity the same way it does in the simulator; ``rtype=None``
+        against a registry uses the first registered type. The cold start
+        — compile + warmup — happens here, synchronously: on the hardware
+        path that *is* the warmup lag the simulator's ``warmup_s`` models
+        — and while it runs, no replica ticks, so every in-flight request
+        pauses with it (the single-host cooperative-interleaving trade; a
+        multi-host deployment would spawn out-of-band). The run loop
+        compensates: the policy's cooldown restarts from *completion*
+        (``note_action_done``) and the next scale check is a full cadence
+        after the stall, so a compile longer than ``cooldown_s`` cannot
+        cascade into repeated fleet-freezing spawns. Returns the new
+        replica index.
         """
-        if self.replica_factory is None:
-            raise ValueError("add_replica needs a replica_factory")
-        rep = self.replica_factory()
+        factory = self.replica_factory
+        if isinstance(factory, Mapping):
+            if rtype is None:
+                rtype = next(iter(factory), None)
+            factory = factory.get(rtype)
+        if factory is None:
+            raise ValueError(
+                "add_replica needs a replica_factory"
+                + (f" for type {rtype!r}" if rtype is not None else "")
+            )
+        rep = factory()
         i = len(self.replicas)
         self.replicas.append(rep)
+        self._rtype[i] = get_replica_type(rtype).name
+        self._online_t[i] = (
+            time.perf_counter() - self._t0 if self._running else 0.0
+        )
         if self._running:
             if self._prompt_len and hasattr(rep, "warm"):
                 rep.warm(self._prompt_len)
@@ -200,6 +239,7 @@ class FleetLoop:
                 if rids
                 else 0.0
             )
+            rt = self._rtype.get(i, "default")
             out.append(
                 ReplicaView(
                     replica_id=i,
@@ -211,6 +251,8 @@ class FleetLoop:
                     # in-process replicas do not silently die; not-alive
                     # here means *draining* (scale-down in progress)
                     alive=i not in self._draining,
+                    rtype=rt,
+                    price=get_replica_type(rt).price,
                 )
             )
         return out
@@ -249,6 +291,10 @@ class FleetLoop:
         self._hedge_clone: dict[int, Request] = {}
         self._draining = set()
         self._retired = set()
+        # billing meters: base replicas bill from t0; elastic spawns stamp
+        # their own online time, retirees stop the meter in the tick sweep
+        self._online_t = {i: 0.0 for i in range(len(self.replicas))}
+        self._offline_t = {}
         n_moves = 0
         cancelled_tokens = 0
         n_hedged = 0
@@ -363,15 +409,38 @@ class FleetLoop:
             for req, decision in policy.poll(self._cluster_view(t, policy)):
                 resolve(by_id[req.job_id], decision, t)
 
-        fleet_peak = [0.0]  # best nameplate seen anywhere, for backfill
+        # Best nameplate seen, tracked *per replica type*. A fleet-wide
+        # floor made every cold slow/spot replica look perpetually stuck:
+        # backfilled estimates assumed fast-replica throughput, so the
+        # stuck monitor fired spurious re-dispatch storms against healthy
+        # but slower hardware. The fallback for a type with no measurement
+        # yet scales the fleet-best peak by the catalog rate ratio, which
+        # degenerates to the old behaviour for single-type fleets.
+        type_peak: dict[str, float] = {}
+        fleet_best = [0.0, "default"]  # (peak, rtype) — cross-type fallback
+
+        def peak_floor(rt: str) -> float:
+            got = type_peak.get(rt, 0.0)
+            if got > 0.0:
+                return got
+            best, best_rt = fleet_best
+            if best <= 0.0:
+                return 0.0
+            ratio = get_replica_type(rt).rate / max(
+                get_replica_type(best_rt).rate, 1e-9
+            )
+            return best * ratio
 
         def probe(t: float) -> None:
             nonlocal n_moves, cancelled_tokens
             views = self._views(t)
-            fleet_peak[0] = max(
-                fleet_peak[0],
-                max(rep.peak_rate for rep in self.replicas) * self.headroom,
-            )
+            for j, rep_j in enumerate(self.replicas):
+                rt_j = self._rtype.get(j, "default")
+                p = rep_j.peak_rate * self.headroom
+                if p > type_peak.get(rt_j, 0.0):
+                    type_peak[rt_j] = p
+                if p > fleet_best[0]:
+                    fleet_best[0], fleet_best[1] = p, rt_j
             inflight = []
             for i in self._live_indices():
                 rep = self.replicas[i]
@@ -394,7 +463,10 @@ class FleetLoop:
                         # a "measurement" and blew the estimate up to ~1e13
                         # seconds, blinding the stuck monitor on precisely
                         # the replica most likely to need a rescue
-                        base = max(rep.peak_rate * self.headroom, fleet_peak[0])
+                        base = max(
+                            rep.peak_rate * self.headroom,
+                            peak_floor(self._rtype.get(i, "default")),
+                        )
                         if base <= 0:
                             continue  # nothing measured fleet-wide yet
                         est = service_estimate_s(float(r.max_new), base)
@@ -489,7 +561,16 @@ class FleetLoop:
                     # the policy must not burn a cooldown believing it did
                     asc.veto(d)
                     return
-                i = self.add_replica()
+                if (
+                    d.rtype is not None
+                    and isinstance(self.replica_factory, Mapping)
+                    and d.rtype not in self.replica_factory
+                ):
+                    # typed grow the registry cannot satisfy: same veto
+                    # contract as a missing factory
+                    asc.veto(d)
+                    return
+                i = self.add_replica(d.rtype)
                 n_spawned += 1
                 # the spawn's compile/warmup just ran synchronously: the
                 # cooldown restarts from completion, or a compile longer
@@ -531,6 +612,8 @@ class FleetLoop:
                 if self.replicas[i].idle:
                     self._draining.discard(i)
                     self._retired.add(i)
+                    # the meter stops at retirement, not run end
+                    self._offline_t.setdefault(i, t)
             # resolve hedge races BEFORE the completion scan: the first
             # attempt to finish wins, the loser is cancelled through the
             # same ServeLoop.cancel path re-dispatch uses, and its tokens
@@ -607,6 +690,18 @@ class FleetLoop:
         wall = time.perf_counter() - t0
         done = [r for r in requests if r.finished >= 0]
         per_replica = [rep.stats() for rep in self.replicas]
+        replica_seconds = 0.0
+        cost = 0.0
+        cost_by_type: dict[str, float] = {}
+        for i in range(len(self.replicas)):
+            sec = max(
+                0.0, self._offline_t.get(i, wall) - self._online_t.get(i, 0.0)
+            )
+            replica_seconds += sec
+            name = self._rtype.get(i, "default")
+            c = sec * get_replica_type(name).price
+            cost += c
+            cost_by_type[name] = cost_by_type.get(name, 0.0) + c
         return {
             "autoscaler": asc.name if asc else "none",
             "spawned": n_spawned,
@@ -628,6 +723,12 @@ class FleetLoop:
             ],
             "completed_per_replica": [s["completed"] for s in per_replica],
             "tok_rate_per_replica": [rep.tok_rate for rep in self.replicas],
+            "replica_types": [
+                self._rtype.get(i, "default") for i in range(len(self.replicas))
+            ],
+            "replica_seconds": replica_seconds,
+            "cost": cost,
+            "cost_by_type": cost_by_type,
             "wall_s": wall,
             "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
             "mean_latency_s": (

@@ -27,7 +27,13 @@ from repro.core.admission import JobRequest
 from repro.core.router import ReplicaView
 from repro.core.workload import FLEET_PRESETS, run_fleet
 
-ALL_SCALERS = ("fixed", "backlog_threshold", "deadline_aware")
+ALL_SCALERS = (
+    "fixed",
+    "backlog_threshold",
+    "deadline_aware",
+    "cost_aware",
+    "predictive",
+)
 
 
 def _view(rid=0, cap=1.0, backlog=0.0, depth=0, alive=True):

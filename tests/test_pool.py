@@ -1,0 +1,483 @@
+"""Cost-aware heterogeneous replica pool (PR 9): the replica-type
+catalog, typed PoolView aggregates, price-aware shrink victims, the
+cost_aware / predictive policies, spot preemption (conservation,
+bit-identical replay, no resurrected attempts), the bill-the-dead
+billing fix, and the FleetLoop per-type estimate-backfill regression.
+Companion to benchmarks/bench_pool.py (claim 15).
+"""
+
+import dataclasses
+import math
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admission import JobRequest
+from repro.core.autoscale import (
+    GROW,
+    HOLD,
+    REPLICA_TYPES,
+    CostAwareScaler,
+    PoolView,
+    PredictiveScaler,
+    default_shrink_victim,
+    get_autoscaler,
+    get_replica_type,
+)
+from repro.core.router import ReplicaView
+from repro.core.workload import FLEET_PRESETS, FleetSpec, run_fleet
+
+import pytest
+
+
+def _view(rid=0, cap=1.0, nameplate=None, backlog=0.0, depth=0, alive=True,
+          rtype="default"):
+    rt = get_replica_type(rtype)
+    return ReplicaView(
+        replica_id=rid, capacity=cap,
+        nameplate=cap if nameplate is None else nameplate,
+        backlog_work=backlog, queue_depth=depth, oldest_age_s=0.0,
+        alive=alive, rtype=rt.name, price=rt.price,
+    )
+
+
+def _pool(views, t=0.0, n_warming=0):
+    return PoolView(time=t, replicas=tuple(views), n_warming=n_warming)
+
+
+# --------------------------------------------------------------- catalog
+
+
+def test_catalog_types_and_lookup():
+    assert set(REPLICA_TYPES) >= {"default", "fast", "slow", "spot"}
+    assert get_replica_type(None).name == "default"
+    assert get_replica_type("default").price == 1.0  # cost == seconds
+    assert not get_replica_type("fast").preemptible
+    assert get_replica_type("spot").preemptible
+    # value ranks capacity per dollar-second: spot's discount beats fast
+    assert get_replica_type("spot").value > get_replica_type("fast").value
+    with pytest.raises(ValueError):
+        get_replica_type("tpu_v9")
+
+
+# ------------------------------------------------------ typed aggregates
+
+
+def test_pool_view_typed_aggregates():
+    pv = _pool([
+        _view(0, cap=2.0, rtype="fast"),
+        _view(1, cap=1.0, rtype="spot"),
+        _view(2, cap=1.0, rtype="spot", alive=False),  # draining
+        _view(3, cap=0.5, rtype="slow"),
+    ])
+    assert pv.count_by_type == {"fast": 1, "spot": 1, "slow": 1}
+    assert pv.capacity_by_type == {"fast": 2.0, "spot": 1.0, "slow": 0.5}
+    # every online replica bills, draining included
+    prices = {n: REPLICA_TYPES[n].price for n in REPLICA_TYPES}
+    assert abs(
+        pv.price_per_s
+        - (prices["fast"] + 2 * prices["spot"] + prices["slow"])
+    ) < 1e-12
+    # preemptible share is over routable *nameplate* (1 spot of 1+2+0.5... )
+    total = 2.0 + 1.0 + 0.5
+    assert abs(pv.preemptible_frac - 1.0 / total) < 1e-12
+    assert _pool([]).preemptible_frac == 0.0
+
+
+def test_shrink_victim_prefers_worst_capacity_per_dollar():
+    # slow (0.5 cap / $0.4 = 1.25 $-value) loses to spot (1.0 / 0.35 =
+    # 2.86) and fast (2.0 / 1.0 = 2.0): the drain should shed slow
+    pv = _pool([
+        _view(0, cap=2.0, rtype="fast"),
+        _view(1, cap=0.5, rtype="slow"),
+        _view(2, cap=1.0, rtype="spot"),
+    ])
+    assert default_shrink_victim(pv) == 1
+    # equal prices degenerate to the pre-typed rule: slowest, newest
+    pv = _pool([_view(0, cap=1.0), _view(1, cap=0.5), _view(2, cap=0.5)])
+    assert default_shrink_victim(pv) == 2
+
+
+# ------------------------------------------------------------- cost_aware
+
+
+def _grow_from(scaler, views, t=100.0):
+    """Drive a sustained-backlog GROW out of a BacklogThreshold-family
+    scaler: same overloaded view at t and t+sustain."""
+    scaler.decide(_pool(views, t=t))
+    return scaler.decide(_pool(views, t=t + scaler.sustain_s + 1.0))
+
+
+def test_cost_aware_spawns_best_value_type():
+    sc = CostAwareScaler(grow_backlog_s=5.0, sustain_s=1.0, cooldown_s=0.0)
+    hot = [_view(0, cap=1.0, backlog=100.0, depth=9, rtype="fast")]
+    d = _grow_from(sc, hot)
+    assert d.action == GROW and d.rtype == "spot"
+    assert "spot" in d.reason
+
+
+def test_cost_aware_respects_spot_risk_budget():
+    sc = CostAwareScaler(grow_backlog_s=5.0, sustain_s=1.0, cooldown_s=0.0,
+                         spot_frac_max=0.5)
+    # pool already 2/3 preemptible nameplate: the risk budget is spent,
+    # the next spawn must be the best *non-preemptible* value (slow)
+    hot = [
+        _view(0, cap=1.0, backlog=100.0, depth=9, rtype="fast"),
+        _view(1, cap=1.0, backlog=100.0, depth=9, rtype="spot"),
+        _view(2, cap=1.0, backlog=100.0, depth=9, rtype="spot"),
+    ]
+    d = _grow_from(sc, hot)
+    assert d.action == GROW and d.rtype == "slow"
+
+
+def test_cost_aware_non_grow_decisions_stay_untyped():
+    sc = CostAwareScaler()
+    d = sc.decide(_pool([_view(0, cap=1.0)]))
+    assert d.action == HOLD and d.rtype is None
+
+
+# ------------------------------------------------------------- predictive
+
+
+def _feed_periodic(sc, period_s=200.0, cycles=3, per_crest=30, work=8.0):
+    """Synthetic seasonal arrivals: a crest of `per_crest` requests at the
+    start of each cycle, quiet otherwise."""
+    rid = 0
+    for c in range(cycles):
+        for k in range(per_crest):
+            t = c * period_s + (k % 20)  # crest occupies the first 20s
+            sc.note_request(JobRequest(
+                job_id=rid, arrive_t=t, n_tasks=1, total_work=work,
+            ))
+            rid += 1
+
+
+def test_predictive_autocorrelation_recovers_period():
+    sc = PredictiveScaler(bin_s=20.0, min_period_s=100.0, max_period_s=800.0)
+    _feed_periodic(sc, period_s=200.0, cycles=4)
+    period = sc._period_bins()
+    assert period is not None
+    assert abs(period * sc.bin_s - 200.0) <= sc.bin_s
+
+
+def test_predictive_fires_before_the_crest():
+    """Quiet pool, crest due within lead_s at last cycle's phase: the
+    policy grows *now*, while reactive backlog sees nothing."""
+    sc = PredictiveScaler(period_s=200.0, bin_s=20.0, lead_s=30.0,
+                          util_target=0.7, cooldown_s=0.0, rtype="fast")
+    _feed_periodic(sc, period_s=200.0, cycles=2)
+    # t=390: backlog empty, but t=400 starts last cycle's crest phase
+    quiet = _pool([_view(0, cap=1.0, rtype="fast")], t=390.0)
+    d = sc.decide(quiet)
+    assert d.action == GROW and d.rtype == "fast"
+    assert "predicted" in d.reason
+    # a reactive twin holds on the identical quiet view
+    reactive = get_autoscaler("backlog_threshold")
+    assert reactive.decide(quiet).action == HOLD
+
+
+def test_predictive_first_cycle_is_reactive():
+    """No same-phase history yet → the base reactive policy decides."""
+    sc = PredictiveScaler(period_s=200.0, bin_s=20.0, cooldown_s=0.0)
+    for rid in range(5):
+        sc.note_request(JobRequest(job_id=rid, arrive_t=float(rid),
+                                   n_tasks=1, total_work=8.0))
+    quiet = _pool([_view(0, cap=1.0)], t=50.0)
+    assert sc.decide(quiet).action == HOLD
+
+
+def test_predictive_veto_restores_clocks():
+    sc = PredictiveScaler(period_s=200.0, bin_s=20.0, lead_s=30.0,
+                          cooldown_s=1000.0, rtype="fast")
+    _feed_periodic(sc, period_s=200.0, cycles=2)
+    quiet = _pool([_view(0, cap=1.0, rtype="fast")], t=390.0)
+    d = sc.decide(quiet)
+    assert d.action == GROW
+    sc.veto(d)  # engine could not spawn: cooldown must not be burnt
+    assert sc.decide(quiet).action == GROW
+
+
+# ------------------------------------------------- billing: bill the dead
+
+
+def _plain_spec(**kw):
+    base = dict(
+        replica_rates=(1.0, 1.0), n_requests=16,
+        arrival="poisson", mean_interarrival_s=2.0,
+        work_per_request=(2.0, 6.0),
+    )
+    base.update(kw)
+    return FleetSpec(**base)
+
+
+def test_dead_for_good_replica_bills_to_death_time():
+    """The satellite-1 regression: a replica that dies at t with no
+    recovery ahead stops the meter at t — the old code billed the corpse
+    through makespan."""
+    res = run_fleet(_plain_spec(replica_fail=(1, 10.0)), seed=0)
+    assert res.completed == 16 and res.stranded == 0
+    # replica 0 bills the whole run, replica 1 exactly its 10 seconds
+    assert res.makespan > 10.0
+    assert abs(res.replica_seconds - (res.makespan + 10.0)) < 1e-9
+    assert abs(res.cost - res.replica_seconds) < 1e-9  # untyped identity
+
+
+def test_fail_then_recover_bills_through_the_outage():
+    """A failure with a recovery ahead keeps the instance (and the bill):
+    billing stops at death only when the replica is gone for good."""
+    res = run_fleet(
+        _plain_spec(replica_fail=(1, 10.0), replica_recover_s=5.0), seed=0
+    )
+    assert res.makespan > 15.0
+    assert abs(res.replica_seconds - 2.0 * res.makespan) < 1e-9
+
+
+def test_preempted_replica_bills_to_kill_time():
+    res = run_fleet("fleet_spot", seed=0)
+    assert res.n_preempted >= 1
+    kills = [e.time for e in res.trace if e.kind == "spot_preempt"]
+    assert len(kills) == res.n_preempted
+    # the bill is strictly under the everyone-runs-forever ceiling by at
+    # least the post-kill tail of every preempted replica
+    ceiling = 4 * res.makespan
+    saved = sum(res.makespan - t for t in kills if t < res.makespan)
+    assert res.replica_seconds <= ceiling - saved + 1e-9
+
+
+def test_untyped_pools_keep_cost_equal_to_replica_seconds():
+    for preset in ("fleet_hetero", "fleet_churny"):
+        res = run_fleet(preset, seed=0)
+        assert abs(res.cost - res.replica_seconds) < 1e-9
+        assert set(res.cost_by_type) == {"default"}
+        assert abs(res.cost_by_type["default"] - res.cost) < 1e-9
+
+
+def test_typed_pool_cost_prices_each_type():
+    res = run_fleet("fleet_spot", seed=0)
+    assert set(res.cost_by_type) <= {"fast", "spot"}
+    assert abs(sum(res.cost_by_type.values()) - res.cost) < 1e-9
+    # the spot discount is real: total cost under the all-$1 bill
+    assert res.cost < res.replica_seconds - 1e-9
+
+
+# --------------------------------------------------- preemption semantics
+
+
+def test_spot_preemption_emits_the_trace_vocabulary():
+    res = run_fleet("fleet_spot", seed=0)
+    notices = [e for e in res.trace if e.kind == "spot_notice"]
+    kills = [e for e in res.trace if e.kind == "spot_preempt"]
+    assert res.n_preempted >= 1 and len(kills) == res.n_preempted
+    noticed = {e.detail["replica"] for e in notices}
+    for e in kills:  # every kill was announced, on a spot replica
+        i = e.detail["replica"]
+        assert i in noticed
+        assert FLEET_PRESETS["fleet_spot"].replica_types[i] == "spot"
+        assert e.detail["evicted"] >= 0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_preemption_conservation_exactly_once(seed):
+    """Every admitted request completes exactly once, across kills,
+    rescues, and hedge races — no request is lost with its replica and
+    none is double-served by the re-dispatch."""
+    res = run_fleet("fleet_spot", seed=seed, router="class_reserved",
+                    redispatch=True, hedge=True)
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    for r in res.requests:
+        assert sum(1 for d in r.dispatches if d.outcome == "done") == 1
+    done = [e for e in res.trace if e.kind == "request_done"]
+    assert len(done) == res.completed
+    assert len({e.detail["request"] for e in done}) == res.completed
+
+
+def test_preempted_attempts_are_never_resurrected():
+    """After a replica's kill time nothing is ever dispatched onto it
+    again — by the rescue path, the hedge planner, or the router."""
+    found = 0
+    for seed in range(6):
+        res = run_fleet("fleet_spot", seed=seed, router="class_reserved",
+                        redispatch=True, hedge=True)
+        kill_t = {}
+        for e in res.trace:
+            if e.kind == "spot_preempt":
+                kill_t[e.detail["replica"]] = e.time
+        found += len(kill_t)
+        for r in res.requests:
+            for d in r.dispatches:
+                if d.replica in kill_t:
+                    assert d.t <= kill_t[d.replica] + 1e-9
+                    if d.t < kill_t[d.replica]:
+                        # an attempt alive at the kill was closed by it
+                        # (cancelled / hedge_loss / done), never left open
+                        assert d.outcome != "open"
+    assert found >= 1  # the property was actually exercised
+
+
+def test_fleet_spot_replay_bit_identical():
+    for kwargs in (
+        dict(router="capacity_weighted"),
+        dict(router="class_reserved", hedge=True, autoscale="cost_aware"),
+    ):
+        a = run_fleet("fleet_spot", seed=2, **kwargs)
+        b = run_fleet("fleet_spot", seed=2, **kwargs)
+        assert a == b
+        assert a.n_preempted >= 1  # the replay exercised preemption
+
+
+def test_preemption_off_by_default_everywhere_else():
+    """No preset without spot replicas ever sees a preemption event —
+    typed plumbing is invisible until a preemptible type is present."""
+    for preset in ("fleet_hetero", "fleet_bursty"):
+        res = run_fleet(preset, seed=0)
+        assert res.n_preempted == 0
+        assert not [e for e in res.trace if e.kind.startswith("spot")]
+
+
+def test_typed_spawn_reaches_the_sim_pool():
+    """cost_aware on a bursty stream grows the pool with typed spawns:
+    scale_up events carry the type and the billing sees it."""
+    spec = dataclasses.replace(
+        FLEET_PRESETS["fleet_bursty"],
+        replica_types=("fast",) * FLEET_PRESETS["fleet_bursty"].n_replicas,
+    )
+    res = run_fleet(spec, seed=0, autoscale="cost_aware")
+    ups = [e for e in res.trace if e.kind == "scale_up"]
+    assert res.n_spawned >= 1 and len(ups) == res.n_spawned
+    # every spawn is typed; best-value spot first, then — once the
+    # preemptible share hits the risk budget — non-preemptible slow
+    kinds = [e.detail.get("rtype") for e in ups]
+    assert set(kinds) <= {"spot", "slow"} and kinds[0] == "spot"
+    assert res.cost_by_type.get("spot", 0.0) > 0.0
+
+
+# ------------------------------------- FleetLoop (hardware-path) mirror
+
+
+from test_hedge import _Premeasured, _mk_requests  # noqa: E402
+
+
+class _WallClockSlow(_Premeasured):
+    """Serves one token per active request every `serve_dt` wall seconds
+    — slow in real time, like a cheaper replica class — and reports a
+    mildly degraded EMA (0.8 of its measured peak 1.0) while doing it.
+    Cold at start: requests dispatched to it have no estimate until the
+    probe backfills one."""
+
+    def __init__(self, serve_dt=0.015):
+        super().__init__(1)
+        self.serve_dt = serve_dt
+        self._last = None
+
+    def start(self, requests, prompt_len=None, t0=None):
+        super().start(requests, prompt_len, t0)
+        self.tok_rate = 0.0  # cold: nothing measured yet
+        self.peak_rate = 0.0
+
+    def tick(self):
+        while self.ready and len(self.active) < self.batch:
+            r = self.ready.pop(0)
+            r.submitted = 0.0
+            self.active.append(r)
+        if self.active:
+            # measuring starts with service: own-type peak 1.0, EMA 0.8
+            self.peak_rate = 1.0
+            self.tok_rate = 0.8
+            now = time.perf_counter()
+            if self._last is None or now - self._last >= self.serve_dt:
+                self._last = now
+                for r in list(self.active):
+                    r.tokens.append(1)
+                    if len(r.tokens) >= r.max_new:
+                        r.finished = now
+                        self.active.remove(r)
+                        self.done.append(r)
+        return "step"
+
+
+def test_fleet_cold_slow_replica_backfills_by_its_own_type():
+    """The satellite-3 regression: a request dispatched onto a *cold*
+    slow replica gets its estimate backfilled from the slow type's own
+    measured peak — not the fleet-wide fast floor, which made every cold
+    slow replica look perpetually stuck and fired spurious re-dispatches
+    against healthy (just cheaper) hardware."""
+    from repro.launch.fleet import FleetLoop
+
+    fleet = FleetLoop(
+        [_Premeasured(8), _WallClockSlow()],
+        replica_types=("fast", "slow"),
+        router="round_robin", redispatch=True,
+        probe_s=0.0, late_factor=0.1,
+    )
+    reqs = _mk_requests(2)
+    stats = fleet.run_requests(reqs)
+    assert stats["completed"] == 2
+    # the slow replica served its own request to completion: no rescue
+    assert stats["redispatched"] == 0
+    assert stats["completed_per_replica"] == [1, 1]
+    # and the backfilled estimate reflects slow-type throughput — at
+    # least ~2x the fast-floor estimate the old code would have stored
+    fast_floor_est = 8.0 / (8.0 * fleet.headroom)
+    slow_rid = [r.rid for r in reqs if fleet._where.get(r.rid) != 0]
+    ests = [v for v in fleet._est_s.values() if v is not None]
+    assert any(est >= 1.4 * fast_floor_est for est in ests), (ests, slow_rid)
+
+
+def test_fleet_loop_typed_stats_and_untyped_identity():
+    from repro.launch.fleet import FleetLoop
+
+    fleet = FleetLoop(
+        [_Premeasured(2), _Premeasured(1)],
+        replica_types=("fast", "slow"),
+        router="shortest_backlog", redispatch=False,
+    )
+    stats = fleet.run_requests(_mk_requests(6))
+    assert stats["completed"] == 6
+    assert stats["replica_types"] == ["fast", "slow"]
+    want = (
+        stats["replica_seconds"] / 2 * get_replica_type("fast").price
+        + stats["replica_seconds"] / 2 * get_replica_type("slow").price
+    )
+    assert abs(stats["cost"] - want) < 1e-6
+    assert abs(sum(stats["cost_by_type"].values()) - stats["cost"]) < 1e-9
+    # untyped: cost degenerates to replica_seconds
+    f2 = FleetLoop([_Premeasured(2)], router="shortest_backlog",
+                   redispatch=False)
+    s2 = f2.run_requests(_mk_requests(4))
+    assert abs(s2["cost"] - s2["replica_seconds"]) < 1e-9
+    assert s2["cost_by_type"] == {"default": s2["cost"]}
+
+
+def test_fleet_loop_typed_factory_registry_spawns_by_type():
+    from repro.launch.fleet import FleetLoop
+
+    built = []
+
+    def mk(kind):
+        def factory():
+            built.append(kind)
+            return _Premeasured(2)
+        return factory
+
+    fleet = FleetLoop(
+        [_Premeasured(2)],
+        replica_types=("fast",),
+        replica_factory={"fast": mk("fast"), "spot": mk("spot")},
+        router="shortest_backlog", redispatch=False,
+    )
+    i = fleet.add_replica("spot")
+    assert built == ["spot"]
+    assert fleet._rtype[i] == "spot"
+    with pytest.raises(ValueError):
+        fleet.add_replica("tpu_v9")
+
+
+def test_replica_types_must_parallel_the_pool():
+    from repro.launch.fleet import FleetLoop
+
+    with pytest.raises(ValueError):
+        FleetLoop([_Premeasured(1)], replica_types=("fast", "slow"))
+    with pytest.raises(ValueError):
+        run_fleet(_plain_spec(replica_types=("fast",)), seed=0)

@@ -166,6 +166,15 @@ FLEET_CASES: dict[str, tuple[str, dict]] = {
         "fleet_diurnal",
         dict(router="shortest_backlog", autoscale="deadline_aware"),
     ),
+    "spot/cw+rd": ("fleet_spot", dict(router="capacity_weighted")),
+    "spot/reserved+hedge": (
+        "fleet_spot",
+        dict(router="class_reserved", hedge=True),
+    ),
+    "spot/cw+cost_aware/seed2": (
+        "fleet_spot",
+        dict(router="capacity_weighted", autoscale="cost_aware", seed=2),
+    ),
 }
 
 WORKLOAD_CASES: dict[str, tuple[str, dict]] = {
@@ -243,6 +252,14 @@ FLEET_GOLDEN: dict[str, str] = {
         "dce9a3d456b6e2b5f0cc1b05dabdcca06add71f56d6ca20b6f8021e64b31b966",
     "hetero/sb":
         "daec49a55fe69c0ebc474a7186839e78050107e2d4c8d27e4db9392f6da80f57",
+    # fleet_spot post-dates the PR-7 capture (PR 9): captured at its own
+    # introduction, pinning the preemption event stream bit-for-bit
+    "spot/cw+cost_aware/seed2":
+        "ddbe633e78a4367eba76ffa988a473e4207a8b64f4b56337a24b5fa390d7e1a8",
+    "spot/cw+rd":
+        "96d52d84edfc714f1e056284d67e19c3f9211443a3831ffc17e20e494e862c5f",
+    "spot/reserved+hedge":
+        "fb5b143cc60d6c590bf064d5c63a328d01d7f0a661d7818a2b84e0a127f00ec8",
     "straggler/cw+rd":
         "85154c9f4e93a1bdd3d965beeba651c837b7a9ec6a4366d894d0489392ba919f",
     "straggler/cw+rd/seed1":

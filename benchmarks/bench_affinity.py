@@ -1,0 +1,146 @@
+"""Claim 16 (data-gravity affinity): routing a session's follow-up turn to
+the replica already holding its KV cache saves the re-prefill work and the
+sojourn time a gravity-blind router pays, without selling the tail.
+
+The regime is ``fleet_sessions``: 60 four-turn conversations (240 requests)
+over a 4-replica homogeneous pool, Poisson session starts with 25-45 s
+think time between turns, and a 9-work re-prefill bill on every turn that
+lands cold (the session's accumulated context must be re-ingested — the
+serving analogue of Hadoop shipping a map task to a node that does not
+hold its block). Two routers face the identical trace:
+
+* **capacity_weighted** — the gravity-blind baseline: every follow-up is
+  routed by capacity alone, so almost every turn re-prefills.
+* **affinity** — follow-ups go to the replica in whose
+  ``ReplicaView.resident_sessions`` the session appears; the holder is
+  skipped (cold fallback to capacity-weighted) when drained, dead, still
+  staging, or over the backlog ceiling, so gravity never overrides
+  liveness.
+
+Gated claims, on seed means (8 seeds):
+
+* affinity saves **strictly more re-prefill work** than the baseline
+  (``prefill_saved``, the work-unit currency ``run_fleet`` bills in);
+* affinity's **p50 sojourn is under** the baseline's — skipped prefills
+  are time off every follow-up's critical path;
+* affinity's class-0 **p99 stays within 1.05x** of the baseline — chasing
+  cache hits must not queue-collapse the tail behind a hot holder.
+
+Results append to ``BENCH_affinity.json`` so the trajectory across
+commits stays visible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from datetime import datetime, timezone
+from pathlib import Path
+
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+PRESET = "fleet_sessions"
+SEEDS = tuple(range(8))
+TRAJECTORY = Path(__file__).resolve().parent.parent / "BENCH_affinity.json"
+
+P99_PARITY = 1.05  # affinity must hold class-0 p99 within +5% of baseline
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def _append_trajectory(record: dict) -> None:
+    history = []
+    if TRAJECTORY.exists():
+        try:
+            history = json.loads(TRAJECTORY.read_text())
+        except (ValueError, OSError):
+            history = []  # a corrupt artifact must not fail the bench
+    history.append(record)
+    TRAJECTORY.write_text(json.dumps(history, indent=1) + "\n")
+
+
+def main(smoke: bool = False) -> list[str]:
+    seeds = SEEDS[:4] if smoke else SEEDS
+    spec = FLEET_PRESETS[PRESET]
+    rows: list[str] = []
+    print(f"(seed-mean over {len(seeds)} seeds; {PRESET}: "
+          f"{spec.n_requests // spec.session_turns} sessions x "
+          f"{spec.session_turns} turns, re-prefill {spec.session_prefill:g} "
+          f"work/cold turn, think {spec.session_think_s[0]:.0f}-"
+          f"{spec.session_think_s[1]:.0f}s)")
+    print(f"{'router':18s} {'p50_s':>7s} {'p99_0_s':>8s} {'hit_rate':>8s} "
+          f"{'saved':>7s} {'paid':>7s}")
+    stats: dict[str, dict[str, float]] = {}
+    record_pol: dict[str, dict] = {}
+    for label in ("capacity_weighted", "affinity"):
+        p50s, p99s, hits, saved, paid, uss = ([] for _ in range(6))
+        for seed in seeds:
+            t0 = time.perf_counter()
+            res = run_fleet(spec, seed=seed, router=label)
+            uss.append((time.perf_counter() - t0) * 1e6)
+            # conservation: every turn of every session, exactly once
+            assert res.completed == len(res.requests), (label, seed)
+            assert res.stranded == 0, (label, seed)
+            n_followups = res.n_sessions * (spec.session_turns - 1)
+            p50s.append(res.latency_quantile(0.5))
+            p99s.append(res.latency_quantile(0.99, slo_class=0))
+            hits.append(res.n_cache_hits / max(n_followups, 1))
+            saved.append(res.prefill_saved)
+            paid.append(res.prefill_work)
+        stats[label] = {
+            "p50": _mean(p50s), "p99": _mean(p99s), "saved": _mean(saved),
+        }
+        record_pol[label] = {
+            "p50_s": round(_mean(p50s), 2),
+            "p99_0_s": round(_mean(p99s), 2),
+            "hit_rate": round(_mean(hits), 3),
+            "prefill_saved": round(_mean(saved), 1),
+            "prefill_paid": round(_mean(paid), 1),
+        }
+        print(f"{label:18s} {_mean(p50s):7.2f} {_mean(p99s):8.2f} "
+              f"{_mean(hits):8.2f} {_mean(saved):7.0f} {_mean(paid):7.0f}")
+        rows.append(
+            f"affinity/{PRESET}/{label},{_mean(uss):.0f}"
+            f",p50={_mean(p50s):.2f}s;p99_0={_mean(p99s):.2f}s"
+            f";hit={_mean(hits):.2f};saved={_mean(saved):.0f}"
+        )
+    # the gated claims — loud failure if the data-gravity chain regresses
+    assert stats["affinity"]["saved"] > stats["capacity_weighted"]["saved"], (
+        "affinity did not save more re-prefill work than the baseline: "
+        f"{stats['affinity']['saved']:.0f} <= "
+        f"{stats['capacity_weighted']['saved']:.0f}"
+    )
+    assert stats["affinity"]["p50"] < stats["capacity_weighted"]["p50"], (
+        "affinity did not cut p50 sojourn: "
+        f"{stats['affinity']['p50']:.2f}s >= "
+        f"{stats['capacity_weighted']['p50']:.2f}s"
+    )
+    assert stats["affinity"]["p99"] <= P99_PARITY * stats["capacity_weighted"]["p99"], (
+        "affinity broke class-0 p99 parity (+5%): "
+        f"{stats['affinity']['p99']:.2f}s vs "
+        f"{stats['capacity_weighted']['p99']:.2f}s"
+    )
+    cut = 1.0 - stats["affinity"]["p50"] / stats["capacity_weighted"]["p50"]
+    print(f"affinity cuts p50 sojourn by {cut:.0%} and saves "
+          f"{stats['affinity']['saved'] - stats['capacity_weighted']['saved']:.0f} "
+          f"re-prefill work at "
+          f"{stats['affinity']['p99'] / stats['capacity_weighted']['p99']:.2f}x "
+          f"the baseline class-0 p99")
+    if not smoke:
+        _append_trajectory({
+            "ts": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+            "preset": PRESET,
+            "seeds": len(seeds),
+            "routers": record_pol,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="4 seeds instead of 8")
+    main(smoke=ap.parse_args().smoke)

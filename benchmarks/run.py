@@ -26,6 +26,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_admission,
+        bench_affinity,
         bench_autoscale,
         bench_decode,
         bench_elastic,
@@ -67,6 +68,8 @@ def main(argv=None) -> None:
          lambda: bench_decode.main(smoke=opts.smoke)),
         ("claim15: cost-aware typed pool + predictive crest scaling",
          lambda: bench_pool.main(smoke=opts.smoke)),
+        ("claim16: KV-cache affinity routing on multi-turn sessions",
+         lambda: bench_affinity.main(smoke=opts.smoke)),
     ]
     if not opts.smoke:
         # imported lazily: these pull in jax/repro.kernels at module level,

@@ -12,6 +12,8 @@ kept in-tree so the next regression is a one-liner to attribute:
         --n 5000 --sort tottime --top 30
     PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_spot \\
         # typed pool + spot preemption path, at the preset's own size
+    PYTHONPATH=src python scripts/profile_fleet.py --preset fleet_sessions \\
+        --router affinity   # multi-turn sessions through the gravity path
     PYTHONPATH=src python scripts/profile_fleet.py --engine workload \\
         --preset overload_2pod --repeat 20   # run_workload attempt loop
 
@@ -62,6 +64,10 @@ def main(argv=None) -> None:
                          "otherwise keep the preset's own — so e.g. "
                          "--preset fleet_spot profiles the preemption "
                          "path at its golden-trace size)")
+    ap.add_argument("--router", default="capacity_weighted",
+                    help="fleet engine: ROUTER registry policy (e.g. "
+                         "affinity, to profile the session-gravity path "
+                         "on --preset fleet_sessions)")
     ap.add_argument("--repeat", type=int, default=10,
                     help="workload engine: replays of the scenario")
     ap.add_argument("--legacy", action="store_true",
@@ -105,6 +111,7 @@ def main(argv=None) -> None:
         res = run_fleet(
             spec,
             seed=0,
+            router=opts.router,
             legacy_views=opts.legacy,
             collect_trace=False,
             collect_requests=False,

@@ -64,6 +64,10 @@ PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_decode.py --smoke
 # must beat all_fast on $/on-time at p99 parity, predictive must cut the
 # crest-warmup p99 — asserted inside the bench
 PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_pool.py --smoke
+# claim 16 replays the multi-turn session regime through both routers:
+# affinity must save re-prefill work and cut p50 sojourn at class-0 p99
+# parity (+5%) vs capacity_weighted — asserted inside the bench
+PYTHONPATH="$PYTHONPATH:." python benchmarks/bench_affinity.py --smoke
 PYTHONPATH="$PYTHONPATH:." python benchmarks/run.py --smoke
 
 echo "verify: OK"

@@ -151,6 +151,7 @@ class JobRequest:
     total_work: float  # unit-work items (simulator) / token budget (serving)
     slo_class: int = 0  # 0 = strictest class
     deadline_s: float = math.inf  # sojourn budget, relative to arrive_t
+    session_id: int = -1  # multi-turn session this request belongs to (-1: none)
 
     @property
     def deadline_t(self) -> float:

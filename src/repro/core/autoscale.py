@@ -112,20 +112,32 @@ class ReplicaType:
     rate: float  # nameplate work rate (sim units / relative tok-s)
     price: float  # $ per replica-second while online
     preemptible: bool = False
+    stage_bw: float = math.inf  # data units/s staged at boot (inf: instant)
 
     @property
     def value(self) -> float:
         """Nameplate capacity per dollar-second — higher is cheaper work."""
         return self.rate / max(self.price, _EPS)
 
+    def stage_s(self, data: float) -> float:
+        """Seconds to stage ``data`` units through this type's pipe.
+        0.0 when the spec stages nothing — the pre-lifecycle behaviour."""
+        if data <= 0.0:
+            return 0.0
+        return data / max(self.stage_bw, _EPS)
+
 
 REPLICA_TYPES: dict[str, ReplicaType] = {
     # "default" keeps untyped pools bit-identical: price 1.0 makes
     # FleetResult.cost == replica_seconds, exactly the pre-typed currency.
-    "default": ReplicaType("default", rate=1.0, price=1.0),
-    "fast": ReplicaType("fast", rate=1.0, price=1.0),
-    "slow": ReplicaType("slow", rate=0.5, price=0.4),
-    "spot": ReplicaType("spot", rate=1.0, price=0.35, preemptible=True),
+    # stage_bw only matters when a FleetSpec sets stage_data > 0 (the
+    # provisioning lifecycle); with stage_data == 0 every stage takes 0 s.
+    "default": ReplicaType("default", rate=1.0, price=1.0, stage_bw=4.0),
+    "fast": ReplicaType("fast", rate=1.0, price=1.0, stage_bw=8.0),
+    "slow": ReplicaType("slow", rate=0.5, price=0.4, stage_bw=2.0),
+    "spot": ReplicaType(
+        "spot", rate=1.0, price=0.35, preemptible=True, stage_bw=4.0
+    ),
 }
 
 

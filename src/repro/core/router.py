@@ -106,6 +106,12 @@ class ReplicaView:
     alive: bool = True  # not pronounced dead
     rtype: str = "default"  # replica type name (core.autoscale.REPLICA_TYPES)
     price: float = 1.0  # $/replica-second while online
+    # data gravity (PR 10): the sessions whose KV/prefix cache this replica
+    # currently holds — what ``affinity`` routes follow-up turns by — and
+    # whether the replica is still staging data in (booted but not yet
+    # routable; excluded from rescue targets like an unmeasured cold spawn).
+    resident_sessions: frozenset = frozenset()
+    staging: bool = False
 
     @property
     def backlog_s(self) -> float:
@@ -364,6 +370,49 @@ class ClassReservedRouter(Router):
         return best.replica_id
 
 
+class AffinityRouter(Router):
+    """Data-gravity routing: follow-up turns chase the session's cache.
+
+    The paper's locality rule — ship the task to the node that holds the
+    block — applied to serving: a multi-turn session's follow-up belongs on
+    the replica whose KV/prefix cache already holds the conversation
+    (:attr:`ReplicaView.resident_sessions`), where it skips re-prefill.
+    The affinity hit is taken **only while the holder is routable**: if the
+    holder is drained/pronounced dead (``not alive``), still staging data
+    in, unmeasured, or its backlog exceeds ``backlog_ceiling_s`` seconds,
+    the turn degrades to a cold route through an internal
+    :class:`CapacityWeightedRouter` — cache affinity must never strand a
+    request behind a dead holder nor pile a hot session onto an overloaded
+    one past the point where re-prefill elsewhere is cheaper. First turns
+    (and session-less requests) always take the capacity-weighted path, so
+    sessions spread ∝ measured capacity before gravity pins them.
+    """
+
+    name = "affinity"
+
+    def __init__(self, backlog_ceiling_s: float = 60.0) -> None:
+        self.backlog_ceiling_s = backlog_ceiling_s
+        self._fallback = CapacityWeightedRouter()
+
+    def reset(self) -> None:
+        self._fallback.reset()
+
+    def pick(self, req, views):
+        sid = getattr(req, "session_id", -1)
+        if sid is not None and sid >= 0:
+            for v in views:
+                if sid in v.resident_sessions:
+                    if (
+                        v.alive
+                        and not v.staging
+                        and v.capacity > _EPS
+                        and v.backlog_s <= self.backlog_ceiling_s + _EPS
+                    ):
+                        return v.replica_id
+                    break  # holder exists but is unroutable: go cold
+        return self._fallback.pick(req, views)
+
+
 def plan_hedge(
     req: JobRequest,
     primary_id: Optional[int],
@@ -459,8 +508,10 @@ def plan_redispatch(
     capacity** (a just-spawned, still-warming replica on the serving path
     reports rate 0 until its first decode completes; it is idle and not
     degraded by the nameplate test, but handing rescued work to a replica
-    that has never demonstrated a rate re-strands it behind a cold start).
-    Candidates are ranked by estimated
+    that has never demonstrated a rate re-strands it behind a cold start)
+    — nor onto a replica still in ``stage_in`` (booted but its data pipe is
+    not yet full: the same not-routable-yet gate, keyed on the lifecycle
+    flag rather than the rate measurement). Candidates are ranked by estimated
     time-to-end on their current replica, longest first (LATE's ordering),
     so the worst-off request gets the fastest target. Deterministic: pure
     arithmetic over the views, ties broken by request id.
@@ -470,7 +521,11 @@ def plan_redispatch(
         (
             v
             for v in views
-            if v.alive and v.idle and not v.degraded and v.capacity > _EPS
+            if v.alive
+            and v.idle
+            and not v.degraded
+            and not v.staging
+            and v.capacity > _EPS
         ),
         key=lambda v: (-v.capacity, v.replica_id),
     )
@@ -515,6 +570,7 @@ ROUTER: dict[str, Callable[[], Router]] = {
     "capacity_weighted": CapacityWeightedRouter,
     "shortest_backlog": ShortestBacklogRouter,
     "class_reserved": ClassReservedRouter,
+    "affinity": AffinityRouter,
 }
 
 

@@ -483,6 +483,23 @@ class FleetSpec:
     replica_types: Optional[tuple[str, ...]] = None
     spot_mean_life_s: float = 600.0
     spot_notice_s: float = 5.0
+    # provisioning + data-gravity layer (PR 10) — all inert at defaults.
+    # stage_data > 0 turns on the replica lifecycle for *elastic* spawns
+    # (base replicas are pre-staged before t=0): boot (warmup_s) →
+    # stage_in (stage_data / REPLICA_TYPES[rtype].stage_bw seconds; the
+    # replica is NOT routable yet) → serve → stage_out (same pipe, billed)
+    # → retire. Preempted/dead replicas lose their scratch data and skip
+    # stage_out. session_turns > 1 groups the request stream into
+    # multi-turn sessions: the arrival process draws session starts, each
+    # session runs session_turns turns separated by uniform think-time
+    # gaps, and every turn carries the session_id. A turn dispatched to a
+    # replica that does not hold the session's KV cache pays
+    # session_prefill extra attempt-work — the re-prefill tax the
+    # ``affinity`` router exists to avoid.
+    stage_data: float = 0.0
+    session_turns: int = 1
+    session_think_s: tuple[float, float] = (20.0, 40.0)
+    session_prefill: float = 0.0
     description: str = ""
 
     @property
@@ -549,6 +566,54 @@ def _generate_fleet_requests_np(spec: FleetSpec, seed: int) -> list[JobRequest]:
     ]
 
 
+def _generate_session_requests(spec: FleetSpec, seed: int) -> list[JobRequest]:
+    """Multi-turn session stream (``session_turns > 1``): the spec's
+    arrival process draws *session* start times (burst/uniform/poisson —
+    the scalar processes), then each session runs ``session_turns`` turns
+    whose gaps are ``uniform(*session_think_s)`` think-time draws, every
+    turn carrying the session id and the session's single SLO draw (a
+    conversation has one owner). Turns are re-sorted into global arrival
+    order and rid-numbered in that order, so the engine consumes the
+    stream exactly like any single-turn one — ``random.Random(seed)`` end
+    to end, bit-identical per (spec, seed)."""
+    rng = random.Random(seed)
+    turns = spec.session_turns
+    n_sessions = max(spec.n_requests // turns, 1)
+    starts = _arrival_times(
+        WorkloadSpec(
+            n_jobs=n_sessions,
+            arrival=spec.arrival,
+            mean_interarrival_s=spec.mean_interarrival_s,
+        ),
+        rng,
+    )
+    slo_weights = (
+        [w for w, _, _ in spec.slo_mix] if spec.slo_mix is not None else None
+    )
+    lo, hi = spec.work_per_request
+    tlo, thi = spec.session_think_s
+    raw: list[tuple[float, int, float, int, float]] = []
+    for sid, t0 in enumerate(starts):
+        slo_class, deadline_s = 0, math.inf
+        if spec.slo_mix is not None:
+            _, slo_class, deadline_s = rng.choices(
+                spec.slo_mix, weights=slo_weights, k=1
+            )[0]
+        t = t0
+        for k in range(turns):
+            if k:
+                t += rng.uniform(tlo, thi)
+            raw.append((t, sid, rng.uniform(lo, hi), slo_class, deadline_s))
+    raw.sort(key=lambda x: (x[0], x[1]))
+    return [
+        JobRequest(
+            job_id=rid, arrive_t=at, n_tasks=1, total_work=work,
+            slo_class=cls, deadline_s=dl, session_id=sid,
+        )
+        for rid, (at, sid, work, cls, dl) in enumerate(raw)
+    ]
+
+
 def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
     """Seeded request stream: arrivals, token budgets, optional SLO draws —
     ``random.Random(seed)`` end to end, so the same (spec, seed) pair is a
@@ -556,7 +621,12 @@ def generate_fleet_requests(spec: FleetSpec, seed: int = 0) -> list[JobRequest]:
     :func:`generate_workload`). Bursty/diurnal streams of
     ``_VECTOR_MIN``-plus requests switch to the vectorized numpy generator
     (same determinism contract, different — but fixed — stream); every
-    stream short enough to have a pre-PR-7 golden keeps the scalar path."""
+    stream short enough to have a pre-PR-7 golden keeps the scalar path.
+    Specs with ``session_turns > 1`` take the multi-turn session path
+    (:func:`_generate_session_requests`) — a distinct stream, so no
+    single-turn preset's rng sequence moves."""
+    if spec.session_turns > 1:
+        return _generate_session_requests(spec, seed)
     if (
         _np is not None
         and spec.n_requests >= _VECTOR_MIN
@@ -656,6 +726,7 @@ class RequestResult:
     finish_t: float
     served_by: int  # replica that completed it (-1 if it never finished)
     dispatches: tuple[Dispatch, ...]
+    session_id: int = -1  # multi-turn session this turn belongs to
 
     @property
     def latency(self) -> float:
@@ -712,6 +783,13 @@ class FleetResult:
     cost: float = 0.0
     cost_by_type: Optional[dict[str, float]] = None
     n_preempted: int = 0  # spot replicas killed mid-run
+    # data-gravity sessions + provisioning lifecycle (PR 10); every one of
+    # these stays at its default on single-turn / unstaged specs
+    n_sessions: int = 0  # distinct multi-turn sessions in the stream
+    n_cache_hits: int = 0  # dispatches that found the session cache resident
+    prefill_work: float = 0.0  # re-prefill work paid by cold-routed turns
+    prefill_saved: float = 0.0  # re-prefill work skipped by cache hits
+    n_staged: int = 0  # elastic replicas that completed stage_in
     # simulator-throughput accounting (PR 7): loop events processed, and —
     # when per-request records are skipped (collect_requests=False) — the
     # per-class sojourn lists that keep latency_quantile working anyway
@@ -847,7 +925,38 @@ FLEET_PRESETS: dict[str, FleetSpec] = {
         slo_mix=((0.2, 0, 600.0), (0.5, 1, 1800.0), (0.3, 2, math.inf)),
         description="10^6 diurnal requests over 120 replicas: the simulator-throughput regime",
     ),
+    # The claim-16 data-gravity regime (benchmarks/bench_affinity.py):
+    # sixty four-turn sessions over four equal replicas. Every follow-up
+    # turn routed away from the replica holding its session's KV cache
+    # pays session_prefill extra work (about 2× a turn's own budget), so
+    # capacity_weighted — blind to residency — re-prefills ~3/4 of all
+    # follow-ups while `affinity` pays the tax once per session. The
+    # offered load is tuned so the re-prefill tax is the difference
+    # between a comfortable fleet and a contended one.
+    "fleet_sessions": FleetSpec(
+        replica_rates=(1.0, 1.0, 1.0, 1.0),
+        n_requests=240,  # 60 sessions × 4 turns
+        arrival="poisson", mean_interarrival_s=14.0,
+        work_per_request=(3.0, 6.0),
+        session_turns=4, session_think_s=(25.0, 45.0),
+        session_prefill=9.0,
+        slo_mix=((1.0, 0, 240.0),),
+        description="60 four-turn sessions; cold-routed follow-ups pay re-prefill",
+    ),
 }
+
+# The staged fleet_spot variant (PR 10): same preemption regime, but the
+# provisioning lifecycle is on — an elastic spawn boots (warmup_s), then
+# stages 40 data units through its type's pipe before it becomes routable,
+# and a drained replica stages its scratch data back out (billed) before
+# release. Preempted spots lose the data and skip stage_out. The golden
+# replay pins boot → stage_in → serve → stage_out bit-for-bit.
+FLEET_PRESETS["fleet_spot_staged"] = replace(
+    FLEET_PRESETS["fleet_spot"],
+    stage_data=40.0,
+    description="fleet_spot with the provisioning lifecycle on: spawns "
+                "stage 40 data units in before routing",
+)
 
 
 # Queues at or below this depth re-sum their work accumulator exactly
@@ -857,6 +966,11 @@ FLEET_PRESETS: dict[str, FleetSpec] = {
 # this (fleet_million's ratcheted backlog) carry the running value, where
 # ulp drift is tolerated because no golden covers that regime.
 _EXACT_RESUM_LEN = 128
+
+# Shared empty resident-session view value (PR 10): replicas holding no
+# session caches — every replica of a sessionless run — all point at this
+# one frozenset, so the pooled-view hot loop allocates nothing for it.
+_EMPTY_SESSIONS: frozenset = frozenset()
 
 
 class _ListQueue(list):
@@ -908,7 +1022,7 @@ class _ReplicaState:
         "version", "observed", "pronounced",
         "online", "draining", "retired", "online_t", "offline_t",
         "queued_work", "age_heap", "oldest_rid", "oldest_t0", "nameplate",
-        "rtype", "price", "view",
+        "rtype", "price", "view", "sessions",
     )
 
     def __init__(self, worker: SimWorker, online: bool = True,
@@ -946,6 +1060,10 @@ class _ReplicaState:
         self.retired = False  # drained dry and removed
         self.online_t = online_t  # when billing started (spawn decision)
         self.offline_t = math.inf  # when it retired (billing stops)
+        # data gravity (PR 10): the session ids whose KV cache lives here
+        # (the view's resident_sessions). Emptied when the cache is lost —
+        # failure, preemption, retirement — or when the session ends.
+        self.sessions: set = set()
 
 
 class _ReqState:
@@ -962,8 +1080,8 @@ class _ReqState:
 
     __slots__ = (
         "req", "decision", "admit_t", "finish_t", "served_by", "dispatches",
-        "replica", "dispatch_t", "est_s",
-        "hedge_replica", "hedge_dispatch_t", "hedge_est_s",
+        "replica", "dispatch_t", "est_s", "work",
+        "hedge_replica", "hedge_dispatch_t", "hedge_est_s", "hedge_work",
     )
 
     def __init__(self, req: JobRequest):
@@ -976,9 +1094,16 @@ class _ReqState:
         self.replica: Optional[int] = None  # current assignment
         self.dispatch_t = -1.0
         self.est_s = 0.0
+        # per-attempt effective work (PR 10): the request's own budget plus
+        # the re-prefill tax *this attempt* pays on its replica (cache
+        # miss). Without sessions both stay == req.total_work — the same
+        # float — so every accumulator and estimate is bit-identical to
+        # the pre-lifecycle engine.
+        self.work = req.total_work
         self.hedge_replica: Optional[int] = None  # live duplicate attempt
         self.hedge_dispatch_t = -1.0
         self.hedge_est_s = 0.0
+        self.hedge_work = req.total_work
 
 
 def run_fleet(
@@ -1117,6 +1242,25 @@ def run_fleet(
     # rng sequence the goldens pin
     spot_rng = random.Random(seed ^ 0x5EED5)
     rs = {r.job_id: _ReqState(r) for r in reqs}
+    # ---- data-gravity sessions + provisioning lifecycle (PR 10) ---------
+    # Both features gate on their spec knobs so unstaged / single-turn
+    # presets (every pre-existing golden) take zero new branches with
+    # observable effects: sessions_on=False keeps every attempt's work ==
+    # req.total_work, staging_on=False keeps replica_warm the single
+    # routability boundary.
+    sessions_on = spec.session_turns > 1
+    staging_on = spec.stage_data > 0.0
+    turns_left: dict[int, int] = {}
+    session_holder: dict[int, int] = {}  # session → replica with its cache
+    if sessions_on:
+        for rq in reqs:
+            if rq.session_id >= 0:
+                turns_left[rq.session_id] = turns_left.get(rq.session_id, 0) + 1
+    n_sessions = len(turns_left)
+    n_cache_hits = [0]
+    prefill_paid = [0.0]
+    prefill_saved = [0.0]
+    n_staged = [0]
     trace_out: list[ChurnEvent] = []
     trace = trace_out if collect_trace else _NullTrace()
     parked: list[int] = []  # admitted but unroutable (no live replica)
@@ -1196,11 +1340,21 @@ def run_fleet(
     def touch() -> None:
         dirty[0] += 1
 
-    def _resum(st: _ReplicaState) -> None:
+    def attempt_work(rid: int, i: int) -> float:
+        """Effective work of ``rid``'s attempt on replica ``i`` — the
+        request's budget plus the re-prefill tax that attempt pays (PR 10).
+        Every accumulator, estimate, and service schedule reads attempt
+        work through here (or its inlined twin in ``replica_views``) so
+        queue bookkeeping and the brute-force cross-check stay in exact
+        agreement; without sessions it is ``req.total_work`` bit-for-bit."""
+        r = rs[rid]
+        return r.hedge_work if r.hedge_replica == i else r.work
+
+    def _resum(i: int, st: _ReplicaState) -> None:
         if len(st.queue) <= _EXACT_RESUM_LEN:
             acc = 0.0
             for r in st.queue:
-                acc += rs[r].req.total_work
+                acc += attempt_work(r, i)
             st.queued_work = acc
 
     def q_push(i: int, rid: int) -> None:
@@ -1211,29 +1365,29 @@ def run_fleet(
         # inserts (pop/remove/pushleft) can de-align the float order.
         st = repl[i]
         st.queue.append(rid)
-        st.queued_work += rs[rid].req.total_work
+        st.queued_work += attempt_work(rid, i)
         touch()
 
     def q_pushleft(i: int, rid: int) -> None:
         st = repl[i]
         st.queue.appendleft(rid)
-        st.queued_work += rs[rid].req.total_work
-        _resum(st)
+        st.queued_work += attempt_work(rid, i)
+        _resum(i, st)
         touch()
 
     def q_pop(i: int) -> int:
         st = repl[i]
         rid = st.queue.popleft()
-        st.queued_work -= rs[rid].req.total_work
-        _resum(st)
+        st.queued_work -= attempt_work(rid, i)
+        _resum(i, st)
         touch()
         return rid
 
     def q_remove(i: int, rid: int) -> None:
         st = repl[i]
         st.queue.remove(rid)
-        st.queued_work -= rs[rid].req.total_work
-        _resum(st)
+        st.queued_work -= attempt_work(rid, i)
+        _resum(i, st)
         touch()
 
     def note_dispatch(i: int, rid: int, t: float) -> None:
@@ -1262,7 +1416,7 @@ def run_fleet(
         st = repl[i]
         if st.serving is None:
             return 0.0
-        work = rs[st.serving].req.total_work
+        work = attempt_work(st.serving, i)
         return min(work, st.done_work + (t - st.seg_start) * st.cur_rate)
 
     def outstanding_on(i: int) -> list[int]:
@@ -1279,7 +1433,7 @@ def run_fleet(
         st.seg_start = t
         st.cur_rate = st.worker.rate_at(t)
         st.version += 1
-        remaining = rs[rid].req.total_work
+        remaining = attempt_work(rid, i)
         push(t + remaining / max(st.cur_rate, 1e-9), "svc_done", (i, st.version))
 
     # ---- per-attempt bookkeeping (hedging makes these two-valued) -------
@@ -1322,11 +1476,11 @@ def run_fleet(
     def backlog_work_of(i: int, t: float) -> float:
         st = repl[i]
         if legacy:
-            backlog = sum(rs[r].req.total_work for r in st.queue)
+            backlog = sum(attempt_work(r, i) for r in st.queue)
         else:
             backlog = st.queued_work
         if st.serving is not None:
-            backlog += rs[st.serving].req.total_work - done_est(i, t)
+            backlog += attempt_work(st.serving, i) - done_est(i, t)
         return backlog
 
     def check_view(i: int, st: _ReplicaState, t: float,
@@ -1340,7 +1494,7 @@ def run_fleet(
             min(attempt_dispatch_t(r, i) for r in rids) if rids else None
         )
         assert t0 == brute_t0, (i, t0, brute_t0)
-        brute_q = sum(rs[r].req.total_work for r in st.queue)
+        brute_q = sum(attempt_work(r, i) for r in st.queue)
         if len(st.queue) <= _EXACT_RESUM_LEN:
             assert st.queued_work == brute_q, (i, st.queued_work, brute_q)
         else:
@@ -1377,6 +1531,11 @@ def run_fleet(
                         alive=not st.pronounced and not st.draining,
                         rtype=st.rtype,
                         price=st.price,
+                        resident_sessions=(
+                            frozenset(st.sessions)
+                            if st.sessions
+                            else _EMPTY_SESSIONS
+                        ),
                     )
                 )
             return out
@@ -1408,7 +1567,9 @@ def run_fleet(
                 backlog = st.queued_work
             else:
                 depth = len(st.queue) + 1
-                work = rs[serving].req.total_work
+                r0 = rs[serving]
+                # inlined attempt_work: the serving attempt's effective work
+                work = r0.hedge_work if r0.hedge_replica == i else r0.work
                 done = st.done_work + (t - st.seg_start) * st.cur_rate
                 if work < done:  # = min(work, done): service can't overrun
                     done = work
@@ -1442,9 +1603,18 @@ def run_fleet(
                 d["nameplate"] = st.nameplate
                 d["rtype"] = st.rtype
                 d["price"] = st.price
+                # static for the sim: a staging replica is offline, so it
+                # never appears in views at all (the serving fleet, whose
+                # replicas surface mid-provisioning, sets this per build)
+                d["staging"] = False
+                d["resident_sessions"] = _EMPTY_SESSIONS
                 st.view = v
             else:
                 d = v.__dict__
+            if sessions_on:
+                d["resident_sessions"] = (
+                    frozenset(st.sessions) if st.sessions else _EMPTY_SESSIONS
+                )
             d["capacity"] = st.observed
             d["backlog_work"] = backlog
             d["queue_depth"] = depth
@@ -1503,15 +1673,31 @@ def run_fleet(
 
     def dispatch(rid: int, dst: int, t: float, slot: str = "primary") -> None:
         r = rs[rid]
-        est = service_estimate_s(r.req.total_work, workers[dst].rate)
+        w = r.req.total_work
+        if sessions_on:
+            # data gravity, decided per attempt at dispatch time: a turn
+            # landing on the replica that holds its session's cache skips
+            # re-prefill; anywhere else it pays session_prefill extra
+            # attempt-work. Re-dispatches re-decide at their new replica.
+            sid = r.req.session_id
+            if sid >= 0:
+                if session_holder.get(sid) == dst:
+                    n_cache_hits[0] += 1
+                    prefill_saved[0] += spec.session_prefill
+                else:
+                    w = w + spec.session_prefill
+                    prefill_paid[0] += spec.session_prefill
+        est = service_estimate_s(w, workers[dst].rate)
         if slot == "primary":
             r.replica = dst
             r.dispatch_t = t
             r.est_s = est
+            r.work = w
         else:  # the duplicate attempt of a hedged pair
             r.hedge_replica = dst
             r.hedge_dispatch_t = t
             r.hedge_est_s = est
+            r.hedge_work = w
         r.dispatches.append(Dispatch(replica=dst, t=t))
         q_push(dst, rid)
         note_dispatch(dst, rid, t)
@@ -1658,7 +1844,8 @@ def run_fleet(
         if not any(v.degraded for v in views):
             return False
         return any(
-            v.alive and v.idle and not v.degraded and v.capacity > 1e-9
+            v.alive and v.idle and not v.degraded and not v.staging
+            and v.capacity > 1e-9
             for v in views
         )
 
@@ -1679,8 +1866,7 @@ def run_fleet(
                         # never rescues either sibling — first completion
                         # resolves the race and cancels the loser
                         continue
-                    r = rs[rid]
-                    remaining = r.req.total_work
+                    remaining = attempt_work(rid, i)
                     if repl[i].serving == rid:
                         remaining -= done_est(i, t)
                     inflight.append(
@@ -1717,6 +1903,18 @@ def run_fleet(
             class_p99=p99win.snapshot(),
         )
 
+    def evict_sessions(i: int) -> None:
+        """The replica's KV caches are gone (failure, preemption,
+        retirement): later turns of its resident sessions must degrade to
+        cold routes, so the holder map forgets it ever held them."""
+        st = repl[i]
+        if st.sessions:
+            for sid in st.sessions:
+                if session_holder.get(sid) == i:
+                    del session_holder[sid]
+            st.sessions.clear()
+            touch()
+
     def maybe_retire(i: int, t: float) -> None:
         st = repl[i]
         if legacy:
@@ -1726,7 +1924,22 @@ def run_fleet(
         if st.draining and not st.retired and not busy:
             st.retired = True
             st.online = False
-            st.offline_t = t
+            evict_sessions(i)
+            if staging_on:
+                # stage_out: scratch data drains back through the type's
+                # pipe before the instance is released — billed, like the
+                # GCE teardown copy. Preempted/dead replicas skip this
+                # (their data is simply lost).
+                out_s = get_replica_type(st.rtype).stage_s(spec.stage_data)
+                st.offline_t = t + out_s
+                trace.append(
+                    ChurnEvent(t, "stage_out", {
+                        "replica": i, "data": spec.stage_data,
+                        "done_at": t + out_s,
+                    })
+                )
+            else:
+                st.offline_t = t
             n_retired[0] += 1
             touch()
             trace.append(ChurnEvent(t, "replica_retired", {"replica": i}))
@@ -1758,6 +1971,24 @@ def run_fleet(
         push(warm_at, "replica_warm", i)
         if rt is not None and rt.preemptible:
             arm_preemption(i, t)
+
+    def go_online(i: int, t: float) -> None:
+        """A provisioned replica joins the routable fleet — the end of
+        warmup for unstaged pools, the end of ``stage_in`` for staged ones
+        (PR 10). Until this fires the replica is invisible to views, so no
+        router or rescue can hand it work."""
+        st = repl[i]
+        st.online = True
+        st.observed = st.worker.rate
+        touch()
+        trace.append(ChurnEvent(t, "replica_warm", {"replica": i}))
+        pool_peak[0] = max(
+            pool_peak[0],
+            sum(1 for s in repl if s.online and not s.retired),
+        )
+        signal_capacity(t)
+        retry_parked(t)
+        rebalance_to(i, t)
 
     def rebalance_to(i: int, t: float) -> None:
         """Pull *queued* (unstarted) requests from the deepest
@@ -1798,7 +2029,7 @@ def run_fleet(
             if donor is None:
                 break
             rid = donor_rid
-            w = rs[rid].req.total_work
+            w = attempt_work(rid, donor)
             my_rate = max(me.observed, 1e-9)
             finish_here = (backlog_work_of(i, t) + w) / my_rate
             if finish_here >= donor_bs:
@@ -1997,6 +2228,25 @@ def run_fleet(
                 )
             if adm is not None:
                 adm.on_job_done(t, r.req, sojourn)
+            if sessions_on:
+                # the completing replica now holds this session's freshest
+                # KV cache: residency is single-holder (the stale copy on
+                # a previous holder is forgotten), and a finished session
+                # frees its slot everywhere
+                sid = r.req.session_id
+                if sid >= 0:
+                    left = turns_left[sid] - 1
+                    turns_left[sid] = left
+                    prev = session_holder.get(sid)
+                    if left <= 0:
+                        if prev is not None:
+                            repl[prev].sessions.discard(sid)
+                            del session_holder[sid]
+                    elif prev != i:
+                        if prev is not None:
+                            repl[prev].sessions.discard(sid)
+                        session_holder[sid] = i
+                        st.sessions.add(sid)
             start_service(i, t)
             maybe_retire(i, t)  # a draining replica retires once drained dry
         elif kind == "rate_change":
@@ -2020,7 +2270,7 @@ def run_fleet(
                 st.cur_rate = max(new_rate, 1e-9)
                 st.version += 1
                 touch()
-                remaining = rs[st.serving].req.total_work - st.done_work
+                remaining = attempt_work(st.serving, i) - st.done_work
                 push(t + remaining / st.cur_rate, "svc_done", (i, st.version))
         elif kind == "replica_fail":
             i = payload
@@ -2039,6 +2289,10 @@ def run_fleet(
                 st.done_work = done_est(i, t)
                 st.seg_start = t
                 st.cur_rate = 0.0
+            # the crash loses the KV caches even if the replica later
+            # recovers (serving state restarts from scratch there too):
+            # follow-up turns must go cold, not chase a wiped cache
+            evict_sessions(i)
             st.version += 1  # invalidate any scheduled completion
             touch()
         elif kind == "pronounce":
@@ -2086,20 +2340,32 @@ def run_fleet(
                 # (deduped — a live chain is left alone)
                 arm_scale(t)
         elif kind == "replica_warm":
+            # boot finished. Unstaged pools become routable right here —
+            # the pre-lifecycle single warmup constant, bit-identical.
+            # Staged pools (PR 10) enter stage_in instead: the replica
+            # stays offline (invisible to views) until its data pipe
+            # drains at stage_done.
             i = payload
             st = repl[i]
-            if not st.retired:  # warmup landed: the replica joins the fleet
-                st.online = True
-                st.observed = st.worker.rate
-                touch()
-                trace.append(ChurnEvent(t, "replica_warm", {"replica": i}))
-                pool_peak[0] = max(
-                    pool_peak[0],
-                    sum(1 for s in repl if s.online and not s.retired),
-                )
-                signal_capacity(t)
-                retry_parked(t)
-                rebalance_to(i, t)
+            if not st.retired:
+                if staging_on:
+                    ready_at = t + get_replica_type(st.rtype).stage_s(
+                        spec.stage_data
+                    )
+                    trace.append(
+                        ChurnEvent(t, "stage_in", {
+                            "replica": i, "data": spec.stage_data,
+                            "ready_at": ready_at,
+                        })
+                    )
+                    push(ready_at, "stage_done", i)
+                else:
+                    go_online(i, t)
+        elif kind == "stage_done":
+            i = payload
+            if not repl[i].retired:  # a preempted spot never finishes staging
+                n_staged[0] += 1
+                go_online(i, t)
         elif kind == "spot_notice":
             # the cloud's heads-up: routing stops (the view reads
             # alive=False, like a scale_down drain) but the replica keeps
@@ -2124,6 +2390,7 @@ def run_fleet(
             st.retired = True
             st.online = False
             st.offline_t = min(st.offline_t, t)  # billing stops at the kill
+            evict_sessions(i)  # preemption wipes the caches: no stage_out
             n_preempted[0] += 1
             for rid in evicted:
                 cancel(rid, i, t)  # queued: zero progress discarded
@@ -2193,6 +2460,7 @@ def run_fleet(
                 finish_t=r.finish_t,
                 served_by=r.served_by,
                 dispatches=tuple(dispatches),
+                session_id=r.req.session_id,
             )
         )
     # replica-seconds: each replica is billed from its spawn decision
@@ -2237,6 +2505,11 @@ def run_fleet(
         cost=cost,
         cost_by_type=cost_by_type,
         n_preempted=n_preempted[0],
+        n_sessions=n_sessions,
+        n_cache_hits=n_cache_hits[0],
+        prefill_work=prefill_paid[0],
+        prefill_saved=prefill_saved[0],
+        n_staged=n_staged[0],
         n_events=n_events[0],
         sojourns_by_class=sojourns,
     )

@@ -240,6 +240,13 @@ class FleetLoop:
                 else 0.0
             )
             rt = self._rtype.get(i, "default")
+            # session residency is duck-typed like the rest of the replica
+            # surface: a replica that parks KV slots between turns exposes
+            # resident_sessions() and the affinity router keys on it; stubs
+            # without it simply advertise an empty set. In-process replicas
+            # are never mid-stage-in (add_replica warms synchronously), so
+            # staging is always False on the hardware path.
+            resident = getattr(rep, "resident_sessions", None)
             out.append(
                 ReplicaView(
                     replica_id=i,
@@ -253,6 +260,10 @@ class FleetLoop:
                     alive=i not in self._draining,
                     rtype=rt,
                     price=get_replica_type(rt).price,
+                    resident_sessions=(
+                        frozenset(resident()) if resident is not None else frozenset()
+                    ),
+                    staging=False,
                 )
             )
         return out
@@ -718,6 +729,11 @@ class FleetLoop:
             "hedged": n_hedged,
             "hedge_wins": n_hedge_wins,
             "duplicate_tokens": duplicate_tokens,
+            # fleet-wide re-prefills skipped via parked session slots
+            # (replicas without session residency report nothing)
+            "prefill_skipped": sum(
+                s.get("prefill_skipped", 0) for s in per_replica
+            ),
             "routed_per_replica": [
                 routed_of.get(i, 0) for i in range(len(self.replicas))
             ],

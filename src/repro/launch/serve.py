@@ -92,6 +92,12 @@ class Request:
     slo_class: int = 0
     deadline_s: float = math.inf
     rejected: bool = False
+    # multi-turn session identity (PR 10): turns of one conversation share a
+    # session_id; the arena parks the session's KV slot between turns so a
+    # follow-up admitted here skips re-prefill. session_end marks the last
+    # turn — its completion frees the slot instead of parking it.
+    session_id: int = -1
+    session_end: bool = False
 
     @property
     def queue_wait(self) -> float:
@@ -114,6 +120,8 @@ class Request:
             arrived=self.arrived,
             slo_class=self.slo_class,
             deadline_s=self.deadline_s,
+            session_id=self.session_id,
+            session_end=self.session_end,
         )
 
 
@@ -295,6 +303,14 @@ class ServeLoop:
         self._slot_last = np.zeros(self.batch, np.int64)
         self._free_slots = list(range(self.batch))
         self._arena = None
+        # session residency (PR 10): a finished turn whose session is still
+        # live *parks* its slot (cache bytes stay) instead of freeing it —
+        # session_id → slot, insertion-ordered so the first entry is the
+        # least-recently-parked and is the LRU eviction victim under slot
+        # pressure. Parked slots are in neither _free_slots nor _slot_rid.
+        self._session_slot: dict[int, int] = {}
+        self._prefill_skipped = 0
+        self._sessions_evicted = 0
         self._occ_sum = 0  # Σ active slots over decode calls
         self._done_hist: dict[int, list[float]] = {}  # sojourns per class
         self._decode_tokens = 0
@@ -327,8 +343,15 @@ class ServeLoop:
 
     def _active_count(self) -> int:
         if self.mode == "arena":
-            return self.batch - len(self._free_slots)
+            # parked session slots hold cache bytes but decode nothing:
+            # they are not active (and not free — they're evictable)
+            return sum(1 for rid in self._slot_rid if rid is not None)
         return sum(len(g.rids) for g in self._groups)
+
+    def resident_sessions(self) -> frozenset:
+        """Sessions whose KV cache is parked in this replica's arena — the
+        residency set the fleet's ``affinity`` router keys on."""
+        return frozenset(self._session_slot)
 
     def _decoding_rids(self) -> list[int]:
         """Rids currently holding a decode slot, slot/decode order."""
@@ -409,6 +432,17 @@ class ServeLoop:
                     found = True
                     break
         if found:
+            req = self._by_id.get(rid)
+            # bugfix (PR 10): a cancelled request leaves this replica for
+            # good (hedge loser / re-dispatch) — but its *session's* parked
+            # slot from a previous turn would otherwise linger in the
+            # allocator map forever, pinning a slot for a conversation that
+            # now lives on another replica. Evict the residency too.
+            sid = getattr(req, "session_id", -1) if req is not None else -1
+            if sid is not None and sid >= 0:
+                parked = self._session_slot.pop(sid, None)
+                if parked is not None:
+                    self._release_slot(parked)
             self._requests = [x for x in self._requests if x.rid != rid]
             self._by_id.pop(rid, None)
             self._cancelled += 1
@@ -443,6 +477,7 @@ class ServeLoop:
             total_work=float(r.max_new),
             slo_class=r.slo_class,
             deadline_s=r.deadline_s,
+            session_id=r.session_id,
         )
 
     def _resolve(self, r: Request, decision: str) -> None:
@@ -491,6 +526,16 @@ class ServeLoop:
 
     def _admit(self, r: Request) -> None:
         r.submitted = self.now()
+        if self.mode == "arena" and r.session_id >= 0 and r.session_id in self._session_slot:
+            # cache hit: the session's slot is parked here from its previous
+            # turn — reclaim it and keep decoding from the resident cache,
+            # skipping the whole re-prefill dispatch. The slot's last token
+            # is still in _slot_last, so the decode step continues exactly
+            # where the prior turn left off.
+            s = self._session_slot.pop(r.session_id)
+            self._slot_rid[s] = r.rid
+            self._prefill_skipped += 1
+            return
         logits, cache = self.prefill(self.params, jnp.asarray(r.prompt[None]))
         tok = int(jnp.argmax(logits[0, -1]))
         r.tokens.append(tok)
@@ -500,6 +545,12 @@ class ServeLoop:
             # write the prefilled cache in — no regroup, no recompile
             if self._arena is None:
                 self._arena = M.init_cache(self.cfg, self.batch, self.max_len)
+            if not self._free_slots and self._session_slot:
+                # slot pressure: evict the least-recently-parked session —
+                # a live decode always outranks a speculative future turn
+                old_sid = next(iter(self._session_slot))
+                self._release_slot(self._session_slot.pop(old_sid))
+                self._sessions_evicted += 1
             s = heapq.heappop(self._free_slots)
             self._slot_rid[s] = r.rid
             self._slot_last[s] = tok
@@ -552,12 +603,27 @@ class ServeLoop:
             r = self._by_id[rid]
             tok = int(new[s])
             r.tokens.append(tok)
+            if r.first_token < 0:
+                # cache-hit admits skip prefill, so their first token is the
+                # first decode append, not a prefill argmax
+                r.first_token = t_step
             self._slot_last[s] = tok
             self._decode_tokens += 1
             if len(r.tokens) >= r.max_new:
                 r.finished = t_step
                 self._on_done(r)
-                self._release_slot(s)
+                if r.session_id >= 0 and not r.session_end:
+                    # park: the session has more turns coming — keep the
+                    # cache resident so the follow-up can skip re-prefill
+                    self._slot_rid[s] = None
+                    old = self._session_slot.pop(r.session_id, None)
+                    if old is not None and old != s:
+                        self._release_slot(old)
+                    self._session_slot[r.session_id] = s
+                else:
+                    if r.session_id >= 0:
+                        self._session_slot.pop(r.session_id, None)
+                    self._release_slot(s)
 
     def _step_groups(self) -> None:
         if self.mode == "cohort" and len(self._groups) > 1:
@@ -663,6 +729,10 @@ class ServeLoop:
                 else 0.0
             ),
             "cancelled": self._cancelled,
+            # session residency (PR 10): prefills skipped via a parked slot
+            # and parked sessions LRU-evicted under slot pressure
+            "prefill_skipped": self._prefill_skipped,
+            "sessions_evicted": self._sessions_evicted,
             "tokens_per_s": sum(len(r.tokens) for r in done) / wall if wall else 0.0,
             "mean_ttft_s": float(np.mean([r.first_token - r.arrived for r in done])) if done else -1,
             "mean_latency_s": float(np.mean([r.finished - r.arrived for r in done])) if done else -1,

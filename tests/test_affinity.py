@@ -1,0 +1,302 @@
+"""Data-gravity affinity + provisioning lifecycle (PR 10): AffinityRouter
+policy units (holder hit, liveness/staging/backlog fallbacks, sessionless
+passthrough), the stage_in re-dispatch veto regression, staged-spawn
+lifecycle engine invariants (not routable before stage_done, stage_out on
+retire), the hypothesis exactly-once-per-turn conservation property across
+affinity hits, spot preemption, straggler re-dispatch and hedging, the
+ServeLoop session-slot cancel-eviction bugfix, and the FleetLoop stub pin
+that the hardware path routes by ``resident_sessions``. Companion to
+benchmarks/bench_affinity.py (claim 16).
+"""
+
+import time
+from collections import Counter
+from dataclasses import replace
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admission import JobRequest
+from repro.core.router import (
+    AffinityRouter,
+    InflightView,
+    ReplicaView,
+    get_router,
+    plan_redispatch,
+)
+from repro.core.workload import FLEET_PRESETS, run_fleet
+
+from test_router import _StubReplica  # noqa: E402  (fast-tier stub)
+
+
+def _view(rid=0, cap=1.0, nameplate=None, backlog=0.0, depth=0, age=0.0,
+          alive=True, resident=(), staging=False):
+    return ReplicaView(
+        replica_id=rid, capacity=cap,
+        nameplate=cap if nameplate is None else nameplate,
+        backlog_work=backlog, queue_depth=depth, oldest_age_s=age,
+        alive=alive, resident_sessions=frozenset(resident), staging=staging,
+    )
+
+
+def _req(rid=0, work=10.0, session_id=-1):
+    return JobRequest(job_id=rid, arrive_t=0.0, n_tasks=1, total_work=work,
+                      session_id=session_id)
+
+
+# --------------------------------------------------- affinity policy units
+
+
+def test_affinity_routes_followup_to_holder():
+    """The holder wins even when another replica has more capacity and
+    less backlog — data gravity beats load balance for a warm session."""
+    r = get_router("affinity")
+    views = [_view(0, cap=4.0), _view(1, cap=1.0, backlog=3.0,
+                                      resident={7})]
+    assert r.pick(_req(session_id=7), views) == 1
+    # and repeatedly: affinity is stateless about its own picks
+    assert r.pick(_req(rid=1, session_id=7), views) == 1
+
+
+def test_affinity_sessionless_matches_capacity_weighted():
+    """Requests without a session (session_id < 0) must route exactly as
+    capacity_weighted would — the fallback IS the baseline policy."""
+    a, c = get_router("affinity"), get_router("capacity_weighted")
+    views = [_view(0, cap=3.0), _view(1, cap=1.0)]
+    picks_a = [a.pick(_req(rid=i), views) for i in range(8)]
+    picks_c = [c.pick(_req(rid=i), views) for i in range(8)]
+    assert picks_a == picks_c
+
+
+def test_affinity_falls_back_when_holder_unroutable():
+    """A drained, staging, or backlog-saturated holder is skipped: the
+    lost/unreachable cache degrades to a cold capacity-weighted route —
+    never a stall waiting on the holder."""
+    r = get_router("affinity")
+    # holder draining (alive=False)
+    views = [_view(0, cap=2.0), _view(1, cap=1.0, alive=False, resident={7})]
+    assert r.pick(_req(session_id=7), views) == 0
+    # holder still staging its data in
+    r.reset()
+    views = [_view(0, cap=2.0), _view(1, cap=1.0, resident={7}, staging=True)]
+    assert r.pick(_req(session_id=7), views) == 0
+    # holder over the backlog ceiling: chasing the cache would queue-collapse
+    r = AffinityRouter(backlog_ceiling_s=10.0)
+    views = [_view(0, cap=2.0), _view(1, cap=1.0, backlog=200.0, depth=9,
+                                      resident={7})]
+    assert r.pick(_req(session_id=7), views) == 0
+    # under the ceiling the holder is taken again
+    views = [_view(0, cap=2.0), _view(1, cap=1.0, backlog=5.0, resident={7})]
+    assert r.pick(_req(rid=1, session_id=7), views) == 1
+
+
+def test_affinity_holder_vanished_routes_cold():
+    """A session whose holder left the view set entirely (retired,
+    pronounced dead) routes cold without error."""
+    r = get_router("affinity")
+    views = [_view(0, cap=2.0), _view(1, cap=1.0)]
+    assert r.pick(_req(session_id=7), views) in (0, 1)
+
+
+# ------------------------------------------- stage_in re-dispatch veto
+
+
+def test_plan_redispatch_vetoes_staging_target():
+    """A replica still in stage_in is idle, alive, and (having no
+    measurements) never looks degraded — but it is not routable yet: the
+    rescue must be vetoed exactly like the cold-spawn warmup gate, or a
+    stuck request is re-dispatched onto a replica that cannot serve it."""
+    stuck = [InflightView(request_id=7, replica_id=0, age_s=100.0,
+                          est_s=10.0, remaining_work=8.0)]
+    src = _view(0, cap=0.1, nameplate=1.0, backlog=8.0, depth=1, age=100.0)
+    staging = _view(1, cap=0.8, staging=True)
+    assert plan_redispatch(stuck, [src, staging]) == []
+    ready = _view(1, cap=0.8)
+    assert plan_redispatch(stuck, [src, ready]) == [(7, 0, 1)]
+
+
+# --------------------------------------------- lifecycle engine invariants
+
+
+def test_staged_spawn_not_routable_until_stage_done():
+    """With stage_data on, an elastic spawn emits stage_in at boot and
+    becomes routable (replica_warm) only when staging completes: no
+    dispatch may land on it before its stage_in's ready_at."""
+    res = run_fleet("fleet_spot_staged", seed=0, autoscale="cost_aware")
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    stage_in = {e.detail["replica"]: e for e in res.trace
+                if e.kind == "stage_in"}
+    warm = {e.detail["replica"]: e.time for e in res.trace
+            if e.kind == "replica_warm"}
+    assert stage_in, "cost_aware never spawned: the regime lost its churn"
+    for i, ev in stage_in.items():
+        assert ev.detail["ready_at"] >= ev.time
+        if i in warm:  # preempted-mid-stage spawns never warm
+            assert abs(warm[i] - ev.detail["ready_at"]) < 1e-9
+    for r in res.requests:
+        for d in r.dispatches:
+            if d.replica in stage_in:
+                assert d.t >= warm[d.replica] - 1e-9, (
+                    f"request {r.rid} dispatched to replica {d.replica} "
+                    "before its stage_in completed"
+                )
+    # retiring a staged replica pays the pipe on the way out too
+    for e in res.trace:
+        if e.kind == "stage_out":
+            assert e.detail["done_at"] >= e.time
+
+
+def test_staged_preset_without_spawns_stays_unstaged():
+    """Base replicas are pre-staged: a run with no autoscaler stages no
+    data *in* (stage_in bills elastic spawns only) — though a gracefully
+    retiring base replica still pays the egress pipe (stage_out)."""
+    res = run_fleet("fleet_spot_staged", seed=0)
+    kinds = {e.kind for e in res.trace}
+    assert "stage_in" not in kinds
+    assert res.n_staged == 0
+
+
+# -------------------------------------- exactly-once-per-turn conservation
+
+# fleet_sessions with every cache-loss path armed: a preemptible replica,
+# a mid-run straggler on the fastest one (LATE re-dispatch fires), and —
+# per example — optional hedging and an elastic pool. The scaler's
+# min_replicas=3 floor keeps drains from conspiring with the spot death
+# to kill the whole pool (a dead pool strands parked arrivals by design —
+# that is the `stranded` counter's regime, not this property's).
+_CHURN = replace(
+    FLEET_PRESETS["fleet_sessions"],
+    replica_types=("default", "default", "default", "spot"),
+    spot_mean_life_s=150.0, spot_notice_s=5.0,
+    straggler=(0, 40.0, 0.1, 200.0),
+    slo_mix=((1.0, 0, 90.0),),
+)
+
+
+def _churn_scaler():
+    from repro.core.autoscale import BacklogThresholdScaler
+
+    return BacklogThresholdScaler(min_replicas=3, max_replicas=6)
+
+
+@given(st.integers(0, 10_000), st.booleans(), st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_every_turn_exactly_once_under_churn(seed, hedge, elastic):
+    """Every turn of every session completes exactly once across affinity
+    hits, holder preemption (spot kills), straggler re-dispatch, hedging,
+    and drain — a lost cache degrades to a cold route, never a stranded
+    or duplicated turn."""
+    res = run_fleet(_CHURN, seed=seed, router="affinity", redispatch=True,
+                    hedge=hedge,
+                    autoscale=_churn_scaler() if elastic else None)
+    assert res.completed == len(res.requests)
+    assert res.stranded == 0
+    turns = Counter(r.session_id for r in res.requests)
+    assert set(turns) == set(range(res.n_sessions))
+    assert set(turns.values()) == {_CHURN.session_turns}
+    for r in res.requests:
+        assert r.session_id >= 0
+        assert sum(1 for d in r.dispatches if d.outcome == "done") == 1
+    # every dispatch attempt (primary, hedge, rescue) either paid the
+    # re-prefill or saved it via a resident cache — nothing leaks
+    n_attempts = sum(len(r.dispatches) for r in res.requests)
+    assert abs(res.prefill_saved + res.prefill_work
+               - _CHURN.session_prefill * n_attempts) < 1e-6
+
+
+def test_affinity_saves_prefill_on_the_bench_preset():
+    """The claim-16 mechanism at one seed: affinity hits every follow-up
+    on the quiet preset; capacity_weighted pays the re-prefill tax."""
+    aff = run_fleet("fleet_sessions", seed=0, router="affinity",
+                    check_views=True)
+    cw = run_fleet("fleet_sessions", seed=0, router="capacity_weighted")
+    followups = aff.n_sessions * (
+        FLEET_PRESETS["fleet_sessions"].session_turns - 1
+    )
+    assert aff.n_cache_hits == followups
+    assert aff.prefill_saved > cw.prefill_saved
+    assert aff.latency_quantile(0.5) < cw.latency_quantile(0.5)
+
+
+# ------------------------------- ServeLoop / FleetLoop session residency
+
+
+def test_serveloop_cancel_evicts_parked_session():
+    """The satellite bugfix: cancelling a request (hedge loser, LATE
+    re-dispatch) must also evict its *session's* parked slot — otherwise
+    the allocator map pins a slot for a conversation that now lives on
+    another replica. No JAX dispatch runs: cancel acts on a ready-queue
+    request and the parked entry only."""
+    import heapq
+
+    import numpy as np
+
+    from repro.launch.serve import Request, ServeLoop
+
+    loop = ServeLoop(None, None, None, batch=2, max_len=8,
+                     admission=None, warmup=False)
+    loop.start([])
+    # park session 42's slot, exactly as its completed previous turn would
+    s = heapq.heappop(loop._free_slots)
+    loop._session_slot[42] = s
+    assert loop.resident_sessions() == frozenset({42})
+    follow = Request(1, np.zeros(4, np.int32), 4, session_id=42)
+    loop.enqueue(follow)
+    assert loop.cancel(1)
+    assert loop.resident_sessions() == frozenset()
+    assert sorted(loop._free_slots) == [0, 1]  # the parked slot is free again
+    # cancel of a sessionless request leaves other residency untouched
+    loop._session_slot[43] = heapq.heappop(loop._free_slots)
+    loop.enqueue(Request(2, np.zeros(4, np.int32), 4))
+    assert loop.cancel(2)
+    assert loop.resident_sessions() == frozenset({43})
+
+
+class _HolderStub(_StubReplica):
+    """Pre-measured stub advertising session residency — the duck-typed
+    surface FleetLoop._views reads for the affinity router."""
+
+    def __init__(self, speed, resident=()):
+        super().__init__(speed)
+        self._resident = set(resident)
+
+    def start(self, requests, prompt_len=None, t0=None):
+        super().start(requests, prompt_len, t0)
+        self.tok_rate = float(self.speed)
+        self.peak_rate = float(self.speed)
+
+    def resident_sessions(self):
+        return frozenset(self._resident)
+
+
+def test_fleetloop_routes_by_stub_resident_sessions():
+    """The hardware-path mirror of the holder-wins unit: FleetLoop views
+    expose each replica's resident_sessions and the shared-registry
+    affinity router sends the follow-up to the (slower) holder."""
+    import numpy as np
+
+    from repro.launch.fleet import FleetLoop
+    from repro.launch.serve import Request
+
+    fleet = FleetLoop([_HolderStub(8), _HolderStub(2, resident={5})],
+                      router="affinity", redispatch=False)
+    reqs = [Request(0, np.zeros(4, np.int32), 8, session_id=5),
+            Request(1, np.zeros(4, np.int32), 8)]
+    stats = fleet.run_requests(reqs)
+    assert stats["completed"] == 2
+    # the follow-up landed on the slow holder; the sessionless request
+    # went capacity-weighted to the fast replica
+    assert stats["routed_per_replica"] == [1, 1]
+
+
+# ----------------------------------------------------- fast-tier budget
+
+
+def test_fast_tier_budget_for_session_presets():
+    """The new presets must stay inside the 1-CPU fast-tier budget: one
+    checked affinity replay plus one staged elastic replay in seconds,
+    not minutes."""
+    t0 = time.perf_counter()
+    run_fleet("fleet_sessions", seed=1, router="affinity", check_views=True)
+    run_fleet("fleet_spot_staged", seed=1, autoscale="cost_aware")
+    assert time.perf_counter() - t0 < 30.0

@@ -28,6 +28,7 @@ ALL_ROUTERS = (
     "capacity_weighted",
     "shortest_backlog",
     "class_reserved",
+    "affinity",
 )
 
 

@@ -175,6 +175,28 @@ FLEET_CASES: dict[str, tuple[str, dict]] = {
         "fleet_spot",
         dict(router="capacity_weighted", autoscale="cost_aware", seed=2),
     ),
+    # PR 10 session-replay tier: the multi-turn preset under both routers
+    # (the claim-16 pair), with hedging over affinity, and the staged
+    # provisioning lifecycle driven through an elastic spot pool so
+    # stage_in/stage_out events and the stage_done warm gate are pinned
+    "sessions/affinity": ("fleet_sessions", dict(router="affinity")),
+    "sessions/cw": ("fleet_sessions", dict(router="capacity_weighted")),
+    "sessions/affinity+hedge": (
+        "fleet_sessions",
+        dict(router="affinity", hedge=True),
+    ),
+    "sessions/affinity/seed1": (
+        "fleet_sessions",
+        dict(router="affinity", seed=1),
+    ),
+    "spot_staged/cw+cost_aware": (
+        "fleet_spot_staged",
+        dict(router="capacity_weighted", autoscale="cost_aware"),
+    ),
+    "spot_staged/affinity+cost_aware/seed2": (
+        "fleet_spot_staged",
+        dict(router="affinity", autoscale="cost_aware", seed=2),
+    ),
 }
 
 WORKLOAD_CASES: dict[str, tuple[str, dict]] = {
@@ -252,6 +274,17 @@ FLEET_GOLDEN: dict[str, str] = {
         "dce9a3d456b6e2b5f0cc1b05dabdcca06add71f56d6ca20b6f8021e64b31b966",
     "hetero/sb":
         "daec49a55fe69c0ebc474a7186839e78050107e2d4c8d27e4db9392f6da80f57",
+    # the PR-10 session-replay tier: captured at its own introduction,
+    # pinning the multi-turn stream, the affinity hit/transfer residency
+    # bookkeeping, and the per-attempt re-prefill billing bit-for-bit
+    "sessions/affinity":
+        "ba145338975e0a4026117df4786a14bdc8fdb972c0db290194391bed30ccb4fc",
+    "sessions/affinity+hedge":
+        "bce85c97a8de844afff99456bb632bfffe16447aedf276f8d806cedea3f76af3",
+    "sessions/affinity/seed1":
+        "a1ef16727c43e7f4b8b475da8e43ce07cc36193b34b73451596e389709077978",
+    "sessions/cw":
+        "65b5dc95b9ef3868399c5a81aa8bb35aaf35fedc3ed231530469cd9fcbfe9dc6",
     # fleet_spot post-dates the PR-7 capture (PR 9): captured at its own
     # introduction, pinning the preemption event stream bit-for-bit
     "spot/cw+cost_aware/seed2":
@@ -260,6 +293,12 @@ FLEET_GOLDEN: dict[str, str] = {
         "96d52d84edfc714f1e056284d67e19c3f9211443a3831ffc17e20e494e862c5f",
     "spot/reserved+hedge":
         "fb5b143cc60d6c590bf064d5c63a328d01d7f0a661d7818a2b84e0a127f00ec8",
+    # PR-10 staged lifecycle over the elastic spot pool: stage_in/stage_out
+    # events and the stage_done-gated replica_warm are part of the hash
+    "spot_staged/affinity+cost_aware/seed2":
+        "fbefad5466177b58c5c49c0a8c28977fd3834988f448322a7cdac500cc2da797",
+    "spot_staged/cw+cost_aware":
+        "b5a118edce56113ec56c55c3a19798f92c546e6405f61e190f14213f08f2f40b",
     "straggler/cw+rd":
         "85154c9f4e93a1bdd3d965beeba651c837b7a9ec6a4366d894d0489392ba919f",
     "straggler/cw+rd/seed1":
